@@ -1,0 +1,51 @@
+"""Fig. 7: ablation analysis — disable each Navigator feature and measure
+the degradation at low and high request rates."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.common import mean_over_seeds, run_sim, save_json
+from repro.core import NavigatorConfig
+
+VARIANTS = {
+    "full": dict(),
+    "no_dynamic_adjustment": dict(
+        navigator_config=NavigatorConfig(use_dynamic_adjustment=False)
+    ),
+    "no_model_locality": dict(
+        navigator_config=NavigatorConfig(use_model_locality=False)
+    ),
+    "fifo_eviction": dict(eviction_policy="fifo"),
+}
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    out = {}
+    for rate in [0.5, 2.0]:
+        out[rate] = {}
+        for name, kw in VARIANTS.items():
+            agg = mean_over_seeds(
+                lambda s: _metrics(rate, s, kw)
+            )
+            out[rate][name] = agg
+            rows.append((f"ablation/{name}/rate{rate}_slowdown", 0.0,
+                         agg["slow"]))
+            rows.append((f"ablation/{name}/rate{rate}_hit", 0.0, agg["hit"]))
+    save_json("ablation", out)
+    return rows
+
+
+def _metrics(rate, seed, kw):
+    res = run_sim("navigator", rate=rate, seed=seed, duration=250.0, **kw)
+    return {
+        "slow": res.mean_slowdown,
+        "hit": res.cache_hit_rate,
+        "evictions": float(res.cache_evictions),
+    }
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks: pure-jnp reference paths under jit on the host
+backend (the Pallas kernels target TPU; interpret mode is a correctness
+tool, not a perf path).  ``derived`` = achieved GFLOP/s of the ref path.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_json
+from repro.kernels import ref
+
+
+def _time(fn, *args, repeat=5) -> float:
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    out = {}
+    key = jax.random.key(0)
+
+    # flash attention ref
+    b, s, h, kh, d = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(key, (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(key, (b, s, kh, d), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    t = _time(fn, q, k, v)
+    flops = 4 * b * h * s * s * d / 2  # causal
+    rows.append(("kernel/attention_ref_1k", t * 1e6, flops / t / 1e9))
+
+    # decode attention ref
+    t_cache = 4096
+    qd = jax.random.normal(key, (8, h, d), jnp.float32)
+    kc = jax.random.normal(key, (8, t_cache, kh, d), jnp.float32)
+    lens = jnp.full((8,), t_cache, jnp.int32)
+    fnd = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(q, k, v, l))
+    t = _time(fnd, qd, kc, kc, lens)
+    flops = 4 * 8 * h * t_cache * d
+    rows.append(("kernel/decode_ref_4k", t * 1e6, flops / t / 1e9))
+
+    # SSD chunked ref
+    bt, tt, hh, p, n = 1, 2048, 4, 64, 64
+    x = jax.random.normal(key, (bt, tt, hh, p), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (bt, tt, hh)))
+    a = -jnp.exp(jax.random.normal(key, (hh,)) * 0.3)
+    bb = jax.random.normal(key, (bt, tt, hh, n), jnp.float32) * 0.3
+    fns = jax.jit(
+        lambda x, dt, b, c: ref.ssd_chunked_ref(x, dt, a, b, c, chunk=128)[0]
+    )
+    t = _time(fns, x, dt, bb, bb)
+    chunk = 128
+    flops = bt * hh * (tt // chunk) * (
+        2 * chunk * chunk * n + 2 * chunk * chunk * p + 2 * chunk * p * n * 2
+    )
+    rows.append(("kernel/ssd_chunked_2k", t * 1e6, flops / t / 1e9))
+
+    # grouped matmul ref
+    tk, din, dout, e = 4096, 512, 512, 16
+    xk = jax.random.normal(key, (tk, din), jnp.float32)
+    wk = jax.random.normal(key, (e, din, dout), jnp.float32)
+    gs = jnp.full((e,), tk // e, jnp.int32)
+    fng = jax.jit(lambda x, w, g: ref.moe_gmm_ref(x, w, g))
+    t = _time(fng, xk, wk, gs)
+    flops = 2 * tk * din * dout
+    rows.append(("kernel/moe_gmm_ref_4k", t * 1e6, flops / t / 1e9))
+
+    save_json("kernels", {n: {"us": u, "gflops": d} for n, u, d in rows})
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

@@ -1,0 +1,51 @@
+"""Fig. 10: large-scale simulation — 40 req/s Poisson over up to 250
+workers; Navigator should reach its lower-bound slowdown with roughly
+half the workers Hash needs, leaving the rest idle."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.common import save_json
+from repro.core import ClusterSpec, ProfileRepository
+from repro.sim import Simulation, poisson_workload
+from repro.workflows import MODELS, paper_dfgs
+
+WORKER_COUNTS = [25, 50, 75, 100, 150, 250]
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    out = {}
+    dfgs = paper_dfgs()
+    for n in WORKER_COUNTS:
+        cluster = ClusterSpec(n_workers=n)
+        out[n] = {}
+        for sched in ["navigator", "hash"]:
+            profiles = ProfileRepository(cluster, MODELS)
+            for d in dfgs:
+                profiles.register(d)
+            jobs = poisson_workload(dfgs, 40.0, 120.0, seed=5)
+            res = Simulation(
+                cluster, profiles, MODELS, scheduler=sched, seed=1
+            ).run(jobs)
+            out[n][sched] = {
+                "median_slowdown": res.median_slowdown,
+                "workers_used": len(res.workers_used),
+                "hit": res.cache_hit_rate,
+            }
+            rows.append(
+                (f"scale/{sched}/w{n}_median_slowdown", 0.0,
+                 res.median_slowdown)
+            )
+            rows.append(
+                (f"scale/{sched}/w{n}_workers_used", 0.0,
+                 float(len(res.workers_used)))
+            )
+    save_json("scalability", out)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

@@ -1,0 +1,101 @@
+"""Fig. 6 + Table 1: scheduler comparison under low/high load and a rate
+sweep, with GPU-side metrics.
+
+Emits CSV rows (name, us_per_call, derived):
+  us_per_call = scheduler decision time per job (wall, measured)
+  derived     = mean slowdown factor
+"""
+
+from __future__ import annotations
+
+import statistics as st
+import time
+from typing import List, Tuple
+
+from benchmarks.common import mean_over_seeds, run_sim, save_json
+from repro.core import ClusterSpec, NavigatorScheduler, ProfileRepository
+from repro.core.state import SharedStateTable
+from repro.core.types import Job
+from repro.workflows import MODELS, paper_dfgs
+
+SCHEDULERS = ["navigator", "jit", "heft", "hash"]
+
+
+def planning_time_us(scheduler: str) -> float:
+    """Wall time of one planning decision (the 'consult the scheduler'
+    overhead the decentralized design avoids centralizing)."""
+    cluster = ClusterSpec(n_workers=5)
+    profiles = ProfileRepository(cluster, MODELS)
+    dfgs = paper_dfgs()
+    for d in dfgs:
+        profiles.register(d)
+    from repro.core.scheduler import make_scheduler
+
+    sched = make_scheduler(scheduler, profiles)
+    sst = SharedStateTable(5)
+    for w in range(5):
+        sst.update_cache(w, 0, cluster.gpu_capacity_bytes)
+        sst.push(w, 0.0)
+    job = Job(0, dfgs[0], arrival_time=0.0)
+    n = 200
+    t0 = time.perf_counter()
+    for i in range(n):
+        if sched.plans_at_arrival:
+            sched.plan(job, 0.0, i % 5, sst.view(i % 5))
+        else:
+            sched.select_worker_at_ready(
+                job, "opt_ingest", 0.0, sst.view(0), {"": 0}, {"": 1e5}, 0
+            )
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    table1 = {}
+    for sched in SCHEDULERS:
+        lo = mean_over_seeds(
+            lambda s: {
+                "slow": run_sim(sched, rate=0.5, seed=s).mean_slowdown
+            }
+        )["slow"]
+        agg = mean_over_seeds(
+            lambda s: _high_load_metrics(sched, s)
+        )
+        us = planning_time_us(sched)
+        table1[sched] = dict(agg, slow_low=lo, plan_us=us)
+        rows.append((f"sched/{sched}/low_load_slowdown", us, lo))
+        rows.append((f"sched/{sched}/high_load_slowdown", us, agg["slow"]))
+        rows.append((f"sched/{sched}/latency_s", us, agg["lat"]))
+        rows.append((f"sched/{sched}/cache_hit", us, agg["hit"]))
+
+    # Fig. 6c: rate sweep
+    sweep = {}
+    for rate in [0.5, 1.0, 1.5, 2.0, 2.5]:
+        sweep[rate] = {
+            s: mean_over_seeds(
+                lambda sd: {"slow": run_sim(s, rate=rate, seed=sd,
+                                            duration=200.0).mean_slowdown}
+            )["slow"]
+            for s in SCHEDULERS
+        }
+        for s in SCHEDULERS:
+            rows.append((f"sched/{s}/sweep_rate_{rate}", 0.0, sweep[rate][s]))
+    save_json("schedulers", {"table1": table1, "rate_sweep": sweep})
+    return rows
+
+
+def _high_load_metrics(sched: str, seed: int):
+    cluster = ClusterSpec(n_workers=5)
+    res = run_sim(sched, rate=2.0, seed=seed)
+    return {
+        "slow": res.mean_slowdown,
+        "lat": res.mean_latency,
+        "hit": res.cache_hit_rate,
+        "util": res.gpu_utilization,
+        "energy_kj": res.energy_joules(cluster) / 1e3,
+    }
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

@@ -1,0 +1,35 @@
+"""Fig. 8: sensitivity to SST dissemination rate — load-info staleness ×
+cache-info staleness grid at high load."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.common import mean_over_seeds, run_sim, save_json
+
+LOAD_DELAYS = [0.1, 0.2, 0.5, 1.0]     # seconds between load pushes
+CACHE_DELAYS = [0.1, 0.5, 1.0, 2.0]    # seconds between cache pushes
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows = []
+    grid = {}
+    for ld in LOAD_DELAYS:
+        for cd in CACHE_DELAYS:
+            slow = mean_over_seeds(
+                lambda s: {
+                    "slow": run_sim(
+                        "navigator", rate=2.0, seed=s, duration=250.0,
+                        push_interval_s=ld, cache_push_interval_s=cd,
+                    ).mean_slowdown
+                }
+            )["slow"]
+            grid[f"{ld}x{cd}"] = slow
+            rows.append((f"staleness/load{ld}_cache{cd}", 0.0, slow))
+    save_json("staleness", grid)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

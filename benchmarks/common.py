@@ -1,0 +1,60 @@
+"""Shared helpers for the paper-experiment benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core import ClusterSpec, NavigatorConfig, ProfileRepository
+from repro.sim import SimResult, Simulation, poisson_workload
+from repro.workflows import MODELS, paper_dfgs
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def run_sim(
+    scheduler: str,
+    rate: float = 2.0,
+    duration: float = 300.0,
+    n_workers: int = 5,
+    seed: int = 7,
+    sim_seed: int = 1,
+    navigator_config: Optional[NavigatorConfig] = None,
+    **kw,
+) -> SimResult:
+    cluster = ClusterSpec(n_workers=n_workers)
+    dfgs = paper_dfgs()
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in dfgs:
+        profiles.register(d)
+    jobs = poisson_workload(dfgs, rate, duration, seed=seed)
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler=scheduler,
+        navigator_config=navigator_config, seed=sim_seed, **kw,
+    )
+    return sim.run(jobs)
+
+
+def mean_over_seeds(fn, seeds=(3, 7, 11)) -> Dict[str, float]:
+    """Average the dict-of-scalars returned by ``fn(seed)``."""
+    acc: Dict[str, float] = {}
+    for s in seeds:
+        out = fn(s)
+        for k, v in out.items():
+            acc[k] = acc.get(k, 0.0) + v / len(seeds)
+    return acc
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat

@@ -1,0 +1,38 @@
+"""Benchmark driver: one suite per paper table/figure plus kernel micro-
+benches and the roofline summary.  Prints ``name,us_per_call,derived``
+CSV; per-suite JSON artifacts land in results/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [suite ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+SUITES = [
+    "schedulers",    # Fig. 6 + Table 1
+    "ablation",      # Fig. 7
+    "staleness",     # Fig. 8
+    "trace",         # Fig. 9
+    "scalability",   # Fig. 10
+    "kernels",       # Pallas-kernel ref-path micro-benches
+]
+
+
+def main() -> None:
+    want = sys.argv[1:] or SUITES
+    print("name,us_per_call,derived")
+    for suite in want:
+        mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+        t0 = time.time()
+        rows = mod.run()
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.4f}", flush=True)
+        print(f"# suite {suite} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

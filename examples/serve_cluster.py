@@ -1,0 +1,100 @@
+"""End-to-end serving driver (deliverable b): batched pipeline requests
+through REAL JAX models placed by the Navigator scheduler.
+
+Three reduced-config zoo architectures (a dense GQA model, an MQA code
+model, and an attention-free Mamba2) are hosted on a 3-worker cluster and
+chained into a draft → verify → refine pipeline; a second
+perceive → describe pipeline shares the verify model (cross-pipeline
+model reuse, §3.3).  Requests execute real prefill+decode steps; the
+scheduler's placements and the model-cache hit rate are reported, and
+Navigator is compared with Hash placement on total virtual makespan.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs import ARCHS
+from repro.core import ClusterSpec, GB
+from repro.core.types import DFG, MB, TaskSpec
+from repro.models import init_params
+from repro.serving import HostedModel, ServingCluster
+
+DRAFT, VERIFY, REFINE = 0, 1, 2
+
+
+def build_pipelines():
+    speculative = DFG(
+        "speculative_serving",
+        tasks=[
+            TaskSpec("draft", 0.08, model_id=DRAFT, output_bytes=0.01 * MB,
+                     input_bytes=0.01 * MB),
+            TaskSpec("verify", 0.20, model_id=VERIFY, output_bytes=0.01 * MB),
+            TaskSpec("refine", 0.15, model_id=REFINE, output_bytes=0.01 * MB),
+        ],
+        edges=[("draft", "verify"), ("verify", "refine")],
+    )
+    summarize = DFG(
+        "describe",
+        tasks=[
+            TaskSpec("perceive", 0.1, model_id=REFINE, output_bytes=0.01 * MB,
+                     input_bytes=0.02 * MB),
+            TaskSpec("describe", 0.2, model_id=VERIFY, output_bytes=0.01 * MB),
+        ],
+        edges=[("perceive", "describe")],
+    )
+    return speculative, summarize
+
+
+def run(scheduler: str, requests, hosted_factory):
+    cluster = ClusterSpec(n_workers=3, gpu_capacity_bytes=1 * GB)
+    sc = ServingCluster(cluster, hosted_factory(), scheduler=scheduler,
+                        decode_tokens=6)
+    spec, summ = build_pipelines()
+    sc.register_pipeline(spec)
+    sc.register_pipeline(summ)
+    for i, (kind, prompt) in enumerate(requests):
+        dfg, entry = (spec, "draft") if kind == 0 else (summ, "perceive")
+        sc.submit(dfg, {entry: prompt}, origin=i % 3)
+    makespan = max(r.virtual_latency_s for r in sc.results)
+    total_virtual = sum(r.virtual_latency_s for r in sc.results)
+    return sc, total_virtual, makespan
+
+
+def main() -> None:
+    def hosted_factory():
+        out = []
+        for mid, arch in [
+            (DRAFT, "mamba2-780m"),
+            (VERIFY, "mistral-nemo-12b"),
+            (REFINE, "granite-20b"),
+        ]:
+            cfg = ARCHS[arch].reduced(dtype="float32")
+            out.append(HostedModel(mid, cfg, init_params(cfg, jax.random.key(mid))))
+        return out
+
+    rng = np.random.default_rng(0)
+    requests = [
+        (int(rng.integers(0, 2)),
+         rng.integers(1, 64, size=(2, 12)).astype(np.int32))
+        for _ in range(10)
+    ]
+
+    for sched in ["navigator", "hash"]:
+        sc, total, makespan = run(sched, requests, hosted_factory)
+        print(f"\n=== scheduler: {sched} ===")
+        for r in sc.results[:3]:
+            print(f"  {r.dfg_name:22s} virt={r.virtual_latency_s:6.3f}s "
+                  f"assign={r.assignment}")
+        print(f"  … {len(sc.results)} requests")
+        print(f"  total virtual latency : {total:7.3f}s")
+        print(f"  cache hit rate        : {sc.cache_hit_rate()*100:5.1f}%")
+        print(f"  workers used          : {sc.workers_used()}")
+
+    print("\nReal logits flowed through every pipeline stage; placement and")
+    print("cache behaviour are Navigator's (§3-§4).")
+
+
+if __name__ == "__main__":
+    main()

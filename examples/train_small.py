@@ -1,0 +1,88 @@
+"""Train a small dense LM for a few hundred steps on the synthetic
+pipeline (deliverable b) — demonstrates the full training substrate:
+data pipeline → sharded train_step (pjit) → AdamW → checkpointing.
+
+Default config is CPU-sized (~8M params, 200 steps in a couple of
+minutes); pass --steps/--d-model to scale.  Loss should drop well below
+ln(vocab) as the model learns the synthetic repetition structure.
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, make_pipeline
+from repro.launch.mesh import make_debug_mesh
+from repro.models import ModelConfig, init_params
+from repro.training import checkpoint, make_train_step, optimizer as opt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt/train_small")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="tiny-dense",
+        arch_type="dense",
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=args.d_model * 4,
+        vocab=args.vocab,
+        dtype="float32",
+    )
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    mesh = make_debug_mesh()
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+    params = init_params(cfg, jax.random.key(0))
+    state = opt.init(params)
+    _, jit_factory = make_train_step(cfg, mesh, ocfg, remat=False)
+    batch0 = {
+        "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)
+    }
+    step = jit_factory(params, state, batch0)
+
+    data = make_pipeline(
+        DataConfig(vocab=args.vocab, seq_len=args.seq, global_batch=args.batch)
+    )
+    t0 = time.time()
+    first = last = None
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(next(data)["tokens"])}
+        params, state, metrics = step(params, state, batch)
+        loss = float(metrics["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(
+                f"step {i:4d}  loss {loss:6.3f}  "
+                f"gnorm {float(metrics['grad_norm']):6.2f}  "
+                f"lr {float(metrics['lr']):.2e}  "
+                f"({(time.time()-t0)/(i+1):.2f}s/step)"
+            )
+    print(f"\nloss {first:.3f} → {last:.3f} (ln V = {np.log(args.vocab):.3f})")
+
+    checkpoint.save(args.ckpt, {"params": params, "opt": state._asdict()},
+                    metadata={"steps": args.steps, "loss": last})
+    restored, meta = checkpoint.restore(
+        args.ckpt, {"params": params, "opt": state._asdict()}
+    )
+    print(f"checkpoint round-trip OK (saved at step {meta['steps']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Navigator core: the paper's contribution.
+
+DFG/ADFG types, profile repository + upward ranking (Eq. 1), the Navigator
+two-phase scheduler (Alg. 1 planning, Alg. 2 dynamic adjustment, Eq. 2–4),
+the GPU memory manager (FIFO + queue-lookahead eviction), the decentralized
+shared state table, and the baseline schedulers (JIT / HEFT / Hash).
+"""
+
+from repro.core.memory import CacheStats, GpuMemoryManager
+from repro.core.netmodel import (
+    AcceleratorLink,
+    ClusterSpec,
+    NetworkModel,
+    TPU_V5E_CLUSTER,
+)
+from repro.core.profiles import ProfileRepository
+from repro.core.scheduler import (
+    HEFTScheduler,
+    HashScheduler,
+    JITScheduler,
+    NavigatorConfig,
+    NavigatorScheduler,
+    SCHEDULERS,
+    Scheduler,
+    make_scheduler,
+)
+from repro.core.state import SharedStateTable, SSTRow
+from repro.core.types import ADFG, DFG, GB, Job, MB, MLModel, TaskSpec
+
+__all__ = [
+    "ADFG",
+    "AcceleratorLink",
+    "CacheStats",
+    "ClusterSpec",
+    "DFG",
+    "GB",
+    "GpuMemoryManager",
+    "HEFTScheduler",
+    "HashScheduler",
+    "JITScheduler",
+    "Job",
+    "MB",
+    "MLModel",
+    "NavigatorConfig",
+    "NavigatorScheduler",
+    "NetworkModel",
+    "ProfileRepository",
+    "SCHEDULERS",
+    "SSTRow",
+    "Scheduler",
+    "SharedStateTable",
+    "TPU_V5E_CLUSTER",
+    "TaskSpec",
+    "make_scheduler",
+]

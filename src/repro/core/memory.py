@@ -1,0 +1,236 @@
+"""GPU Memory Manager (§3.3, §5.3).
+
+Manages the *Navigator cache*: ML model objects resident in GPU memory.
+Fetching a model costs ``TD_model(m, w) = |m|/PCIe_bw + delta_PCIe`` (§4.1).
+Two eviction policies are implemented exactly as described:
+
+* **FIFO** (§5.3.1): evict non-in-use models in insertion order until the
+  new model fits.
+* **Queue-lookahead** (§5.3.2): inspect a fixed number of upcoming tasks on
+  the worker's execution queue; models needed sooner get higher retention
+  priority; models not needed in the window are evicted first (FIFO order
+  among equals).
+
+Models pinned by currently-executing tasks are never evicted.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import bitmaps
+from repro.core.netmodel import AcceleratorLink
+from repro.core.types import MLModel
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_fetched: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 1.0
+
+
+class GpuMemoryManager:
+    """Per-worker model cache with scheduler-triggered management.
+
+    The worker makes local fetch/evict decisions based on its assigned
+    tasks (§3.3); the scheduler influences placement globally through the
+    published cache bitmap.
+    """
+
+    FIFO = "fifo"
+    LOOKAHEAD = "lookahead"
+
+    def __init__(
+        self,
+        capacity_bytes: float,
+        models: Mapping[int, MLModel],
+        link: AcceleratorLink,
+        policy: str = LOOKAHEAD,
+        lookahead_depth: int = 8,
+        compression_ratio: float = 0.6,
+    ) -> None:
+        if policy not in (self.FIFO, self.LOOKAHEAD):
+            raise ValueError(f"unknown eviction policy {policy!r}")
+        self.capacity_bytes = capacity_bytes
+        self.models = dict(models)
+        self.link = link
+        self.policy = policy
+        self.lookahead_depth = lookahead_depth
+        # The Navigator cache holds models in *compressed* form; execution
+        # memory holds a decompressed instance per currently-active task
+        # (§3.3).  ``compression_ratio`` is compressed/decompressed bytes.
+        self.compression_ratio = compression_ratio
+        # Insertion-ordered contents: model_id -> cached (compressed) size.
+        self._contents: "collections.OrderedDict[int, float]" = collections.OrderedDict()
+        self._pinned: Dict[int, int] = {}  # model_id -> pin count
+        # Decompressed execution-memory reservations: model_id -> count.
+        self._executing: Dict[int, int] = {}
+        self.stats = CacheStats()
+
+    def cached_size(self, model_id: int) -> float:
+        return self.models[model_id].size_bytes * self.compression_ratio
+
+    # -- inspection ----------------------------------------------------------
+    def has(self, model_id: int) -> bool:
+        return model_id in self._contents
+
+    @property
+    def used_bytes(self) -> float:
+        return sum(self._contents.values())
+
+    @property
+    def exec_reserved_bytes(self) -> float:
+        """Execution memory: one decompressed instance per active task."""
+        return sum(
+            self.models[m].size_bytes * n for m, n in self._executing.items()
+        )
+
+    @property
+    def free_bytes(self) -> float:
+        """AVC(w) (§4.1): capacity minus cache minus execution memory."""
+        return self.capacity_bytes - self.used_bytes - self.exec_reserved_bytes
+
+    @property
+    def bitmap(self) -> int:
+        return bitmaps.pack(self._contents.keys())
+
+    def resident_models(self) -> List[int]:
+        return list(self._contents.keys())
+
+    # -- pinning (models of running tasks are not evictable) -----------------
+    def pin(self, model_id: int) -> None:
+        self._pinned[model_id] = self._pinned.get(model_id, 0) + 1
+
+    def unpin(self, model_id: int) -> None:
+        n = self._pinned.get(model_id, 0) - 1
+        if n <= 0:
+            self._pinned.pop(model_id, None)
+        else:
+            self._pinned[model_id] = n
+
+    def _evictable(self) -> List[int]:
+        return [m for m in self._contents if m not in self._pinned]
+
+    # -- eviction ------------------------------------------------------------
+    def _eviction_order(self, upcoming_model_ids: Sequence[int]) -> List[int]:
+        """Victims, most-evictable first."""
+        candidates = self._evictable()
+        if self.policy == self.FIFO:
+            return candidates  # already insertion ordered
+        # Queue-lookahead: next-use position within the lookahead window;
+        # models not needed in the window sort first (use position = inf),
+        # then by *latest* next use; FIFO breaks ties.
+        window = list(upcoming_model_ids)[: self.lookahead_depth]
+        next_use: Dict[int, int] = {}
+        for pos, mid in enumerate(window):
+            if mid is not None and mid not in next_use:
+                next_use[mid] = pos
+        fifo_pos = {mid: i for i, mid in enumerate(self._contents)}
+        return sorted(
+            candidates,
+            key=lambda m: (-next_use.get(m, 10**9), fifo_pos[m]),
+        )
+
+    def would_evict(
+        self, model_id: int, upcoming_model_ids: Sequence[int] = ()
+    ) -> List[int]:
+        """Which models eviction for ``model_id`` would remove (no mutation)."""
+        size = self.cached_size(model_id)
+        if self.has(model_id) or size <= self.free_bytes:
+            return []
+        victims: List[int] = []
+        freed = self.free_bytes
+        for victim in self._eviction_order(upcoming_model_ids):
+            if freed >= size:
+                break
+            victims.append(victim)
+            freed += self._contents[victim]
+        if freed < size:
+            return []  # cannot free enough right now (pins)
+        return victims
+
+    # -- fetch ---------------------------------------------------------------
+    def fetch_seconds(self, model_id: int) -> float:
+        """TD_model(m, w) for a cache miss."""
+        return self.link.fetch_time(self.models[model_id].size_bytes)
+
+    def ensure(
+        self,
+        model_id: int,
+        upcoming_model_ids: Sequence[int] = (),
+    ) -> Optional[Tuple[float, List[int]]]:
+        """Make ``model_id`` resident.
+
+        Returns ``(fetch_seconds, evicted_ids)``; ``fetch_seconds == 0.0``
+        on a cache hit.  Returns ``None`` if the model cannot currently be
+        made resident (pinned working set too large) — the task dispatcher
+        then leaves the task on the queue and proceeds (§3.2).
+        """
+        if model_id not in self.models:
+            raise KeyError(f"unknown model id {model_id}")
+        if self.has(model_id):
+            self.stats.hits += 1
+            # refresh nothing: FIFO order is by insertion, not use (§5.3.1)
+            return 0.0, []
+        size = self.cached_size(model_id)
+        if size + self.models[model_id].size_bytes > self.capacity_bytes:
+            raise ValueError(
+                f"model {model_id} cached+decompressed footprint exceeds GPU capacity"
+            )
+        victims = self.would_evict(model_id, upcoming_model_ids)
+        if size > self.free_bytes and not victims:
+            return None
+        for v in victims:
+            del self._contents[v]
+            self.stats.evictions += 1
+        self._contents[model_id] = size
+        self.stats.misses += 1
+        self.stats.bytes_fetched += size
+        return self.fetch_seconds(model_id), victims
+
+    # -- execution memory (§3.3) ----------------------------------------------
+    def begin_execution(
+        self, model_id: int, upcoming_model_ids: Sequence[int] = ()
+    ) -> None:
+        """Reserve execution memory for a decompressed instance of
+        ``model_id``; evicts cached models (per policy) to make headroom.
+        Pinned models are never evicted — if the pinned working set forces
+        an overcommit we allow it (the real system stalls/uses host paging;
+        this is rare and self-corrects when tasks finish)."""
+        self._executing[model_id] = self._executing.get(model_id, 0) + 1
+        self.pin(model_id)
+        if self.free_bytes >= 0:
+            return
+        for victim in self._eviction_order(upcoming_model_ids):
+            if self.free_bytes >= 0:
+                break
+            del self._contents[victim]
+            self.stats.evictions += 1
+
+    def end_execution(self, model_id: int) -> None:
+        n = self._executing.get(model_id, 0) - 1
+        if n <= 0:
+            self._executing.pop(model_id, None)
+        else:
+            self._executing[model_id] = n
+        self.unpin(model_id)
+
+    def drop(self, model_id: int) -> None:
+        self._contents.pop(model_id, None)
+
+    def preload(self, model_ids: Iterable[int]) -> None:
+        """Warm the cache without counting stats (test/benchmark setup)."""
+        for mid in model_ids:
+            size = self.cached_size(mid)
+            if size > self.free_bytes:
+                raise ValueError("preload exceeds capacity")
+            self._contents[mid] = size

@@ -1,0 +1,105 @@
+"""Repository of Workflow Profiles (§3.1) and vertex ranking (§4.2.1).
+
+Holds static DFG metadata: expected runtimes R(t), input/output object
+sizes, model sizes — plus the statically computed upward ranks (Eq. 1):
+
+    rank(t) = R(t) + max_{t ≺ t'} (TD_output(t) + rank(t'))
+
+Ranks depend only on the DFG and the cluster's network model, so Navigator
+computes them once when the DFG is loaded and caches them here (§4.2.1);
+dynamic inputs merely update, not recompute, the static values.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from repro.core.netmodel import ClusterSpec
+from repro.core.types import DFG, MLModel, TaskSpec
+
+
+class ProfileRepository:
+    def __init__(self, cluster: ClusterSpec, models: Mapping[int, MLModel]) -> None:
+        self.cluster = cluster
+        self.models: Dict[int, MLModel] = dict(models)
+        self._dfgs: Dict[str, DFG] = {}
+        self._ranks: Dict[str, Dict[str, float]] = {}
+
+    # -- registration ---------------------------------------------------------
+    def register(self, dfg: DFG) -> None:
+        for t in dfg.tasks.values():
+            if t.model_id is not None and t.model_id not in self.models:
+                raise KeyError(
+                    f"DFG {dfg.name!r} task {t.task_id!r} references "
+                    f"unknown model {t.model_id}"
+                )
+        self._dfgs[dfg.name] = dfg
+        self._ranks[dfg.name] = self._compute_ranks(dfg)
+
+    def dfg(self, name: str) -> DFG:
+        return self._dfgs[name]
+
+    def dfgs(self) -> List[DFG]:
+        return list(self._dfgs.values())
+
+    # -- parameters (§4.1) -----------------------------------------------------
+    def runtime(self, task: TaskSpec, worker: int) -> float:
+        """R(t, w)."""
+        return self.cluster.runtime_on(task.runtime_s, worker)
+
+    def mean_runtime(self, task: TaskSpec) -> float:
+        """R(t): average of R(t, w) over the worker set (§4.2.1)."""
+        speeds = [self.cluster.speed(w) for w in self.cluster.workers()]
+        return task.runtime_s * sum(1.0 / s for s in speeds) / len(speeds)
+
+    def td_output(self, task: TaskSpec) -> float:
+        """TD_output(t): time to move the task's output between workers."""
+        return self.cluster.network.transfer_time(task.output_bytes)
+
+    def td_input(self, task: TaskSpec) -> float:
+        """TD_input(t): time to move the task's (external) input."""
+        return self.cluster.network.transfer_time(task.input_bytes)
+
+    def td_model(self, model_id: Optional[int]) -> float:
+        """TD_model(m, w) for a cache miss (uniform link assumed unless the
+        cluster defines per-worker links)."""
+        if model_id is None:
+            return 0.0
+        return self.cluster.link.fetch_time(self.models[model_id].size_bytes)
+
+    def model_size(self, model_id: Optional[int]) -> float:
+        if model_id is None:
+            return 0.0
+        return self.models[model_id].size_bytes
+
+    def cached_model_size(self, model_id: Optional[int]) -> float:
+        """Compressed in-cache footprint (§3.3)."""
+        if model_id is None:
+            return 0.0
+        return self.models[model_id].size_bytes * self.cluster.compression_ratio
+
+    # -- ranking (Eq. 1) ---------------------------------------------------------
+    def _compute_ranks(self, dfg: DFG) -> Dict[str, float]:
+        ranks: Dict[str, float] = {}
+        for tid in reversed(dfg.topo_order):
+            task = dfg.tasks[tid]
+            succ_term = 0.0
+            if dfg.succs[tid]:
+                succ_term = max(
+                    self.td_output(task) + ranks[s] for s in dfg.succs[tid]
+                )
+            ranks[tid] = self.mean_runtime(task) + succ_term
+        return ranks
+
+    def ranks(self, dfg: DFG) -> Dict[str, float]:
+        if dfg.name not in self._ranks:
+            self.register(dfg)
+        return self._ranks[dfg.name]
+
+    def rank_order(self, dfg: DFG) -> List[str]:
+        """Tasks in descending rank; ties broken by topological position
+        ("time of arrival determines the ranking" for identical ranks,
+        §4.2.1 — topo position is the deterministic analogue within a job)."""
+        ranks = self.ranks(dfg)
+        topo_pos = {t: i for i, t in enumerate(dfg.topo_order)}
+        return sorted(dfg.tasks, key=lambda t: (-ranks[t], topo_pos[t]))

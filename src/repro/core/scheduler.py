@@ -1,0 +1,418 @@
+"""Navigator scheduler (§4) and the baseline schemes (§6.2.1).
+
+Planning phase (Alg. 1): HEFT-style upward-rank ordering, then per-task
+argmin over workers of
+
+    FT(t, w) = max(worker_FT_map[w], AT_allInputs(t, w)) + TD_model(m_t, w) + R(t, w)
+
+with the model-locality term TD_model from Eq. 2 (0 on a cache hit, fetch
+time on a miss that fits, fetch time + eviction penalty otherwise) and
+input arrival times from Eq. 3–4.
+
+Dynamic adjustment phase (Alg. 2): when a task's predecessor finishes, if
+the planned worker's queue wait exceeds ``threshold × R(t, w)`` and the
+task is not a join, re-select the worker with the earliest start, adding
+TD_input for workers other than the one holding the task's inputs.
+
+Baselines:
+* JIT   — per-task assignment at readiness, earliest-start-first.
+* HEFT  — classic HEFT: rank + earliest finish, but no worker load, no
+          model locality, no dynamic adjustment.
+* Hash  — uniform task spreading by hash(task, job).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import bitmaps
+from repro.core.profiles import ProfileRepository
+from repro.core.state import SSTRow
+from repro.core.types import ADFG, DFG, Job, TaskSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class NavigatorConfig:
+    """Tunables + ablation switches (§6.3.1)."""
+
+    # Alg. 2 line 2: reschedule when queue wait > R(t, w) * threshold.
+    adjustment_threshold: float = 2.0
+    # Eq. 2 third case.  None → estimate as the mean refetch cost of the
+    # models currently resident on the candidate worker (the expected cost
+    # of bringing back whatever we evict); float → fixed seconds.
+    eviction_penalty_s: Optional[float] = None
+    # Optional hysteresis for Alg. 2 under stale metadata: move only if the
+    # best candidate improves the planned worker's estimated finish by this
+    # relative margin.  0.0 = the paper's unconditional argmin (which also
+    # measured best in our multi-seed calibration; see EXPERIMENTS.md).
+    adjustment_margin: float = 0.0
+    # Ablations:
+    use_model_locality: bool = True      # Fig. 7 "model locality"
+    use_dynamic_adjustment: bool = True  # Fig. 7 "dynamic task scheduling"
+    # Track models the planner itself just decided to place (so the second
+    # task in the same job using the same model sees a planned hit).
+    speculative_cache: bool = True
+
+
+class Scheduler:
+    """Common interface the simulator/serving engine drives."""
+
+    name = "base"
+    needs_adjustment = False
+    plans_at_arrival = True
+
+    def __init__(self, profiles: ProfileRepository) -> None:
+        self.profiles = profiles
+        self.cluster = profiles.cluster
+
+    # Planning at job arrival.  Returns None for per-task schedulers (JIT).
+    def plan(
+        self,
+        job: Job,
+        now: float,
+        origin_worker: int,
+        sst: Sequence[SSTRow],
+    ) -> Optional[ADFG]:
+        raise NotImplementedError
+
+    # Per-task assignment at readiness (JIT only).
+    def select_worker_at_ready(
+        self,
+        job: Job,
+        task_id: str,
+        now: float,
+        sst: Sequence[SSTRow],
+        input_locations: Mapping[str, int],
+        input_sizes: Mapping[str, float],
+        self_worker: Optional[int] = None,
+    ) -> int:
+        raise NotImplementedError(f"{self.name} plans at arrival")
+
+    # Dynamic adjustment when a predecessor completes (Navigator only).
+    def adjust(
+        self,
+        job: Job,
+        adfg: ADFG,
+        task_id: str,
+        now: float,
+        sst: Sequence[SSTRow],
+        current_worker: int,
+        input_bytes: float,
+    ) -> int:
+        return adfg[task_id]
+
+    # -- shared helpers -------------------------------------------------------
+    def _ft_map(self, now: float, sst: Sequence[SSTRow]) -> List[float]:
+        """worker_FT_map: published queue-drain times, clamped to now
+        (a stale estimate in the past means 'idle as far as we know')."""
+        return [max(now, row.ft_estimate_s) for row in sst]
+
+
+class NavigatorScheduler(Scheduler):
+    name = "navigator"
+    needs_adjustment = True
+
+    def __init__(
+        self, profiles: ProfileRepository, config: Optional[NavigatorConfig] = None
+    ) -> None:
+        super().__init__(profiles)
+        self.config = config or NavigatorConfig()
+        self.needs_adjustment = self.config.use_dynamic_adjustment
+
+    # -- Eq. 2 ------------------------------------------------------------------
+    def _td_model(
+        self,
+        task: TaskSpec,
+        worker: int,
+        bitmap: int,
+        avc_bytes: float,
+    ) -> float:
+        mid = task.model_id
+        if mid is None:
+            return 0.0
+        if not self.config.use_model_locality:
+            # Ablation: ignore cache state entirely — every worker looks the
+            # same, so the locality preference disappears.
+            return self.profiles.td_model(mid)
+        if bitmaps.contains(bitmap, mid):
+            return 0.0
+        fetch = self.profiles.td_model(mid)
+        if self.profiles.cached_model_size(mid) <= avc_bytes:
+            return fetch
+        return fetch + self._eviction_penalty(bitmap)
+
+    def _eviction_penalty(self, bitmap: int) -> float:
+        if self.config.eviction_penalty_s is not None:
+            return self.config.eviction_penalty_s
+        resident = bitmaps.unpack(bitmap)
+        if not resident:
+            return 0.0
+        # Expected cost of re-fetching whichever resident model we displace.
+        return sum(self.profiles.td_model(m) for m in resident) / len(resident)
+
+    # -- Alg. 1 -------------------------------------------------------------------
+    def plan(
+        self,
+        job: Job,
+        now: float,
+        origin_worker: int,
+        sst: Sequence[SSTRow],
+    ) -> ADFG:
+        dfg = job.dfg
+        workers = list(self.cluster.workers())
+        ft_map = self._ft_map(now, sst)                       # line 2
+        bitmap = [row.cache_bitmap for row in sst]
+        avc = [row.free_cache_bytes for row in sst]
+        adfg = ADFG(job)
+
+        for tid in self.profiles.rank_order(dfg):             # lines 4-5
+            task = dfg.tasks[tid]
+            best_w, best_ft = -1, float("inf")
+            for w in workers:                                 # line 7
+                at = self._at_all_inputs(job, tid, w, now, origin_worker, adfg)
+                x = max(ft_map[w], at)                        # line 8
+                ft = (
+                    x
+                    + self._td_model(task, w, bitmap[w], avc[w])
+                    + self.profiles.runtime(task, w)
+                )                                             # line 9
+                if ft < best_ft:
+                    best_w, best_ft = w, ft
+            adfg[tid] = best_w                                # line 11
+            adfg.planned_ft[tid] = best_ft
+            ft_map[best_w] = best_ft                          # line 12
+            if self.config.speculative_cache and task.model_id is not None:
+                if not bitmaps.contains(bitmap[best_w], task.model_id):
+                    bitmap[best_w] = bitmaps.add(bitmap[best_w], task.model_id)
+                    avc[best_w] = max(
+                        0.0,
+                        avc[best_w]
+                        - self.profiles.cached_model_size(task.model_id),
+                    )
+        return adfg
+
+    # -- Eq. 3-4 ----------------------------------------------------------------
+    def _at_all_inputs(
+        self,
+        job: Job,
+        task_id: str,
+        worker: int,
+        now: float,
+        origin_worker: int,
+        adfg: ADFG,
+    ) -> float:
+        dfg = job.dfg
+        preds = dfg.preds[task_id]
+        if not preds:
+            # Entry task: the client input arrives at origin_worker.
+            td = 0.0 if worker == origin_worker else self.profiles.td_input(
+                dfg.tasks[task_id]
+            )
+            return now + td
+        at = 0.0
+        for p in preds:
+            # Ranks order guarantees predecessors are already assigned.
+            ft_p = adfg.planned_ft[p]
+            if worker != adfg[p]:
+                ft_p += self.profiles.td_output(dfg.tasks[p])
+            at = max(at, ft_p)
+        return at
+
+    # -- Alg. 2 -------------------------------------------------------------------
+    def adjust(
+        self,
+        job: Job,
+        adfg: ADFG,
+        task_id: str,
+        now: float,
+        sst: Sequence[SSTRow],
+        current_worker: int,
+        input_bytes: float,
+    ) -> int:
+        if not self.config.use_dynamic_adjustment:
+            return adfg[task_id]
+        dfg = job.dfg
+        task = dfg.tasks[task_id]
+        w_planned = adfg[task_id]                               # line 1
+        wait = max(0.0, sst[w_planned].ft_estimate_s - now)
+        above = wait > self.profiles.runtime(task, w_planned) * (
+            self.config.adjustment_threshold
+        )                                                       # line 2
+        if dfg.is_join(task_id) or not above:                   # lines 3-5
+            return w_planned
+        ft_map = self._ft_map(now, sst)                         # line 6
+        td_in = self.cluster.network.transfer_time(input_bytes)
+
+        def est(w: int) -> float:
+            ft = (
+                ft_map[w]
+                + self._td_model(
+                    task, w, sst[w].cache_bitmap, sst[w].free_cache_bytes
+                )
+                + self.profiles.runtime(task, w)
+            )
+            if w != current_worker:                             # lines 10-11
+                ft += td_in
+            return ft
+
+        best_w, best_ft = w_planned, est(w_planned)
+        for w in range(len(ft_map)):                            # line 7
+            ft = est(w)
+            if ft < best_ft:
+                best_w, best_ft = w, ft
+        # Hysteresis: require a clear predicted win before abandoning the
+        # planned (cache-affine) worker.
+        planned_ft = est(w_planned)
+        if best_w != w_planned and best_ft > planned_ft * (
+            1.0 - self.config.adjustment_margin
+        ):
+            return w_planned
+        return best_w                                           # lines 12-13
+
+
+class JITScheduler(Scheduler):
+    """Just-in-time baseline (§6.2.1): assigns each task as it becomes
+    ready, to the worker with the earliest start (queue wait + model fetch
+    + intermediate transfer).  Minimises each task's finish time in
+    isolation — no intra-job coordination.
+
+    JIT consumes Global State Monitor rows (load and cache bitmap alike,
+    §6.2.1: "obtaining the start time estimates by taking worker-state
+    information from Global State Monitor ... using the worker wait time,
+    model fetch time and intermediate data transfer time").  What it lacks
+    versus Navigator is intra-job coordination: fan-out siblings are placed
+    greedily one at a time against the same snapshot, join placement cannot
+    be pre-agreed, and there is no speculative model placement — which is
+    why its hit rate sits between Hash's and Navigator's (Table 1).
+    """
+
+    name = "jit"
+    plans_at_arrival = False
+
+    def plan(self, job, now, origin_worker, sst) -> Optional[ADFG]:
+        return None
+
+    def select_worker_at_ready(
+        self,
+        job: Job,
+        task_id: str,
+        now: float,
+        sst: Sequence[SSTRow],
+        input_locations: Mapping[str, int],
+        input_sizes: Mapping[str, float],
+        self_worker: Optional[int] = None,
+    ) -> int:
+        dfg = job.dfg
+        task = dfg.tasks[task_id]
+        ft_map = self._ft_map(now, sst)
+        best_w, best_ft = 0, float("inf")
+        for w in range(len(ft_map)):
+            # Inputs that are not already on w must be transferred.
+            td_in = 0.0
+            for src, loc in input_locations.items():
+                if loc != w:
+                    td_in = max(
+                        td_in,
+                        self.cluster.network.transfer_time(input_sizes[src]),
+                    )
+            td_model = 0.0
+            if task.model_id is not None and not bitmaps.contains(
+                sst[w].cache_bitmap, task.model_id
+            ):
+                td_model = self.profiles.td_model(task.model_id)
+            ft = max(ft_map[w], now + td_in) + td_model + self.profiles.runtime(task, w)
+            if ft < best_ft:
+                best_w, best_ft = w, ft
+        return best_w
+
+
+class HEFTScheduler(Scheduler):
+    """Classic HEFT (§6.2.1): upward ranks + earliest-finish-time worker
+    selection considering task parallelism and inter-task transfers, but
+    with *no* notion of current worker queue load and *no* model locality;
+    the plan is locked at job arrival (no dynamic adjustment)."""
+
+    name = "heft"
+
+    def plan(
+        self,
+        job: Job,
+        now: float,
+        origin_worker: int,
+        sst: Sequence[SSTRow],
+    ) -> ADFG:
+        dfg = job.dfg
+        workers = list(self.cluster.workers())
+        # Worker availability *within this job only* — HEFT has no view of
+        # the global queues.
+        avail = {w: now for w in workers}
+        adfg = ADFG(job)
+        for tid in self.profiles.rank_order(dfg):
+            task = dfg.tasks[tid]
+            best_w, best_ft = -1, float("inf")
+            for w in workers:
+                at = now
+                preds = dfg.preds[tid]
+                if not preds:
+                    if w != origin_worker:
+                        at = now + self.profiles.td_input(task)
+                else:
+                    for p in preds:
+                        ft_p = adfg.planned_ft[p]
+                        if w != adfg[p]:
+                            ft_p += self.profiles.td_output(dfg.tasks[p])
+                        at = max(at, ft_p)
+                # Every task pays the average model fetch cost regardless of
+                # cache state: HEFT is model-locality-blind, but the fetch
+                # is still part of the task's execution on the testbed.
+                ft = max(avail[w], at) + self.profiles.runtime(task, w)
+                if ft < best_ft:
+                    best_w, best_ft = w, ft
+            adfg[tid] = best_w
+            adfg.planned_ft[tid] = best_ft
+            avail[best_w] = best_ft
+        return adfg
+
+
+class HashScheduler(Scheduler):
+    """Randomized hash placement (§6.2.1): uniform task spreading, the
+    scheme "commonly used for workflow scheduling and load balancing"."""
+
+    name = "hash"
+
+    def plan(
+        self,
+        job: Job,
+        now: float,
+        origin_worker: int,
+        sst: Sequence[SSTRow],
+    ) -> ADFG:
+        adfg = ADFG(job)
+        for tid in job.dfg.topo_order:
+            key = f"{tid}:{job.job_id}".encode()
+            adfg[tid] = zlib.crc32(key) % self.cluster.n_workers
+            adfg.planned_ft[tid] = now
+        return adfg
+
+
+SCHEDULERS = {
+    "navigator": NavigatorScheduler,
+    "jit": JITScheduler,
+    "heft": HEFTScheduler,
+    "hash": HashScheduler,
+}
+
+
+def make_scheduler(
+    name: str,
+    profiles: ProfileRepository,
+    config: Optional[NavigatorConfig] = None,
+) -> Scheduler:
+    if name == "navigator":
+        return NavigatorScheduler(profiles, config)
+    try:
+        return SCHEDULERS[name](profiles)
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}") from None

@@ -1,0 +1,81 @@
+"""Decentralized SST exchange as a JAX collective (TPU-native analogue of
+the paper's RDMA one-sided row pushes, §5.2).
+
+The paper's SST is an O(n²) replicated table: every worker pushes its row
+to every peer.  On a TPU mesh the natural primitive is an all-gather of
+per-device rows over the data axis: each device contributes its local
+(1, ROW_WIDTH) row and receives the full (W, ROW_WIDTH) table.  Like the
+RDMA original, a push moves one cache line per peer — the row layout
+below packs into 64 bytes (8 × f32/u32 lanes ≈ one cache line), keeping
+the wire format faithful to Fig. 5.
+
+Row layout (uint32 lanes — exact bit transport; 8 lanes = 32 bytes, half a
+cache line):
+  [0] ft_estimate_s   (f32 bit pattern)
+  [1] cache_bitmap lo 32 bits
+  [2] cache_bitmap hi 32 bits
+  [3] free cache KiB
+  [4] queue_len
+  [5..7] reserved
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.state import SSTRow
+
+ROW_WIDTH = 8
+
+
+def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
+    out = np.zeros((ROW_WIDTH,), np.uint32)
+    out[0] = np.float32(row.ft_estimate_s).view(np.uint32)
+    out[1] = np.uint32(row.cache_bitmap & 0xFFFFFFFF)
+    out[2] = np.uint32((row.cache_bitmap >> 32) & 0xFFFFFFFF)
+    out[3] = np.uint32(min(row.free_cache_bytes / 1024.0, 2**32 - 1))
+    out[4] = np.uint32(queue_len)
+    return out
+
+
+def unpack_rows(table: np.ndarray) -> List[SSTRow]:
+    rows = []
+    for r in np.asarray(table, np.uint32):
+        bitmap = int(r[1]) | (int(r[2]) << 32)
+        rows.append(
+            SSTRow(
+                ft_estimate_s=float(r[0:1].view(np.float32)[0]),
+                cache_bitmap=bitmap,
+                free_cache_bytes=float(r[3]) * 1024.0,
+            )
+        )
+    return rows
+
+
+def make_sst_allgather(mesh: Mesh, axis: str = "data"):
+    """Returns a jitted (local_rows) → (replicated_table) exchange.
+
+    ``local_rows``: (W, ROW_WIDTH) array sharded so each device along
+    ``axis`` holds its own row; the result is the fully replicated table —
+    exactly the post-push SST state every scheduler reads.
+    """
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=P(axis, None),
+        out_specs=P(None, None),
+        check_vma=False,
+    )
+    def exchange(local_row):
+        # (1, ROW_WIDTH) per device → (W, ROW_WIDTH) everywhere.
+        return jax.lax.all_gather(local_row, axis, axis=0, tiled=True)
+
+    return jax.jit(exchange)

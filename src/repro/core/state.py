@@ -1,0 +1,111 @@
+"""Decentralized Global State Monitor — the Shared State Table (§3.4, §5.2).
+
+Every worker holds a replica of a one-row-per-worker table:
+
+    [ FT estimate | cache bitmap (u64) | free cache bytes | push timestamp ]
+
+A worker updates *its own* row locally at any time, but replicas on peers
+only see the value as of the worker's last *push*.  Pushes are rate-limited
+by ``push_interval_s`` (paper default 200 ms = 5 pushes/s, §5.2/§6.3.2);
+the staleness a reader observes is therefore bounded by the interval.
+
+``SharedStateTable`` models exactly this: ``local`` rows are ground truth
+for the owning worker, ``published`` rows are what remote schedulers see.
+The simulator calls ``push(worker, now)`` on the dissemination schedule.
+Separate intervals for the load field and the cache field support the
+staleness sensitivity study (Fig. 8), which varies them independently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class SSTRow:
+    """One worker's row.  ``ft_estimate_s`` is FT(w): the absolute time at
+    which the worker expects to have drained its execution queue (§4.1).
+    ``cache_bitmap`` encodes Navigator-cache contents; ``free_cache_bytes``
+    is AVC(w)."""
+
+    ft_estimate_s: float = 0.0
+    cache_bitmap: int = 0
+    free_cache_bytes: float = 0.0
+    pushed_at: float = 0.0
+
+    def copy(self) -> "SSTRow":
+        return SSTRow(
+            self.ft_estimate_s,
+            self.cache_bitmap,
+            self.free_cache_bytes,
+            self.pushed_at,
+        )
+
+
+class SharedStateTable:
+    """Replicated per-worker state with bounded-staleness publication.
+
+    For simplicity we model a single published copy (all peers see the same
+    snapshot age); per-peer divergence below one push interval does not
+    change scheduling behaviour, which only depends on the staleness bound.
+    Load and cache fields may be published on different cadences, matching
+    the two axes of Fig. 8.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        push_interval_s: float = 0.2,
+        cache_push_interval_s: Optional[float] = None,
+    ) -> None:
+        self.n_workers = n_workers
+        self.push_interval_s = push_interval_s
+        self.cache_push_interval_s = (
+            push_interval_s if cache_push_interval_s is None else cache_push_interval_s
+        )
+        self.local: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
+        self.published: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
+        self._pushes = 0
+
+    # -- local updates (free, instantaneous) -------------------------------
+    def update_load(self, worker: int, ft_estimate_s: float) -> None:
+        self.local[worker].ft_estimate_s = ft_estimate_s
+
+    def update_cache(
+        self, worker: int, cache_bitmap: int, free_cache_bytes: float
+    ) -> None:
+        row = self.local[worker]
+        row.cache_bitmap = cache_bitmap
+        row.free_cache_bytes = free_cache_bytes
+
+    # -- publication --------------------------------------------------------
+    def push_load(self, worker: int, now: float) -> None:
+        self.published[worker].ft_estimate_s = self.local[worker].ft_estimate_s
+        self.published[worker].pushed_at = now
+        self._pushes += 1
+
+    def push_cache(self, worker: int, now: float) -> None:
+        self.published[worker].cache_bitmap = self.local[worker].cache_bitmap
+        self.published[worker].free_cache_bytes = self.local[worker].free_cache_bytes
+        self.published[worker].pushed_at = now
+        self._pushes += 1
+
+    def push(self, worker: int, now: float) -> None:
+        self.push_load(worker, now)
+        self.push_cache(worker, now)
+
+    @property
+    def total_pushes(self) -> int:
+        return self._pushes
+
+    # -- reads ---------------------------------------------------------------
+    def view(self, reader_worker: Optional[int] = None) -> List[SSTRow]:
+        """Snapshot as a scheduler on ``reader_worker`` sees it: its own row
+        is always fresh (local), remote rows are the last published values.
+        ``reader_worker=None`` returns the pure published view (used by a
+        hypothetical external observer)."""
+        rows = [r.copy() for r in self.published]
+        if reader_worker is not None:
+            rows[reader_worker] = self.local[reader_worker].copy()
+        return rows

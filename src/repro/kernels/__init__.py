@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (+ jnp reference oracles) for the compute hot spots:
+
+* ``flash_attention``  — blocked causal/windowed attention (prefill/train)
+* ``decode_attention`` — one-token GQA decode against a KV cache
+* ``ssd_scan``         — Mamba-2 SSD chunked state-space scan
+* ``moe_gmm``          — grouped expert matmul for sorted MoE dispatch
+
+Use ``repro.kernels.ops`` for the impl-dispatching wrappers.
+"""

@@ -1,0 +1,161 @@
+"""Blocked (flash) attention Pallas kernel for TPU.
+
+Tiling: grid = (batch, q_heads, Sq/block_q); each program streams KV blocks
+for its query tile through VMEM with an online-softmax accumulator.  The
+MXU sees (block_q × head_dim) @ (head_dim × block_k) matmuls — block sizes
+default to 128 to match the 128×128 systolic array, and head_dim is the
+minor (lane) dimension so q/k/v tiles are (8,128)-aligned for bf16/f32.
+
+GQA is handled in the index map: query head h reads KV head h // group.
+Causal and sliding-window masks are applied per tile; KV tiles fully
+outside the mask are skipped via the loop bounds (the causal lower-right
+wavefront), which is where the 2× FLOP saving comes from.
+
+VMEM budget per program (block_q = block_k = 128, hd = 128, f32):
+  q (128×128) + k (128×128) + v (128×128) + acc (128×128) + stats ≈ 260 KB
+— comfortably under the ~16 MB/core VMEM limit, leaving headroom for
+double buffering of the KV stream.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    scale: float,
+):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, q_ref.shape[-1]), jnp.float32)
+
+    n_kv = pl.cdiv(kv_len, block_k)
+    if causal:
+        # Last KV block that any query in this tile can see.
+        hi = jnp.minimum(
+            n_kv, (qi * block_q + block_q - 1 + q_offset) // block_k + 1
+        )
+    else:
+        hi = n_kv
+    if window is not None:
+        lo = jnp.maximum(0, (qi * block_q + q_offset - window + 1) // block_k)
+    else:
+        lo = 0
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(ki * block_k, block_k), :].astype(
+            jnp.float32
+        )  # (bk, d)
+        v = v_ref[0, 0, pl.dslice(ki * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        s = q @ k.T  # (bq, bk)
+        k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows → zero output
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KH, D) → (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    group = h // kh
+    scale = d ** -0.5
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # Pad KV to a block multiple: the in-kernel kv loop loads fixed-size
+    # dslices, and the validity mask (k_pos < kv_len) keeps padding inert.
+    sk_pad = -(-sk // block_k) * block_k
+    if sk_pad != sk:
+        pad = ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KH, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, pl.cdiv(sq, block_q))
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel,
+            block_q=block_q,
+            block_k=block_k,
+            kv_len=sk,
+            causal=causal,
+            window=window,
+            q_offset=q_offset,
+            scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, sk_pad, d),
+                lambda bi, hi, qi, _g=group: (bi, hi // _g, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, sk_pad, d),
+                lambda bi, hi, qi, _g=group: (bi, hi // _g, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,109 @@
+"""Grouped expert matmul (GMM) Pallas kernel for sorted MoE dispatch.
+
+Input rows are pre-sorted by expert id; ``group_sizes[e]`` consecutive
+rows belong to expert ``e``.  The kernel requires group boundaries to be
+aligned to ``block_t`` (the wrapper pads each group — a static worst-case
+pad of E·(block_t−1) rows), so every row tile maps to exactly one expert.
+
+Grid: (T_padded/block_t, d_out/block_n).  The expert id of each row tile
+is precomputed on the host side of the trace and passed as a
+scalar-prefetch operand, which the *index maps* consume to page exactly
+one expert's weight tile into VMEM per program — this is the kernel's
+point: weights stream per-tile instead of materialising a (T, d_in, d_out)
+gather the way the jnp oracle does.
+
+VMEM per program (block_t = 128, d_in = 2048, block_n = 256, bf16):
+  x (128×2048) + w (2048×256) + out (128×256) ≈ 1.6 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(expert_of_tile, x_ref, w_ref, o_ref):
+    # w_ref has already been paged to this tile's expert by the index map.
+    o_ref[...] = (
+        x_ref[...].astype(jnp.float32) @ w_ref[0].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def pad_group_sizes(
+    group_sizes: jax.Array, block_t: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Round each group up to a multiple of ``block_t``.  Returns
+    (padded_group_sizes, scatter indices mapping original rows → padded)."""
+    padded = -(-group_sizes // block_t) * block_t
+    return padded, jnp.cumsum(padded) - padded
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_n", "interpret")
+)
+def moe_gmm(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+    *,
+    block_t: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (T, d_in) rows sorted by expert; w: (E, d_in, d_out);
+    group_sizes: (E,) int32 summing to T → (T, d_out).
+
+    The wrapper scatters rows into a block-aligned layout, runs the
+    aligned kernel, and gathers back — alignment pad rows multiply by a
+    valid expert's weights and are then dropped."""
+    t, d_in = x.shape
+    e, _, d_out = w.shape
+    block_t = min(block_t, max(8, t))
+    block_n = min(block_n, d_out)
+
+    padded_sizes, padded_starts = pad_group_sizes(group_sizes, block_t)
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    # Static worst case: every group padded by block_t - 1 rows.
+    t_pad = int(-(-t // block_t) * block_t + e * block_t)
+    # Destination slot of each original row.
+    expert_of_row = jnp.sum(
+        jnp.arange(t)[:, None] >= jnp.cumsum(group_sizes)[None, :], axis=1
+    )
+    dest = padded_starts[expert_of_row] + (jnp.arange(t) - starts[expert_of_row])
+    x_al = jnp.zeros((t_pad, d_in), x.dtype).at[dest].set(x)
+
+    # Expert owning each row tile (scalar prefetch for the index maps).
+    n_tiles = t_pad // block_t
+    tile_starts = jnp.arange(n_tiles) * block_t
+    expert_of_tile = (
+        jnp.sum(
+            tile_starts[:, None] >= jnp.cumsum(padded_sizes)[None, :], axis=1
+        )
+    ).astype(jnp.int32)
+    expert_of_tile = jnp.minimum(expert_of_tile, e - 1)
+
+    out = pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_tiles, d_out // block_n if d_out % block_n == 0
+                  else -(-d_out // block_n)),
+            in_specs=[
+                pl.BlockSpec((block_t, d_in), lambda ti, ni, eot: (ti, 0)),
+                pl.BlockSpec(
+                    (1, d_in, block_n), lambda ti, ni, eot: (eot[ti], 0, ni)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (block_t, block_n), lambda ti, ni, eot: (ti, ni)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d_out), x.dtype),
+        interpret=interpret,
+    )(expert_of_tile, x_al, w)
+    return out[dest]

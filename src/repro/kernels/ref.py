@@ -1,0 +1,369 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests assert against, and also the
+default compute path used when lowering on CPU / in the multi-pod dry-run
+(XLA-native ops lower and shard cleanly under GSPMD; the Pallas kernels
+target TPU and are validated in interpret mode).
+
+Shapes follow the serving convention:
+  q        : (batch, q_len, n_heads, head_dim)
+  k, v     : (batch, kv_len, n_kv_heads, head_dim)    (GQA: n_heads % n_kv_heads == 0)
+  output   : (batch, q_len, n_heads, head_dim)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _gqa_expand(k: jax.Array, n_heads: int) -> jax.Array:
+    """Broadcast KV heads to query heads: (B,T,KH,D) → (B,T,H,D)."""
+    b, t, kh, d = k.shape
+    group = n_heads // kh
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=2)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Full (prefill/train) attention with optional causal mask and
+    sliding window.  ``q_offset`` is the absolute position of q[0] relative
+    to k[0] (used when a query block attends into a longer KV history)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Fully-masked rows (can happen with windows) produce NaNs; zero them.
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def attention_chunked_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    chunk_k: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: lax.scan over KV chunks with an
+    online-softmax accumulator, so the (Sq × Sk) score matrix is never
+    materialised — peak attention activation drops from O(Sq·Sk) to
+    O(Sq·chunk_k).  This is the XLA-level analogue of the Pallas
+    flash_attention kernel and the §Perf fix for the memory-bound prefill
+    cases (the plain ref path writes the full score tensor to HBM)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    chunk_k = min(chunk_k, sk)
+    sk_pad = -(-sk // chunk_k) * chunk_k
+    if sk_pad != sk:
+        pad = ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_chunks = sk_pad // chunk_k
+    group = h // kh
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk_k, kh, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk_k, kh, d), 1, 0)
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc, ci = carry
+        k_i, v_i = inp  # (B, ck, KH, D)
+        k_i = _gqa_expand(k_i, h).astype(jnp.float32)
+        v_i = _gqa_expand(v_i, h).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_i)
+        k_pos = ci * chunk_k + jnp.arange(chunk_k)
+        mask = k_pos[None, :] < sk
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isinf(s), 0.0, p)
+        alpha = jnp.exp(
+            jnp.where(jnp.isinf(m), jnp.where(jnp.isinf(m_new), 0.0, -jnp.inf),
+                      m - m_safe)
+        )
+        alpha = jnp.where(jnp.isinf(m) & jnp.isinf(m_new), 1.0, alpha)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_i
+        )
+        return (m_new, l_new, acc_new, ci + 1), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    if unroll:
+        carry = (m0, l0, acc0, jnp.int32(0))
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i]))
+        m, l, acc, _ = carry
+    else:
+        (m, l, acc, _), _ = jax.lax.scan(
+            body, (m0, l0, acc0, jnp.int32(0)), (kc, vc)
+        )
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token GQA decode against a KV cache.
+
+    q        : (B, H, D)       — the single new token's queries
+    k_cache  : (B, T, KH, D)   — T = cache capacity
+    cache_len: (B,) int32      — valid prefix length per sequence
+    """
+    b, h, d = q.shape
+    _, t, kh, _ = k_cache.shape
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k_cache, h)
+    v = _gqa_expand(v_cache, h)
+    logits = jnp.einsum("bhd,bkhd->bhk", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(t)[None, :] < cache_len[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhk,bkhd->bhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def decode_attention_grouped_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """GQA decode without materialising the expanded head dim: queries are
+    grouped per KV head and contract directly against the unexpanded cache
+    (einsum ``bkgd,btkd->bkgt``).  Functionally identical to
+    ``decode_attention_ref``; structurally it keeps the cache's T axis the
+    only shardable large dim, so GSPMD leaves the (T-sharded) cache in
+    place instead of re-sharding it onto heads (which triggers a full
+    cache all-gather — the §Perf P2 finding).  This mirrors the Pallas
+    decode kernel's (KH, group) tiling."""
+    b, h, d = q.shape
+    _, t, kh, _ = k_cache.shape
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, kf)
+    valid = jnp.arange(t)[None, None, None, :] < cache_len[:, None, None, None]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(logits - m)
+    p = jnp.where(jnp.isinf(logits), 0.0, p)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bkgt,btkd->bkgd", p / l, vf)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD (state-space duality) reference: sequential recurrence.
+
+    x  : (B, T, H, P)    — input heads (P = head dim)
+    dt : (B, T, H)       — positive step sizes (already softplus'd)
+    a  : (H,)            — negative state decay (A < 0)
+    b  : (B, T, H, N)    — input projection (N = state dim)
+    c  : (B, T, H, N)    — output projection
+    Returns (y: (B,T,H,P), final_state: (B,H,P,N)).
+
+    Recurrence per head:  S_t = exp(a·dt_t)·S_{t-1} + dt_t·(x_t ⊗ b_t)
+                          y_t = S_t · c_t
+    """
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((bs, h, p, n), dtype=jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(a[None, :] * dtt)  # (B,H)
+        upd = (dtt[..., None, None] * xt[..., :, None]) * bt[..., None, :]
+        state = decay[..., None, None] * state + upd
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, yt
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, final
+
+
+def ssd_chunked_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD in the dual (attention-like) form — the same math as
+    the Pallas kernel, in pure jnp: per chunk a masked (L×L) matmul plus a
+    carried (P×N) state.  This is the model's default compute path (the
+    per-step ``ssd_ref`` stays the test oracle); ``unroll=True`` unrolls
+    the chunk loop so XLA cost analysis sees every chunk (dry-run flops
+    accounting — lax.scan bodies are otherwise counted once)."""
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    t_pad = -(-t // chunk) * chunk
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0))
+        x = jnp.pad(x, pad + ((0, 0),))
+        dt = jnp.pad(dt, pad)
+        b = jnp.pad(b, pad + ((0, 0),))
+        c = jnp.pad(c, pad + ((0, 0),))
+    nchunks = t_pad // chunk
+    xf = x.astype(jnp.float32).reshape(bs, nchunks, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bs, nchunks, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bs, nchunks, chunk, h, n)
+    cf = c.astype(jnp.float32).reshape(bs, nchunks, chunk, h, n)
+    if initial_state is None:
+        state0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp  # (B,L,H,P), (B,L,H), (B,L,H,N), (B,L,H,N)
+        s = jnp.cumsum(a[None, None, :] * dtc, axis=1)       # (B,L,H)
+        gamma = jnp.where(
+            causal[None, :, :, None],
+            jnp.exp(s[:, :, None, :] - s[:, None, :, :]),
+            0.0,
+        ) * dtc[:, None, :, :]                                # (B,L,L,H)
+        cb = jnp.einsum("blhn,bmhn->blmh", cc, bc)            # (B,L,L,H)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", cb * gamma, xc)
+        y_inter = jnp.exp(s)[..., None] * jnp.einsum(
+            "bhpn,blhn->blhp", state, cc
+        ).transpose(0, 1, 2, 3)
+        w = jnp.exp(s[:, -1:, :] - s) * dtc                   # (B,L,H)
+        state = (
+            jnp.exp(s[:, -1, :])[:, :, None, None] * state
+            + jnp.einsum("blhp,blhn->bhpn", xc * w[..., None], bc)
+        )
+        return state, y_intra + y_inter
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    if unroll:
+        state = state0
+        ys = []
+        for i in range(nchunks):
+            state, y = chunk_step(state, jax.tree.map(lambda v: v[i], xs))
+            ys.append(y)
+        y = jnp.stack(ys, axis=0)
+    else:
+        state, y = jax.lax.scan(chunk_step, state0, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(bs, t_pad, h, p)[:, :t]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    state: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-step SSD recurrence for decode.
+
+    x: (B,H,P), dt: (B,H), b/c: (B,H,N), state: (B,H,P,N)."""
+    decay = jnp.exp(a[None, :] * dt.astype(jnp.float32))
+    upd = (dt.astype(jnp.float32)[..., None, None]
+           * x.astype(jnp.float32)[..., :, None]) * b.astype(jnp.float32)[..., None, :]
+    new_state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def moe_gmm_ref(
+    x: jax.Array,
+    w: jax.Array,
+    group_sizes: jax.Array,
+) -> jax.Array:
+    """Grouped matmul reference: rows of ``x`` are sorted by expert;
+    ``group_sizes[e]`` rows belong to expert ``e`` and are multiplied by
+    ``w[e]``.
+
+    x: (tokens, d_in), w: (E, d_in, d_out), group_sizes: (E,) summing to tokens.
+    """
+    tokens, d_in = x.shape
+    e = w.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    expert_of_row = jnp.sum(
+        jnp.arange(tokens)[:, None] >= starts[None, :], axis=1
+    ) - 1
+    w_per_row = w[expert_of_row]  # (tokens, d_in, d_out)
+    return jnp.einsum("ti,tio->to", x, w_per_row)

@@ -1,0 +1,426 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination this lowers the
+appropriate step (train_step / prefill / serve_step) against abstract
+ShapeDtypeStruct inputs, compiles it, and records:
+
+  * compiled.cost_analysis()      → HLO FLOPs / bytes accessed (§Roofline)
+  * compiled.memory_analysis()    → XLA's buffer accounting
+  * analytic per-device state bytes (params/opt/cache ÷ shard counts)
+  * collective bytes parsed from the optimized HLO text, by op kind
+
+Results are written as JSON (one file per case) under --out; the roofline
+driver (`repro.launch.roofline`) consumes them.
+
+NOTE: the XLA_FLAGS line above MUST run before any other import touches
+jax — jax locks the device count on first init.  Only this entry point
+forces 512 host devices; tests and benches see the real device count.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import mesh as mesh_mod
+from repro.launch.specs import build_case, skip_reason
+from repro.models.config import INPUT_SHAPES
+from repro.models.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+)
+from repro.training.train import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO result type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device result bytes of every collective op, by kind.
+
+    Proxy semantics (documented in EXPERIMENTS.md §Roofline): result-shape
+    bytes per participating device.  all-reduce is charged 2× when
+    converted to time (ring = reduce-scatter + all-gather phases).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        result_type, opname = m.groups()
+        base = opname.rstrip("0123456789.")
+        # normalise e.g. all-gather-start / all-reduce-done
+        for coll in _COLLECTIVES:
+            if base == coll or base.startswith(coll + "-"):
+                if base.endswith("-done"):
+                    break  # counted at -start
+                out[coll] += _shape_bytes(result_type)
+                out["count"] += 1
+                break
+    return out
+
+
+def _sharded_bytes(tree, pspecs, mesh) -> int:
+    """Per-device bytes of a sharded abstract pytree."""
+    from repro.models.sharding import _axis_size  # noqa
+
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(tree), jax.tree.leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for axis in spec:
+            shards *= _axis_size(mesh, axis)
+        total += n * jnp.dtype(leaf.dtype).itemsize // max(1, shards)
+    return total
+
+
+def _lower_costs(
+    cfg, kind: str, shape, mesh, moe_dispatch: str,
+    attn_impl: str = "ref", cache_update: str = "scatter",
+    serve_layout: bool = False,
+) -> Dict[str, Any]:
+    """Lower+compile an UNROLLED variant and return its per-device HLO
+    costs.  Used by the layer-count correction below."""
+    case = _build_variant_case(cfg, kind, shape)
+    if kind == "train":
+        _, jf = make_train_step(
+            cfg, mesh, moe_dispatch=moe_dispatch, accum_steps=1, unroll=True,
+            impl=attn_impl,
+        )
+        fn = jf(case["params"], case["opt_state"], case["batch"])
+        compiled = fn.lower(
+            case["params"], case["opt_state"], case["batch"]
+        ).compile()
+    elif kind == "prefill":
+        _, jf = make_prefill_step(
+            cfg, mesh, moe_dispatch=moe_dispatch, unroll=True, impl=attn_impl
+        )
+        compiled = jf(case["params"], case["batch"]).lower(
+            case["params"], case["batch"]
+        ).compile()
+    else:
+        _, jf = make_serve_step(
+            cfg, mesh, moe_dispatch=moe_dispatch, unroll=True,
+            impl=attn_impl, cache_update=cache_update,
+            serve_layout=serve_layout,
+        )
+        compiled = jf(case["params"], case["cache"], case["tokens"]).lower(
+            case["params"], case["cache"], case["tokens"]
+        ).compile()
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "colls": colls,
+    }
+
+
+def _build_variant_case(cfg, kind: str, shape) -> Dict[str, Any]:
+    from repro.launch.specs import (
+        abstract_cache,
+        abstract_opt_state,
+        batch_specs,
+    )
+    from repro.models import abstract_params
+    from repro.configs import LONG_CONTEXT_WINDOW
+
+    if kind == "train":
+        params = abstract_params(cfg)
+        return {
+            "params": params,
+            "opt_state": abstract_opt_state(params),
+            "batch": batch_specs(cfg, shape.global_batch, shape.seq_len),
+        }
+    if kind == "prefill":
+        return {
+            "params": abstract_params(cfg),
+            "batch": batch_specs(cfg, shape.global_batch, shape.seq_len),
+        }
+    capacity = shape.seq_len
+    if shape.name == "long_500k":
+        capacity = cfg.sliding_window or LONG_CONTEXT_WINDOW
+    return {
+        "params": abstract_params(cfg),
+        "cache": abstract_cache(cfg, shape.global_batch, capacity),
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+    }
+
+
+def _combine(u: Dict, v: Dict, fu: float, fv: float) -> Dict:
+    """fu*u + fv*v elementwise over {flops, bytes, colls}."""
+    out = {
+        "flops": fu * u["flops"] + fv * v["flops"],
+        "bytes": fu * u["bytes"] + fv * v["bytes"],
+        "colls": {},
+    }
+    for k in u["colls"]:
+        out["colls"][k] = fu * u["colls"][k] + fv * v["colls"][k]
+    return out
+
+
+def corrected_costs(
+    cfg, kind: str, shape, mesh, moe_dispatch: str,
+    attn_impl: str = "ref", cache_update: str = "scatter",
+    serve_layout: bool = False,
+) -> Dict[str, Any]:
+    """Exact per-device HLO costs with loop trip counts accounted.
+
+    XLA's HloCostAnalysis counts while-loop bodies ONCE, so the scanned
+    production artifact under-reports flops/bytes/collectives by ~n_layers.
+    We lower small UNROLLED variants (1/2 layers; SSD chunk loop unrolled)
+    at the TRUE input shape and solve for per-layer body + outside-loop
+    costs:  U1 = outside + body, U2 = outside + 2·body →
+            total = (2·U1 − U2) + L·(U2 − U1).
+    Hybrids get a third variant to separate the shared-attention body from
+    the per-layer SSM body (applications = L // attn_period).
+    """
+    def variant(n_layers, attn_period=None, n_enc=None):
+        kw = dict(n_layers=n_layers)
+        if attn_period is not None:
+            kw["attn_period"] = attn_period
+        if cfg.arch_type == "audio":
+            kw["n_encoder_layers"] = n_enc if n_enc is not None else n_layers
+        vcfg = dataclasses.replace(cfg, **kw)
+        return _lower_costs(vcfg, kind, shape, mesh, moe_dispatch,
+                            attn_impl=attn_impl, cache_update=cache_update,
+                            serve_layout=serve_layout)
+
+    if cfg.arch_type == "hybrid":
+        l_real = cfg.n_layers
+        napp = l_real // cfg.attn_period
+        u1 = variant(2, attn_period=2)   # outside + 2·ssm + 1·attn
+        u2 = variant(4, attn_period=2)   # outside + 4·ssm + 2·attn
+        u3 = variant(4, attn_period=4)   # outside + 4·ssm + 1·attn
+        attn = _combine(u2, u3, 1.0, -1.0)
+        ssm = _combine(u3, u1, 0.5, -0.5)
+        outside = _combine(
+            _combine(u1, ssm, 1.0, -2.0), attn, 1.0, -1.0
+        )
+        total = _combine(
+            _combine(outside, ssm, 1.0, float(l_real)), attn, 1.0, float(napp)
+        )
+        total["variants"] = 3
+        return total
+
+    u1 = variant(1)
+    u2 = variant(2)
+    body = _combine(u2, u1, 1.0, -1.0)
+    outside = _combine(u1, body, 1.0, -1.0)
+    total = _combine(outside, body, 1.0, float(cfg.n_layers))
+    total["variants"] = 2
+    return total
+
+
+def run_case(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    moe_dispatch: str = "sorted",
+    correct_costs: bool = True,
+    attn_impl: str = "ref",
+    cache_update: str = "scatter",
+    serve_layout: bool = False,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "ok": False,
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(skipped=True, reason=reason, ok=True)
+        return rec
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    case = build_case(cfg, shape)
+    cfg = case["cfg"]
+
+    t0 = time.time()
+    if case["kind"] == "train":
+        _, jit_factory = make_train_step(
+            cfg, mesh, moe_dispatch=moe_dispatch,
+            accum_steps=case["accum_steps"], impl=attn_impl,
+        )
+        fn = jit_factory(case["params"], case["opt_state"], case["batch"])
+        lowered = fn.lower(case["params"], case["opt_state"], case["batch"])
+        state_bytes = _sharded_bytes(
+            case["params"], param_pspecs(mesh, case["params"], cfg), mesh
+        ) + _sharded_bytes(
+            case["opt_state"].m, param_pspecs(mesh, case["params"], cfg), mesh
+        ) * 2
+        rec["accum_steps"] = case["accum_steps"]
+    elif case["kind"] == "prefill":
+        _, jit_factory = make_prefill_step(
+            cfg, mesh, moe_dispatch=moe_dispatch, impl=attn_impl
+        )
+        fn = jit_factory(case["params"], case["batch"])
+        lowered = fn.lower(case["params"], case["batch"])
+        state_bytes = _sharded_bytes(
+            case["params"], param_pspecs(mesh, case["params"], cfg), mesh
+        )
+    else:  # decode
+        _, jit_factory = make_serve_step(
+            cfg, mesh, moe_dispatch=moe_dispatch, impl=attn_impl,
+            cache_update=cache_update, serve_layout=serve_layout,
+        )
+        fn = jit_factory(case["params"], case["cache"], case["tokens"])
+        lowered = fn.lower(case["params"], case["cache"], case["tokens"])
+        state_bytes = _sharded_bytes(
+            case["params"], param_pspecs(mesh, case["params"], cfg), mesh
+        ) + _sharded_bytes(
+            case["cache"], cache_pspecs(mesh, case["cache"]), mesh
+        )
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    cost = compiled.cost_analysis() or {}
+    rec["flops"] = float(cost.get("flops", -1.0))
+    rec["bytes_accessed"] = float(cost.get("bytes accessed", -1.0))
+    try:
+        ma = compiled.memory_analysis()
+        rec["xla_memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["xla_memory"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collective_bytes(hlo)
+    rec["state_bytes_per_device"] = int(state_bytes)
+    rec["n_chips"] = n_chips
+    rec["model_params"] = cfg.param_count()
+    rec["model_params_active"] = cfg.param_count(active_only=True)
+
+    if correct_costs:
+        t0 = time.time()
+        corr = corrected_costs(
+            cfg, case["kind"], shape, mesh, moe_dispatch,
+            attn_impl=attn_impl, cache_update=cache_update,
+            serve_layout=serve_layout,
+        )
+        rec["corrected"] = {
+            "flops": corr["flops"],
+            "bytes_accessed": corr["bytes"],
+            "collectives": corr["colls"],
+            "variant_lower_s": round(time.time() - t0, 2),
+        }
+    rec["ok"] = True
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-dispatch", default="sorted",
+                    choices=["sorted", "scan"])
+    ap.add_argument("--no-correct", action="store_true",
+                    help="skip the unrolled-variant cost correction")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_case(arch, shape, multi_pod=mp,
+                                   moe_dispatch=args.moe_dispatch,
+                                   correct_costs=not args.no_correct)
+                except Exception:
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "ok": False, "error": traceback.format_exc(),
+                    }
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = "SKIP" if rec.get("skipped") else (
+                    "OK" if rec["ok"] else "FAIL"
+                )
+                extra = ""
+                if rec.get("ok") and not rec.get("skipped"):
+                    cf = rec.get("corrected", {}).get("flops")
+                    extra = (
+                        (f" cflops={cf:.3e}" if cf else "")
+                        + f" flops={rec['flops']:.3e}"
+                        f" state/dev={rec['state_bytes_per_device']/2**30:.2f}GiB"
+                        f" coll={sum(v for k, v in rec['collectives'].items() if k != 'count')/2**30:.2f}GiB"
+                        f" lower={rec['lower_s']}s compile={rec['compile_s']}s"
+                    )
+                print(f"[{status}] {tag}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} case(s) failed")
+
+
+if __name__ == "__main__":
+    main()

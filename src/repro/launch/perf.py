@@ -1,0 +1,69 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower the three selected (arch × shape)
+pairs with candidate optimizations and record hypothesis → change →
+before → after against the paper-faithful baselines in results/dryrun/.
+
+Pairs (selection rationale in EXPERIMENTS.md §Perf):
+  P1 deepseek-v2-236b × prefill_32k — most collective-bound
+  P2 llama3-405b × decode_32k       — most representative of the paper's
+                                      serving/model-residency concern
+  P3 granite-20b × prefill_32k      — worst memory-bound roofline fraction
+
+    PYTHONPATH=src python -m repro.launch.perf [--step NAME]
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_case
+from repro.launch.roofline import analyze
+
+# (tag, arch, shape, kwargs) — each entry is one hypothesis→change cycle.
+STEPS = [
+    # P1 iteration 1: EP MoE dispatch.
+    ("p1_deepseek_prefill_ep", "deepseek-v2-236b", "prefill_32k",
+     dict(moe_dispatch="ep")),
+    # P1 iteration 2: + chunked attention (memory term).
+    ("p1_deepseek_prefill_ep_chunked", "deepseek-v2-236b", "prefill_32k",
+     dict(moe_dispatch="ep", attn_impl="ref_chunked")),
+    # P2 iteration 1: scatter-free cache update.
+    ("p2_llama3_decode_onehot", "llama3-405b", "decode_32k",
+     dict(cache_update="onehot")),
+    # P2 iteration 2: weight-stationary serving layout.
+    ("p2_llama3_decode_servelayout", "llama3-405b", "decode_32k",
+     dict(cache_update="onehot", serve_layout=True)),
+    # P2 iteration 3: grouped-GQA decode einsum (no head expansion).
+    ("p2_llama3_decode_grouped", "llama3-405b", "decode_32k",
+     dict(cache_update="onehot", attn_impl="ref_grouped")),
+    # P3 iteration 1: chunked (flash-style) attention.
+    ("p3_granite_prefill_chunked", "granite-20b", "prefill_32k",
+     dict(attn_impl="ref_chunked")),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--step", default=None)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for tag, arch, shape, kw in STEPS:
+        if args.step and args.step != tag:
+            continue
+        rec = run_case(arch, shape, multi_pod=False, **kw)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        a = analyze(rec)
+        print(
+            f"[{tag}] compute={a['compute_s']:.3e}s memory={a['memory_s']:.3e}s "
+            f"collective={a['collective_s']:.3e}s dominant={a['dominant']} "
+            f"useful={a['useful_ratio']*100:.1f}%",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

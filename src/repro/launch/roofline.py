@@ -1,0 +1,153 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms from
+the dry-run artifacts in results/dryrun/ and identify each case's
+bottleneck.
+
+    compute_term    = HLO_FLOPs / peak_FLOP/s            [per chip]
+    memory_term     = HLO_bytes / HBM_bw                 [per chip]
+    collective_term = collective_bytes_weighted / ICI_bw [per chip]
+
+HLO_FLOPs / HLO_bytes are the loop-corrected per-device numbers (see
+dryrun.corrected_costs — XLA counts scan bodies once, so the dry-run
+lowers unrolled 1/2-layer variants and solves for per-layer costs).
+collective bytes use the per-device result-shape proxy with all-reduce
+charged 2× (ring = reduce-scatter + all-gather phases).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for training;
+            2·N(_active)·D for inference (forward only).
+The ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is
+"useful" (remat, dense-dispatch and replication waste push it down).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.configs import ARCHS
+from repro.launch.mesh import HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import INPUT_SHAPES
+
+# Time-conversion weights per collective kind (ring algorithm phases).
+COLL_WEIGHT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global MODEL_FLOPS for the case."""
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.param_count(active_only=cfg.arch_type == "moe")
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: ONE token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    corr = rec.get("corrected")
+    flops = corr["flops"] if corr else rec["flops"]
+    bytes_acc = corr["bytes_accessed"] if corr else rec["bytes_accessed"]
+    colls = corr["collectives"] if corr else rec["collectives"]
+    coll_bytes = sum(
+        COLL_WEIGHT[k] * v for k, v in colls.items() if k in COLL_WEIGHT
+    )
+    compute_t = flops / PEAK_FLOPS_BF16
+    memory_t = bytes_acc / HBM_BW
+    coll_t = coll_bytes / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops * rec["n_chips"]
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "state_gib_per_chip": rec["state_bytes_per_device"] / 2**30,
+        "fits_hbm": rec["state_bytes_per_device"] < HBM_PER_CHIP,
+        "step_time_lb_s": max(terms.values()),
+        "roofline_frac": (
+            compute_t / max(terms.values()) if max(terms.values()) else 0.0
+        ),
+    }
+
+
+def load_all(result_dir: str) -> List[Dict[str, Any]]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyze(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def render_table(rows: List[Dict[str, Any]], mesh: str = "16x16") -> str:
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | bottleneck "
+        f"| useful % | state GiB/chip | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']*100:.1f} | "
+            f"{r['state_gib_per_chip']:.2f} | "
+            f"{'✓' if r['fits_hbm'] else '✗'} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default="results/roofline.json")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print(render_table(rows, args.mesh))
+    os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} cases → {args.json_out}")
+    # Highlight candidates for the perf hillclimb.
+    ranked = sorted(
+        (r for r in rows if r["mesh"] == args.mesh),
+        key=lambda r: r["roofline_frac"],
+    )
+    print("\nWorst roofline fraction (compute/dominant):")
+    for r in ranked[:5]:
+        print(
+            f"  {r['arch']:22s} {r['shape']:12s} frac={r['roofline_frac']:.3f}"
+            f" dominant={r['dominant']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

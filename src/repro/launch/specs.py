@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation (the dry-run's contract).
+
+``build_case(cfg, shape)`` returns everything the dry-run needs:
+  kind       : "train" | "prefill" | "decode"
+  cfg        : possibly adjusted ModelConfig (sliding window for long_500k)
+  params     : abstract param tree
+  extras     : kind-specific abstract inputs (opt state / cache / tokens)
+  accum_steps: microbatching for the train shape (memory lever)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import LONG_CONTEXT_WINDOW
+from repro.models import abstract_params, init_cache
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.training import optimizer as opt
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _tokens(batch: int, seq: int) -> SDS:
+    return SDS((batch, seq), jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    """Abstract train/prefill inputs, including the modality-stub tensors
+    (patch/frame embeddings) for vlm/audio."""
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, SDS] = {"tokens": _tokens(batch, seq)}
+    if cfg.arch_type == "vlm":
+        out["vision_embeds"] = SDS(
+            (batch, cfg.n_vision_tokens, cfg.d_model), dt
+        )
+    if cfg.arch_type == "audio":
+        out["audio_frames"] = SDS(
+            (batch, cfg.n_audio_frames, cfg.d_model), dt
+        )
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, capacity: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, capacity)
+    )
+
+
+def abstract_opt_state(params, moment_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: opt.init(params, moment_dtype=moment_dtype)
+    )
+
+
+# Microbatch counts for train_4k: chosen so the per-microbatch activation
+# working set stays ≈ pod-friendly (batch 256 → micro of 256/accum).
+TRAIN_ACCUM = {
+    "llama3-405b": 16,
+    "mistral-large-123b": 8,
+    "deepseek-v2-236b": 8,
+    "qwen2-vl-72b": 8,
+    "granite-20b": 4,
+    "qwen3-moe-30b-a3b": 4,
+    "mistral-nemo-12b": 4,
+    "zamba2-7b": 2,
+    "mamba2-780m": 1,
+    "whisper-medium": 1,
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> str:
+    """Non-empty string → this (arch × shape) pair is skipped by design."""
+    if shape.name == "long_500k" and cfg.arch_type == "audio":
+        return (
+            "whisper decoder is architecturally bounded to ~448-token "
+            "contexts against a 1500-frame encoder; a 524k decode is "
+            "meaningless (DESIGN.md §4)"
+        )
+    return ""
+
+
+def build_case(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"skipped by design: {reason}")
+
+    if shape.kind == "train":
+        params = abstract_params(cfg)
+        return {
+            "kind": "train",
+            "cfg": cfg,
+            "params": params,
+            "opt_state": abstract_opt_state(params),
+            "batch": batch_specs(cfg, shape.global_batch, shape.seq_len),
+            "accum_steps": TRAIN_ACCUM.get(cfg.name, 1),
+        }
+
+    if shape.kind == "prefill":
+        params = abstract_params(cfg)
+        return {
+            "kind": "prefill",
+            "cfg": cfg,
+            "params": params,
+            "batch": batch_specs(cfg, shape.global_batch, shape.seq_len),
+        }
+
+    # decode: ONE new token against a cache of shape.seq_len.
+    serve_cfg = cfg
+    capacity = shape.seq_len
+    if shape.name == "long_500k":
+        # Sub-quadratic requirement: SSM/hybrid are O(1)-state natively;
+        # attention archs decode against a sliding-window ring buffer.
+        if cfg.arch_type in ("ssm",):
+            capacity = 1  # state caches ignore capacity
+        elif cfg.arch_type == "hybrid":
+            capacity = cfg.sliding_window or LONG_CONTEXT_WINDOW
+        else:
+            serve_cfg = dataclasses.replace(
+                cfg, sliding_window=LONG_CONTEXT_WINDOW
+            )
+            capacity = LONG_CONTEXT_WINDOW
+    params = abstract_params(serve_cfg)
+    cache = abstract_cache(serve_cfg, shape.global_batch, capacity)
+    return {
+        "kind": "decode",
+        "cfg": serve_cfg,
+        "params": params,
+        "cache": cache,
+        "tokens": SDS((shape.global_batch,), jnp.int32),
+    }

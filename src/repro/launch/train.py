@@ -1,0 +1,95 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Builds the sharded train step for the requested architecture (reduced
+config by default so it runs on the host; ``--full`` uses the exact
+assigned config — appropriate on a real pod), drives the synthetic data
+pipeline, checkpoints periodically.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, make_pipeline
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import init_params
+from repro.training import checkpoint, make_train_step, optimizer as opt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--moe-dispatch", default="sorted",
+                    choices=["sorted", "scan", "ep"])
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (pod-scale)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced(dtype="float32")
+    mesh = (
+        make_production_mesh() if args.production_mesh else make_debug_mesh()
+    )
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    params = init_params(cfg, jax.random.key(0))
+    state = opt.init(params)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                           total_steps=args.steps)
+    step_fn, jit_factory = make_train_step(
+        cfg, mesh, ocfg, accum_steps=args.accum,
+        moe_dispatch=args.moe_dispatch, remat=False,
+    )
+    batch0 = {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch0["vision_embeds"] = jax.ShapeDtypeStruct(
+            (args.batch, 9, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.arch_type == "audio":
+        batch0["audio_frames"] = jax.ShapeDtypeStruct(
+            (args.batch, cfg.n_audio_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    step = jit_factory(params, state, batch0)
+
+    data = make_pipeline(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    )
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(next(data)["tokens"])}
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = jnp.zeros(
+                (args.batch, 9, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.arch_type == "audio":
+            batch["audio_frames"] = jnp.zeros(
+                (args.batch, cfg.n_audio_frames, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        params, state, metrics = step(params, state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(metrics['loss']):7.3f} "
+                  f"gnorm {float(metrics['grad_norm']):6.2f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, {"params": params},
+                            metadata={"step": i + 1})
+    if args.ckpt:
+        checkpoint.save(args.ckpt, {"params": params},
+                        metadata={"step": args.steps})
+        print(f"checkpoint → {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    next_token_loss,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "next_token_loss",
+]

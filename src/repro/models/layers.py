@@ -1,0 +1,226 @@
+"""Shared layer primitives (pure functions over param pytrees).
+
+Conventions:
+* activations (B, S, D); attention heads laid out (B, S, H, hd).
+* params are nested dicts of jnp arrays; layer stacks carry a leading
+  ``n_layers`` axis and are consumed with ``jax.lax.scan``.
+* norms and softmax statistics in float32, matmuls in the config dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def cache_write(
+    cache: jax.Array,
+    new: jax.Array,
+    write_index: jax.Array,
+    mode: str = "scatter",
+) -> jax.Array:
+    """Write one token into a (B, T, ...) cache at per-batch slots.
+
+    ``scatter``: batched scatter (`.at[b, idx].set`) — natural, but GSPMD
+    cannot re-shard batched scatters across a T-sharded cache without an
+    "involuntary full rematerialization" (replicate + repartition).
+    ``onehot``: select against an iota mask — the same O(T) HBM traffic
+    the attention pass already pays, but elementwise, so it partitions
+    cleanly along every axis (the §Perf fix for T-sharded decode caches).
+    """
+    if mode == "scatter":
+        bidx = jnp.arange(cache.shape[0])
+        return cache.at[bidx, write_index].set(new)
+    t = cache.shape[1]
+    mask = jnp.arange(t)[None, :] == write_index[:, None]  # (B, T)
+    mask = mask.reshape(mask.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(mask, new[:, None], cache)
+
+
+# -- norms ---------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * weight
+
+
+# -- rotary embeddings -------------------------------------------------------------
+def rope_inv_freq(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) absolute positions."""
+    inv = rope_inv_freq(x.shape[-1], theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): three position streams (temporal,
+    height, width) drive disjoint frequency sections.
+
+    x: (B, S, H, D); positions: (3, B, S); sum(sections) == D // 2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_inv_freq(d, theta)  # (D/2,)
+    ang_all = positions.astype(jnp.float32)[..., None] * inv  # (3,B,S,D/2)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, :, :, start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """For pure-text spans all three M-RoPE streams share the position."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+# -- feed-forward --------------------------------------------------------------------
+def swiglu(x: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    gate = jax.nn.silu(x @ p["wg"])
+    return (gate * (x @ p["wu"])) @ p["wd"]
+
+
+# -- attention ------------------------------------------------------------------------
+def gqa_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    theta: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    impl: str = "ref",
+    unroll: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence GQA attention (train / prefill).
+
+    Returns (output (B,S,D), (k, v)) — k/v returned so serving can seed the
+    KV cache from prefill without recomputation.
+    """
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    if mrope_sections is not None:
+        pos3 = (
+            mrope_positions
+            if mrope_positions is not None
+            else text_mrope_positions(positions)
+        )
+        q = apply_mrope(q, pos3, theta, mrope_sections)
+        k = apply_mrope(k, pos3, theta, mrope_sections)
+    else:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    out = kops.flash_attention(
+        q, k, v, causal=causal, window=window, impl=impl, unroll=unroll
+    )
+    out = out.reshape(b, s, n_heads * head_dim) @ p["wo"]
+    return out, (k, v)
+
+
+def gqa_decode_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    position: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    write_index: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+    impl: str = "ref",
+    cache_update: str = "scatter",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token decode.  x: (B, D); position: (B,) absolute positions;
+    caches (B, T, KH, hd); write_index (B,) slot to write new k/v (ring
+    buffer semantics for sliding windows; == position for full caches).
+    Returns (output (B, D), updated caches)."""
+    b, d = x.shape
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv_heads, head_dim)
+    pos = position[:, None]
+    if mrope_sections is not None:
+        pos3 = text_mrope_positions(pos)
+        q = apply_mrope(q, pos3, theta, mrope_sections)
+        k = apply_mrope(k, pos3, theta, mrope_sections)
+    else:
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+    k_cache = cache_write(k_cache, k[:, 0], write_index, cache_update)
+    v_cache = cache_write(v_cache, v[:, 0], write_index, cache_update)
+    out = kops.decode_attention(
+        q[:, 0], k_cache, v_cache, cache_len, impl=impl
+    )
+    out = out.reshape(b, n_heads * head_dim) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+def cross_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    enc_k: jax.Array,
+    enc_v: jax.Array,
+    *,
+    n_heads: int,
+    head_dim: int,
+    impl: str = "ref",
+) -> jax.Array:
+    """Encoder-decoder cross attention (Whisper).  enc_k/enc_v are the
+    projected encoder states (B, T_enc, KH, hd)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    out = kops.flash_attention(q, enc_k, enc_v, causal=False, impl=impl)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"]
+
+
+def project_cross_kv(
+    enc_out: jax.Array,
+    p: Dict[str, jax.Array],
+    *,
+    n_kv_heads: int,
+    head_dim: int,
+) -> Tuple[jax.Array, jax.Array]:
+    b, t, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(b, t, n_kv_heads, head_dim)
+    v = (enc_out @ p["wv"]).reshape(b, t, n_kv_heads, head_dim)
+    return k, v

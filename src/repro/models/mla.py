@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+MLA compresses K/V into a low-rank latent c_kv (kv_lora_rank) plus a small
+decoupled RoPE key shared across heads.  The decode-time cache stores ONLY
+(c_kv, k_rope): (kv_lora_rank + rope_head_dim) floats per token — ~1/16 the
+GQA cache for the 236B config — and up-projects per step.
+
+Shapes (per layer):
+  wq_a : (D, q_lora)              wq_b : (q_lora, H*(hd + rd))
+  wkv_a: (D, kv_lora + rd)        wkv_b: (kv_lora, H*(hd + hd))
+  wo   : (H*hd, D)
+where hd = nope head dim, rd = rope_head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import apply_rope, cache_write, rms_norm
+
+
+def _split_heads(x, n_heads, dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, dim)
+
+
+def _project_q(x, p, *, n_heads, hd, rd, positions, theta, eps):
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], eps)
+    q = _split_heads(cq @ p["wq_b"], n_heads, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _latent_kv(x, p, *, positions, theta, eps):
+    """Returns the cacheable latent: c_kv (B,S,kv_lora), k_rope (B,S,rd)."""
+    kv = x @ p["wkv_a"]
+    kv_lora = p["wkv_b"].shape[0]
+    c_kv, k_rope = kv[..., :kv_lora], kv[..., kv_lora:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _expand_kv(c_kv, k_rope, p, *, n_heads, hd):
+    """Up-project the latent into per-head K (nope‖rope) and V."""
+    b, s, _ = c_kv.shape
+    kv = _split_heads(c_kv @ p["wkv_b"], n_heads, 2 * hd)
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :], (b, s, n_heads, k_rope.shape[-1])
+    )
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return k, v
+
+
+def mla_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    head_dim: int,
+    rope_head_dim: int,
+    theta: float,
+    norm_eps: float,
+    window: Optional[int] = None,
+    impl: str = "ref",
+    unroll: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence MLA (train / prefill).  Returns (out, (c_kv, k_rope))
+    so serving can seed the latent cache."""
+    b, s, _ = x.shape
+    hd, rd = head_dim, rope_head_dim
+    q = _project_q(
+        x, p, n_heads=n_heads, hd=hd, rd=rd,
+        positions=positions, theta=theta, eps=norm_eps,
+    )
+    c_kv, k_rope = _latent_kv(x, p, positions=positions, theta=theta, eps=norm_eps)
+    k, v = _expand_kv(c_kv, k_rope, p, n_heads=n_heads, hd=hd)
+    # Pad V to the QK head dim so the attention core sees uniform shapes,
+    # then slice back (value dim hd < qk dim hd+rd).
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, rd)))
+    out = kops.flash_attention(
+        q, k, v_pad, causal=True, window=window, impl=impl, unroll=unroll
+    )
+    out = out[..., :hd].reshape(b, s, n_heads * hd) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+def mla_decode_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    position: jax.Array,
+    ckv_cache: jax.Array,
+    krope_cache: jax.Array,
+    cache_len: jax.Array,
+    write_index: jax.Array,
+    *,
+    n_heads: int,
+    head_dim: int,
+    rope_head_dim: int,
+    theta: float,
+    norm_eps: float,
+    impl: str = "ref",
+    cache_update: str = "scatter",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token MLA decode against the latent cache.
+
+    x: (B, D); ckv_cache: (B, T, kv_lora); krope_cache: (B, T, rd).
+    The latent is up-projected to per-head K/V for the attention core —
+    the memory win is in the cache, not the per-step compute."""
+    b, d = x.shape
+    hd, rd = head_dim, rope_head_dim
+    pos = position[:, None]
+    q = _project_q(
+        x[:, None, :], p, n_heads=n_heads, hd=hd, rd=rd,
+        positions=pos, theta=theta, eps=norm_eps,
+    )  # (B,1,H,hd+rd)
+    c_kv, k_rope = _latent_kv(
+        x[:, None, :], p, positions=pos, theta=theta, eps=norm_eps
+    )
+    ckv_cache = cache_write(ckv_cache, c_kv[:, 0], write_index, cache_update)
+    krope_cache = cache_write(
+        krope_cache, k_rope[:, 0], write_index, cache_update
+    )
+    k, v = _expand_kv(
+        ckv_cache, krope_cache, p, n_heads=n_heads, hd=hd
+    )  # (B,T,H,hd+rd), (B,T,H,hd)
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, rd)))
+    out = kops.decode_attention(q[:, 0], k, v_pad, cache_len, impl=impl)
+    out = out[..., :hd].reshape(b, n_heads * hd) @ p["wo"]
+    return out, (ckv_cache, krope_cache)

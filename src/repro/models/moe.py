@@ -1,0 +1,236 @@
+"""Mixture-of-Experts FFN (Qwen3-MoE / DeepSeek-V2 style).
+
+Three dispatch strategies:
+
+* ``scan``   — lax.scan over experts with masked accumulation.  Memory-light
+  and trivially shardable, but HLO FLOPs scale with n_experts instead of
+  top_k (every expert touches every token).  Used for smoke tests and as
+  the conservative lowering fallback.  Dropless.
+* ``sorted`` — sort token-replicas by expert id and run a grouped matmul
+  (the ``moe_gmm`` kernel / its jnp oracle), then scatter back.  HLO FLOPs
+  ∝ top_k.  Dropless.  Under GSPMD the *global* argsort/gather generate
+  enormous resharding collectives (the §Perf baseline finding) — fine on
+  one device, pathological on a 256-chip mesh.
+* ``ep``     — expert-parallel via ``shard_map`` (the §Perf optimized
+  path): activations stay replicated across the ``model`` axis, each
+  model shard sorts *locally* for its own E/|model| experts with a fixed
+  capacity (GShard-style drops beyond ``capacity_factor``), runs the
+  grouped matmul on local expert weights, and a single psum over
+  ``model`` combines — collective cost identical to one row-parallel
+  matmul per layer instead of a global sort.
+
+Routing: softmax top-k with renormalisation over the selected experts
+(Qwen3/DeepSeek convention), plus optional always-on shared experts
+(DeepSeek-V2: 2 shared + 160 routed).  An auxiliary load-balance loss is
+returned for training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+
+def route(
+    x: jax.Array, router_w: jax.Array, top_k: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates (T, K) fp32, expert_idx (T, K) int32, aux_loss ())."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-style load-balance auxiliary loss.
+    n_e = router_w.shape[-1]
+    density = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], n_e, dtype=jnp.float32), axis=0
+    )
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = n_e * jnp.sum(density * mean_probs)
+    return gates, idx, aux
+
+
+def _expert_ffn(x: jax.Array, wg, wu, wd) -> jax.Array:
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def moe_ffn(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    *,
+    top_k: int,
+    dispatch: str = "sorted",
+    impl: str = "ref",
+    mesh: Optional[Mesh] = None,
+    capacity_factor: float = 1.5,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D).  Params:
+      router : (D, E)
+      wg, wu : (E, D, F)    wd : (E, F, D)
+      shared_wg/wu/wd (optional): (D, F*n_shared) / (F*n_shared, D)
+    Returns (y (B,S,D), aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+
+    if dispatch == "ep":
+        if mesh is None:
+            raise ValueError("dispatch='ep' requires a mesh")
+        y, aux = _moe_ep(
+            xt, p, top_k=top_k, mesh=mesh,
+            capacity_factor=capacity_factor, impl=impl,
+        )
+        return y.reshape(b, s, d).astype(x.dtype), aux
+
+    gates, idx, aux = route(xt, p["router"], top_k)
+    if dispatch == "scan":
+        y = _moe_scan(xt, p, gates, idx)
+    elif dispatch == "sorted":
+        y = _moe_sorted(xt, p, gates, idx, impl=impl)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+
+    if "shared_wg" in p:
+        y = y + _expert_ffn(xt, p["shared_wg"], p["shared_wu"], p["shared_wd"])
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_scan(xt, p, gates, idx) -> jax.Array:
+    n_e = p["router"].shape[-1]
+    # (T, E) combined gate for each expert (0 when not selected).
+    combine = jnp.zeros((xt.shape[0], n_e), dtype=jnp.float32)
+    combine = jax.vmap(
+        lambda c, i, g: c.at[i].add(g), in_axes=(0, 0, 0)
+    )(combine, idx, gates)
+
+    def body(acc, ew):
+        wg, wu, wd, gate_col = ew
+        out = _expert_ffn(xt, wg, wu, wd)
+        return acc + out * gate_col[:, None].astype(out.dtype), None
+
+    acc0 = jnp.zeros_like(xt)
+    gate_cols = jnp.moveaxis(combine, 1, 0)  # (E, T)
+    y, _ = jax.lax.scan(body, acc0, (p["wg"], p["wu"], p["wd"], gate_cols))
+    return y
+
+
+def _moe_ep(
+    xt: jax.Array,
+    p: Dict[str, jax.Array],
+    *,
+    top_k: int,
+    mesh: Mesh,
+    capacity_factor: float,
+    impl: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel dispatch (see module docstring).
+
+    Sharding contract: tokens over the data axes, experts over ``model``;
+    activations replicated across ``model`` (each model shard sees every
+    local token and contributes only its own experts' outputs, combined
+    by one psum — the same wire cost as a row-parallel matmul).
+    Overflow beyond ``capacity_factor × expected`` rows per shard is
+    dropped (GShard-style), biased toward high local expert ids; the
+    router's load-balance aux loss keeps drops rare in training.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    t_total, d = xt.shape
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = dp if t_total % dp_size == 0 else None
+    n_e = p["router"].shape[-1]
+    e_loc = n_e // mesh.shape["model"]
+    has_shared = "shared_wg" in p
+
+    def body(x_loc, router, wg, wu, wd, *shared):
+        t_loc = x_loc.shape[0]
+        cap = max(
+            top_k,
+            int(capacity_factor * t_loc * top_k * e_loc / n_e),
+        )
+        cap = min(cap, t_loc * top_k)
+        gates, idx, aux = route(x_loc, router, top_k)
+        midx = jax.lax.axis_index("model")
+        lo = midx * e_loc
+        flat_e = idx.reshape(-1)
+        flat_g = gates.reshape(-1)
+        # Local rows first (stable by local expert id); remote rows sort
+        # to the sentinel bucket e_loc.
+        local_e = flat_e - lo
+        key = jnp.where((local_e >= 0) & (local_e < e_loc), local_e, e_loc)
+        order = jnp.argsort(key, stable=True)
+        take = order[:cap]
+        e_sel = key[take]
+        valid = e_sel < e_loc
+        g_sel = flat_g[take] * valid
+        rows = take // top_k
+        x_sel = x_loc[rows]
+        # Overflow/sentinel rows ride along in the last expert's group
+        # with zero gate (harmless compute, no global effect).
+        sizes = jnp.bincount(jnp.minimum(e_sel, e_loc - 1), length=e_loc)
+        h = kops.moe_gmm(x_sel, wg, sizes, impl=impl)
+        u = kops.moe_gmm(x_sel, wu, sizes, impl=impl)
+        o = kops.moe_gmm(jax.nn.silu(h) * u, wd, sizes, impl=impl)
+        o = o * g_sel[:, None].astype(o.dtype)
+        y = jnp.zeros((t_loc, d), o.dtype).at[rows].add(o)
+        if shared:
+            # Shared experts are tensor-parallel over the same model axis:
+            # this shard computes a partial over its d_ff slice and the
+            # psum below completes the row-parallel sum.
+            swg, swu, swd = shared
+            y = y + _expert_ffn(x_loc, swg, swu, swd)
+        y = jax.lax.psum(y, "model")
+        aux = jax.lax.pmean(aux, "model")
+        aux = jax.lax.pmean(aux, dp) if tok_spec else aux
+        return y, jnp.reshape(aux, (1,))
+
+    shared_args = (
+        (p["shared_wg"], p["shared_wu"], p["shared_wd"]) if has_shared else ()
+    )
+    shared_specs = (
+        (P(None, "model"), P(None, "model"), P("model", None))
+        if has_shared
+        else ()
+    )
+    y, aux = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(tok_spec, None),            # tokens over data axes
+            P(None, None),                # router replicated
+            P("model", None, None),       # expert banks over model
+            P("model", None, None),
+            P("model", None, None),
+            *shared_specs,                # shared experts tensor-parallel
+        ),
+        out_specs=(P(tok_spec, None), P(None)),
+        check_vma=False,
+    )(xt, p["router"], p["wg"], p["wu"], p["wd"], *shared_args)
+    return y, aux[0]
+
+
+def _moe_sorted(xt, p, gates, idx, *, impl: str) -> jax.Array:
+    t, d = xt.shape
+    k = idx.shape[-1]
+    n_e = p["router"].shape[-1]
+    flat_idx = idx.reshape(-1)            # (T*K,)
+    flat_gates = gates.reshape(-1)        # (T*K,)
+    order = jnp.argsort(flat_idx)         # stable sort by expert
+    inv_order = jnp.argsort(order)
+    rows = jnp.repeat(jnp.arange(t), k)[order]
+    x_sorted = xt[rows]                   # (T*K, D)
+    group_sizes = jnp.bincount(flat_idx, length=n_e)
+    h = kops.moe_gmm(x_sorted, p["wg"], group_sizes, impl=impl)
+    u = kops.moe_gmm(x_sorted, p["wu"], group_sizes, impl=impl)
+    h = jax.nn.silu(h) * u
+    out_sorted = kops.moe_gmm(h, p["wd"], group_sizes, impl=impl)
+    out = out_sorted[inv_order] * flat_gates[:, None].astype(out_sorted.dtype)
+    y = jnp.zeros((t, d), dtype=out.dtype)
+    y = y.at[jnp.repeat(jnp.arange(t), k)].add(out)
+    return y

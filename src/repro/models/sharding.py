@@ -1,0 +1,198 @@
+"""Partition-spec rules: params / inputs / caches → PartitionSpec trees.
+
+Strategy (see DESIGN.md §5):
+* batch over the data axes (``pod`` × ``data`` when multi-pod),
+* tensor parallel over ``model`` on heads / d_ff / experts,
+* FSDP over ``data`` on the non-TP dim of every large matrix
+  (GSPMD inserts the per-layer all-gather / reduce-scatter schedule),
+* params replicated across pods (classic cross-pod DP: gradients
+  all-reduce over ``pod``; multi-pod dry-run proves the axis shards).
+
+Rules are name+shape driven so one function covers all seven families.
+Axis sizes must divide shapes; anything indivisible falls back to
+replication on that dim (checked per-dim here rather than failing in
+GSPMD).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+TP_AXIS = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axes(mesh: Mesh):
+    """FSDP spans every data-parallel axis: on the multi-pod mesh params
+    shard across pods too (ZeRO-3 over DCN), which is what lets the
+    llama3-405b-class training state fit — see EXPERIMENTS.md §Dry-run."""
+    return data_axes(mesh)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def _fit(mesh: Mesh, dim: int, axis) -> Optional[str]:
+    """Use ``axis`` on a dim only if it divides evenly."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _matrix_spec(
+    mesh: Mesh, shape, col_parallel: bool, lead: int, serve: bool = False
+) -> P:
+    """(in, out) weight: column-parallel shards out on TP / in on FSDP;
+    row-parallel the reverse.  ``lead`` leading dims (layer stack) unsharded.
+
+    ``serve=True`` flips the layout so the *contraction* dimension carries
+    the model axis on every matmul: with a single-token activation GSPMD
+    then materialises partial products + a small activation all-reduce
+    instead of all-gathering the (huge) weights each decode step — the
+    weight-stationary serving layout (§Perf P2)."""
+    d_in, d_out = shape[-2], shape[-1]
+    fsdp = fsdp_axes(mesh)
+    if serve:
+        # contract dim (d_in) over model; d_out over data to keep 2D.
+        spec = (_fit(mesh, d_in, TP_AXIS), _fit(mesh, d_out, fsdp))
+        return P(*([None] * lead), *spec)
+    if col_parallel:
+        spec = (_fit(mesh, d_in, fsdp), _fit(mesh, d_out, TP_AXIS))
+    else:
+        spec = (_fit(mesh, d_in, TP_AXIS), _fit(mesh, d_out, fsdp))
+    return P(*([None] * lead), *spec)
+
+
+def param_pspecs(mesh: Mesh, params: Pytree, cfg, serve: bool = False) -> Pytree:
+    """PartitionSpec tree matching ``params`` (abstract or concrete).
+    ``serve=True`` selects the weight-stationary decode layout."""
+
+    def rule(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        ndim = len(shape)
+        in_stack = "layers" in names or "encoder" in names
+        lead = 1 if in_stack else 0
+
+        fsdp = fsdp_axes(mesh)
+        if name == "embed":
+            return P(_fit(mesh, shape[0], TP_AXIS), _fit(mesh, shape[1], fsdp))
+        if name == "lm_head":
+            return P(_fit(mesh, shape[0], fsdp), _fit(mesh, shape[1], TP_AXIS))
+        if ndim - lead <= 1:  # norms, biases, gates
+            return P(*([None] * ndim))
+
+        # MoE expert banks: (..., E, d_in, d_out) — experts over TP,
+        # d_in over FSDP (expert-parallel).
+        if name in ("wg", "wu", "wd") and ndim - lead == 3:
+            e, d_in, d_out = shape[-3], shape[-2], shape[-1]
+            if name == "wd":
+                return P(
+                    *([None] * lead), _fit(mesh, e, TP_AXIS), None,
+                    _fit(mesh, d_out, fsdp),
+                )
+            return P(
+                *([None] * lead), _fit(mesh, e, TP_AXIS),
+                _fit(mesh, d_in, fsdp), None,
+            )
+        if name == "router":
+            return P(*([None] * lead), _fit(mesh, shape[-2], fsdp), None)
+
+        col_parallel_names = {
+            "wq", "wk", "wv", "wg", "wu",                      # attention/mlp in
+            "wq_a", "wq_b", "wkv_a", "wkv_b",                  # MLA
+            "w_in",                                            # SSM in-proj
+            "shared_wg", "shared_wu",                          # shared experts
+        }
+        row_parallel_names = {"wo", "wd", "w_out", "shared_wd"}
+
+        if name in col_parallel_names:
+            return _matrix_spec(mesh, shape, col_parallel=True, lead=lead,
+                                serve=serve)
+        if name in row_parallel_names:
+            return _matrix_spec(mesh, shape, col_parallel=False, lead=lead,
+                                serve=serve)
+        if name == "conv_w":
+            return P(*([None] * ndim))
+        # Fallback: replicate.
+        return P(*([None] * ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(path, leaf) for path, leaf in flat]
+    )
+
+
+def batch_pspecs(mesh: Mesh, batch: Pytree) -> Pytree:
+    dp = data_axes(mesh)
+
+    def rule(path, leaf) -> P:
+        b = leaf.shape[0] if leaf.ndim else 1
+        lead = _fit(mesh, b, dp)
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat]
+    )
+
+
+def cache_pspecs(mesh: Mesh, cache: Pytree) -> Pytree:
+    """Decode caches: (L, B, T, heads/latent...) — batch over data axes,
+    KV heads over TP when divisible."""
+    dp = data_axes(mesh)
+
+    def rule(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        if name == "pos":
+            return P(_fit(mesh, leaf.shape[0], dp))
+        if leaf.ndim >= 4 and name in ("k", "v", "shared_k", "shared_v",
+                                       "cross_k", "cross_v"):
+            # (L, B, T, KH, hd): batch over data, cache *sequence* over TP
+            # (KV heads are usually < |model|, so sharding T is what keeps
+            # the 2 TB decode_32k caches per-chip-sized; attention over the
+            # sharded T contracts with a partial-sum all-reduce).
+            spec = [None, _fit(mesh, leaf.shape[1], dp),
+                    _fit(mesh, leaf.shape[2], TP_AXIS)]
+            spec += [None] * (leaf.ndim - 3)
+            return P(*spec)
+        if name in ("ckv", "krope"):
+            # (L, B, T, latent)
+            return P(
+                None, _fit(mesh, leaf.shape[1], dp),
+                _fit(mesh, leaf.shape[2], TP_AXIS), None,
+            )
+        if name in ("conv", "ssm"):
+            # (L, B, ...) — SSM heads over TP on dim 2 when divisible.
+            spec = [None, _fit(mesh, leaf.shape[1], dp)]
+            if leaf.ndim > 2:
+                spec.append(_fit(mesh, leaf.shape[2], TP_AXIS))
+            spec += [None] * (leaf.ndim - len(spec))
+            return P(*spec)
+        return P(*([None] * leaf.ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat]
+    )
+
+
+def to_named(mesh: Mesh, pspecs: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

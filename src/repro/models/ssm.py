@@ -1,0 +1,128 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Projection layout follows the Mamba-2 reference: a single input projection
+produces [z | x | B | C | dt]; a depthwise causal conv runs over [x | B | C];
+the SSD scan computes the state-space recurrence per head; gating with
+silu(z) and an output projection close the block.
+
+Decode keeps two pieces of per-layer state:
+  conv_state : (B, conv_kernel-1, d_conv_in)   — causal conv tail
+  ssm_state  : (B, H, P, N)                     — SSD recurrent state
+so per-token decode cost is O(1) in sequence length (the reason the
+``long_500k`` shape is natural for this family).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _split_proj(zxbcdt, cfg):
+    di = cfg.d_inner
+    h, n = cfg.n_ssm_heads, cfg.ssm_state
+    g = cfg.ssm_groups
+    sizes = [di, di, g * n, g * n, h]
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [sizes[0], sizes[0] + sizes[1],
+                 sizes[0] + sizes[1] + sizes[2],
+                 sizes[0] + sizes[1] + sizes[2] + sizes[3]],
+        axis=-1,
+    )
+    return z, xs, b, c, dt
+
+
+def _conv_input(xs, b, c):
+    return jnp.concatenate([xs, b, c], axis=-1)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal 1-D conv.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + bias
+
+
+def mamba2_block(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg,
+    *,
+    initial_state: Optional[jax.Array] = None,
+    impl: str = "ref",
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba-2 block.  x: (B, S, D).
+    Returns (y (B,S,D), final ssm state (B,H,P,N))."""
+    bsz, s, _ = x.shape
+    h, pdim, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_groups
+    zxbcdt = x @ p["w_in"]
+    z, xs, b, c, dt = _split_proj(zxbcdt, cfg)
+    conv_in = _conv_input(xs, b, c)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    di = cfg.d_inner
+    xs = conv_out[..., :di]
+    b = conv_out[..., di : di + g * n].reshape(bsz, s, g, n)
+    c = conv_out[..., di + g * n :].reshape(bsz, s, g, n)
+    # Broadcast group-shared B/C to SSD heads.
+    b = jnp.repeat(b, h // g, axis=2)
+    c = jnp.repeat(c, h // g, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    xh = xs.reshape(bsz, s, h, pdim)
+    y, state = kops.ssd_scan(
+        xh, dt, a, b, c,
+        initial_state=initial_state, chunk=cfg.ssm_chunk, impl=impl,
+        unroll=unroll,
+    )
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    return (y @ p["w_out"]).astype(x.dtype), state
+
+
+def mamba2_decode(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg,
+    conv_state: jax.Array,
+    ssm_state: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x: (B, D).
+    conv_state: (B, K-1, conv_channels); ssm_state: (B, H, P, N).
+    Returns (y (B, D), new_conv_state, new_ssm_state)."""
+    bsz, _ = x.shape
+    h, pdim, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_groups
+    zxbcdt = x @ p["w_in"]
+    z, xs, b, c, dt = _split_proj(zxbcdt[:, None, :], cfg)
+    conv_in = _conv_input(xs, b, c)[:, 0]  # (B, C)
+    # Causal conv over [state ‖ new]: the last K positions.
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:]
+    di = cfg.d_inner
+    xs1 = conv_out[:, :di].reshape(bsz, h, pdim)
+    b1 = conv_out[:, di : di + g * n].reshape(bsz, g, n)
+    c1 = conv_out[:, di + g * n :].reshape(bsz, g, n)
+    b1 = jnp.repeat(b1, h // g, axis=1)
+    c1 = jnp.repeat(c1, h // g, axis=1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, new_ssm = kops.ssd_decode(xs1, dt1, a, b1, c1, ssm_state)
+    y = y + xs1 * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, di) * jax.nn.silu(z[:, 0])
+    return (y @ p["w_out"]).astype(x.dtype), new_conv_state, new_ssm
+
+
+def conv_channels(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state

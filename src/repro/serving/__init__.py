@@ -1,0 +1,8 @@
+from repro.serving.engine import (
+    ExecutionEngine,
+    HostedModel,
+    RequestResult,
+    ServingCluster,
+)
+
+__all__ = ["ExecutionEngine", "HostedModel", "RequestResult", "ServingCluster"]

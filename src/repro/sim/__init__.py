@@ -1,0 +1,15 @@
+from repro.sim.engine import JobRecord, SimResult, Simulation
+from repro.sim.workload import (
+    arrival_rate_timeline,
+    bursty_trace_workload,
+    poisson_workload,
+)
+
+__all__ = [
+    "JobRecord",
+    "SimResult",
+    "Simulation",
+    "arrival_rate_timeline",
+    "bursty_trace_workload",
+    "poisson_workload",
+]

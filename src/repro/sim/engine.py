@@ -1,0 +1,509 @@
+"""Event-driven cluster simulator (§5.4).
+
+Models the environment of §3 at the fidelity the paper describes: task
+arrival, queue waiting, model fetch (PCIe), task execution (one active GPU
+task per worker), task dispatch with network transfer of intermediate
+objects, and rate-limited SST dissemination.  Events are processed in
+simulated-time order (heap).  The paper validated its simulator within 5 %
+of the real 5-worker testbed; ours follows the same structure (Sparrow
+style) and uses the same profiled constants.
+
+Execution semantics (faithful to §3.2):
+* A worker's Task Dispatcher scans its execution queue in order and starts
+  the first task whose inputs are present and whose model is resident; a
+  task whose model is being fetched (or whose inputs are missing) is left
+  on the queue and the dispatcher proceeds to the next.
+* One model fetch (PCIe transfer) is in flight per worker at a time; it
+  overlaps with GPU execution of other tasks.
+* On task completion the scheduler's dynamic-adjustment hook runs for each
+  successor (Alg. 2), then outputs are shipped to the successors' workers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import random
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.core.memory import GpuMemoryManager
+from repro.core.netmodel import ClusterSpec
+from repro.core.profiles import ProfileRepository
+from repro.core.scheduler import (
+    NavigatorConfig,
+    Scheduler,
+    make_scheduler,
+)
+from repro.core.state import SharedStateTable
+from repro.core.types import ADFG, Job, MLModel
+
+
+# --------------------------------------------------------------------------
+# Per-job bookkeeping
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _TaskRun:
+    enqueued: bool = False
+    fetching: bool = False
+    was_miss: bool = False
+    started: Optional[float] = None
+    finished: Optional[float] = None
+    worker: Optional[int] = None
+
+
+class _JobState:
+    def __init__(self, job: Job, origin: int) -> None:
+        self.job = job
+        self.origin = origin
+        self.adfg: Optional[ADFG] = None
+        self.tasks: Dict[str, _TaskRun] = {
+            t: _TaskRun() for t in job.dfg.tasks
+        }
+        # task -> set of predecessors whose outputs have arrived at the
+        # task's assigned worker (external input counts via the sentinel "").
+        self.inputs_arrived: Dict[str, Set[str]] = {t: set() for t in job.dfg.tasks}
+        self.finish_time: Optional[float] = None
+
+    def inputs_ready(self, task_id: str) -> bool:
+        dfg = self.job.dfg
+        need = set(dfg.preds[task_id]) or {""}
+        return need <= self.inputs_arrived[task_id]
+
+    def done(self) -> bool:
+        return all(r.finished is not None for r in self.tasks.values())
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    dfg_name: str
+    arrival: float
+    finish: float
+    lower_bound: float
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def slowdown(self) -> float:
+        return self.latency / self.lower_bound if self.lower_bound > 0 else 1.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheduler: str
+    records: List[JobRecord]
+    horizon: float
+    n_workers: int
+    busy_time: Dict[int, float]
+    cache_hits: int
+    cache_misses: int
+    cache_evictions: int
+    bytes_fetched: float
+    sst_pushes: int
+    workers_used: Set[int]
+    adjustments: int = 0
+
+    # -- aggregates ------------------------------------------------------------
+    @property
+    def mean_latency(self) -> float:
+        return sum(r.latency for r in self.records) / max(1, len(self.records))
+
+    @property
+    def mean_slowdown(self) -> float:
+        return sum(r.slowdown for r in self.records) / max(1, len(self.records))
+
+    @property
+    def median_slowdown(self) -> float:
+        xs = sorted(r.slowdown for r in self.records)
+        if not xs:
+            return 0.0
+        n = len(xs)
+        return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+    def slowdowns_by_type(self) -> Dict[str, List[float]]:
+        out: Dict[str, List[float]] = {}
+        for r in self.records:
+            out.setdefault(r.dfg_name, []).append(r.slowdown)
+        return out
+
+    @property
+    def cache_hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 1.0
+
+    @property
+    def gpu_utilization(self) -> float:
+        if self.horizon <= 0:
+            return 0.0
+        return sum(self.busy_time.values()) / (self.horizon * self.n_workers)
+
+    def energy_joules(self, cluster: ClusterSpec) -> float:
+        busy = sum(self.busy_time.values())
+        idle = self.horizon * self.n_workers - busy
+        return busy * cluster.gpu_power_active_w + idle * cluster.gpu_power_idle_w
+
+    def percentile_latency(self, q: float) -> float:
+        xs = sorted(r.latency for r in self.records)
+        if not xs:
+            return 0.0
+        idx = min(len(xs) - 1, max(0, int(math.ceil(q * len(xs))) - 1))
+        return xs[idx]
+
+
+# --------------------------------------------------------------------------
+# Simulator
+# --------------------------------------------------------------------------
+class Simulation:
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        profiles: ProfileRepository,
+        models: Mapping[int, MLModel],
+        scheduler: str = "navigator",
+        navigator_config: Optional[NavigatorConfig] = None,
+        eviction_policy: str = GpuMemoryManager.LOOKAHEAD,
+        push_interval_s: float = 0.2,
+        cache_push_interval_s: Optional[float] = None,
+        runtime_noise_sigma: float = 0.25,
+        seed: int = 0,
+    ) -> None:
+        self.cluster = cluster
+        self.profiles = profiles
+        self.models = dict(models)
+        self.scheduler: Scheduler = make_scheduler(
+            scheduler, profiles, navigator_config
+        )
+        self.sst = SharedStateTable(
+            cluster.n_workers, push_interval_s, cache_push_interval_s
+        )
+        self.memories = [
+            GpuMemoryManager(
+                cluster.gpu_capacity_bytes,
+                self.models,
+                cluster.link,
+                policy=eviction_policy,
+                compression_ratio=cluster.compression_ratio,
+            )
+            for _ in cluster.workers()
+        ]
+        self.rng = random.Random(seed)
+        self.noise_sigma = runtime_noise_sigma
+
+        self._heap: List[Tuple[float, int, Tuple]] = []
+        self._seq = itertools.count()
+        self._now = 0.0
+        self._queues: List[List[Tuple[_JobState, str]]] = [
+            [] for _ in cluster.workers()
+        ]
+        self._gpu_busy: List[Optional[Tuple[_JobState, str]]] = [
+            None for _ in cluster.workers()
+        ]
+        self._fetch_busy: List[bool] = [False for _ in cluster.workers()]
+        self._busy_time: Dict[int, float] = {w: 0.0 for w in cluster.workers()}
+        self._records: List[JobRecord] = []
+        self._jobs_open = 0
+        self._workers_used: Set[int] = set()
+        self._adjustments = 0
+        for w in cluster.workers():
+            self.sst.update_cache(w, 0, cluster.gpu_capacity_bytes)
+            self.sst.push(w, 0.0)
+
+    # -- event plumbing ----------------------------------------------------------
+    def _post(self, t: float, kind: str, *payload) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), (kind, *payload)))
+
+    def _noisy(self, runtime: float) -> float:
+        if self.noise_sigma <= 0:
+            return runtime
+        return runtime * self.rng.lognormvariate(0.0, self.noise_sigma)
+
+    # -- public API ----------------------------------------------------------------
+    def run(self, jobs: Sequence[Job]) -> SimResult:
+        origin = itertools.cycle(self.cluster.workers())
+        for job in sorted(jobs, key=lambda j: j.arrival_time):
+            self._post(job.arrival_time, "arrival", job, next(origin))
+        # SST dissemination schedule (staggered per worker).
+        for w in self.cluster.workers():
+            offset = (w + 1) * self.sst.push_interval_s / max(
+                1, self.cluster.n_workers
+            )
+            self._post(offset, "sst_load", w)
+            offset_c = (w + 1) * self.sst.cache_push_interval_s / max(
+                1, self.cluster.n_workers
+            )
+            self._post(offset_c, "sst_cache", w)
+        self._jobs_open = len(jobs)
+
+        while self._heap and self._jobs_open > 0:
+            t, _, ev = heapq.heappop(self._heap)
+            self._now = t
+            kind = ev[0]
+            if kind == "arrival":
+                self._on_arrival(ev[1], ev[2])
+            elif kind == "enqueue":
+                self._on_enqueue(ev[1], ev[2], ev[3])
+            elif kind == "input":
+                self._on_input(ev[1], ev[2], ev[3], ev[4])
+            elif kind == "fetch_done":
+                self._on_fetch_done(ev[1])
+            elif kind == "task_done":
+                self._on_task_done(ev[1], ev[2], ev[3])
+            elif kind == "task_fetch_bookkeep":
+                self._on_fetch_bookkeep(ev[1], ev[2], ev[3])
+            elif kind == "sst_load":
+                self.sst.push_load(ev[1], t)
+                self._post(t + self.sst.push_interval_s, "sst_load", ev[1])
+            elif kind == "sst_cache":
+                self.sst.push_cache(ev[1], t)
+                self._post(
+                    t + self.sst.cache_push_interval_s, "sst_cache", ev[1]
+                )
+            else:  # pragma: no cover
+                raise AssertionError(f"unknown event {kind}")
+
+        mems = self.memories
+        return SimResult(
+            scheduler=self.scheduler.name,
+            records=self._records,
+            horizon=self._now,
+            n_workers=self.cluster.n_workers,
+            busy_time=self._busy_time,
+            cache_hits=sum(m.stats.hits for m in mems),
+            cache_misses=sum(m.stats.misses for m in mems),
+            cache_evictions=sum(m.stats.evictions for m in mems),
+            bytes_fetched=sum(m.stats.bytes_fetched for m in mems),
+            sst_pushes=self.sst.total_pushes,
+            workers_used=self._workers_used,
+            adjustments=self._adjustments,
+        )
+
+    # -- event handlers --------------------------------------------------------------
+    def _on_arrival(self, job: Job, origin: int) -> None:
+        js = _JobState(job, origin)
+        adfg = self.scheduler.plan(job, self._now, origin, self.sst.view(origin))
+        js.adfg = adfg
+        if adfg is None:
+            # JIT: entry tasks become ready immediately; pick workers now.
+            js.adfg = ADFG(job)
+            for tid in job.dfg.entry_tasks:
+                self._jit_assign(js, tid, {"": origin}, {"": job.dfg.tasks[tid].input_bytes})
+        else:
+            for tid in job.dfg.entry_tasks:
+                w = adfg[tid]
+                delay = 0.0
+                if w != origin:
+                    delay = self.profiles.td_input(job.dfg.tasks[tid])
+                self._post(self._now + delay, "input", js, tid, "", w)
+
+    def _jit_assign(
+        self,
+        js: _JobState,
+        task_id: str,
+        input_locations: Dict[str, int],
+        input_sizes: Dict[str, float],
+    ) -> None:
+        # Reader worker: where the (latest) input lives.
+        reader = next(iter(input_locations.values()))
+        w = self.scheduler.select_worker_at_ready(
+            js.job,
+            task_id,
+            self._now,
+            self.sst.view(reader),
+            input_locations,
+            input_sizes,
+            self_worker=reader,
+        )
+        assert js.adfg is not None
+        js.adfg[task_id] = w
+        # Ship all inputs to w.
+        delay = 0.0
+        for src, loc in input_locations.items():
+            if loc != w:
+                delay = max(
+                    delay,
+                    self.cluster.network.transfer_time(input_sizes[src]),
+                )
+        for src in input_locations:
+            self._post(self._now + delay, "input", js, task_id, src, w)
+
+    def _on_input(
+        self, js: _JobState, task_id: str, src: str, worker: int
+    ) -> None:
+        js.inputs_arrived[task_id].add(src)
+        run = js.tasks[task_id]
+        if not run.enqueued:
+            run.enqueued = True
+            run.worker = worker
+            self._queues[worker].append((js, task_id))
+            self._update_load(worker)
+        self._dispatch(worker)
+
+    def _on_fetch_done(self, worker: int) -> None:
+        self._fetch_busy[worker] = False
+        self._publish_cache(worker)
+        self._dispatch(worker)
+
+    def _on_task_done(self, js: _JobState, task_id: str, worker: int) -> None:
+        run = js.tasks[task_id]
+        run.finished = self._now
+        task = js.job.dfg.tasks[task_id]
+        if task.model_id is not None:
+            self.memories[worker].end_execution(task.model_id)
+            self._publish_cache(worker)
+        self._busy_time[worker] += self._now - (run.started or self._now)
+        self._gpu_busy[worker] = None
+        self._update_load(worker)
+        self._route_successors(js, task_id, worker)
+        if js.done():
+            js.finish_time = self._now
+            self._records.append(
+                JobRecord(
+                    job_id=js.job.job_id,
+                    dfg_name=js.job.dfg.name,
+                    arrival=js.job.arrival_time,
+                    finish=self._now,
+                    lower_bound=js.job.lower_bound(),
+                )
+            )
+            self._jobs_open -= 1
+        self._dispatch(worker)
+
+    # -- successor routing ---------------------------------------------------------
+    def _route_successors(self, js: _JobState, task_id: str, worker: int) -> None:
+        dfg = js.job.dfg
+        task = dfg.tasks[task_id]
+        adfg = js.adfg
+        assert adfg is not None
+        for succ in dfg.succs[task_id]:
+            if self.scheduler.plans_at_arrival:
+                if (
+                    self.scheduler.needs_adjustment
+                    and not dfg.is_join(succ)
+                ):
+                    new_w = self.scheduler.adjust(
+                        js.job,
+                        adfg,
+                        succ,
+                        self._now,
+                        self.sst.view(worker),
+                        worker,
+                        task.output_bytes,
+                    )
+                    if new_w != adfg[succ]:
+                        self._adjustments += 1
+                        adfg[succ] = new_w
+                w = adfg[succ]
+                delay = (
+                    0.0
+                    if w == worker
+                    else self.cluster.network.transfer_time(task.output_bytes)
+                )
+                self._post(self._now + delay, "input", js, succ, task_id, w)
+            else:
+                # JIT: assign when ALL predecessors have completed.
+                preds = dfg.preds[succ]
+                if all(js.tasks[p].finished is not None for p in preds):
+                    locs = {p: js.tasks[p].worker for p in preds}
+                    sizes = {p: dfg.tasks[p].output_bytes for p in preds}
+                    self._jit_assign(js, succ, locs, sizes)  # type: ignore[arg-type]
+
+    # -- dispatcher (§3.2) ------------------------------------------------------------
+    def _dispatch(self, worker: int) -> None:
+        if self._gpu_busy[worker] is not None:
+            # Still try to start a model fetch for a queued task.
+            self._maybe_prefetch(worker)
+            return
+        queue = self._queues[worker]
+        for idx, (js, tid) in enumerate(queue):
+            if not js.inputs_ready(tid):
+                continue
+            task = js.job.dfg.tasks[tid]
+            mem = self.memories[worker]
+            if task.model_id is not None and not mem.has(task.model_id):
+                if not self._fetch_busy[worker] and not js.tasks[tid].fetching:
+                    self._start_fetch(worker, js, tid)
+                continue  # leave on queue, proceed to next (paper §3.2)
+            # Start execution.
+            queue.pop(idx)
+            run = js.tasks[tid]
+            run.started = self._now
+            if task.model_id is not None:
+                if not run.was_miss:
+                    mem.stats.hits += 1  # model was already resident
+                upcoming = [
+                    js2.job.dfg.tasks[t2].model_id for js2, t2 in queue
+                ]
+                mem.begin_execution(task.model_id, upcoming)
+                self._publish_cache(worker)
+            self._gpu_busy[worker] = (js, tid)
+            self._workers_used.add(worker)
+            rt = self._noisy(self.profiles.runtime(task, worker))
+            self._post(self._now + rt, "task_done", js, tid, worker)
+            self._update_load(worker)
+            break
+        self._maybe_prefetch(worker)
+
+    def _maybe_prefetch(self, worker: int) -> None:
+        if self._fetch_busy[worker]:
+            return
+        for js, tid in self._queues[worker]:
+            task = js.job.dfg.tasks[tid]
+            if (
+                task.model_id is not None
+                and not self.memories[worker].has(task.model_id)
+                and not js.tasks[tid].fetching
+                and js.inputs_ready(tid)
+            ):
+                self._start_fetch(worker, js, tid)
+                return
+
+    def _start_fetch(self, worker: int, js: _JobState, tid: str) -> None:
+        task = js.job.dfg.tasks[tid]
+        assert task.model_id is not None
+        mem = self.memories[worker]
+        upcoming = [
+            js2.job.dfg.tasks[t2].model_id for js2, t2 in self._queues[worker]
+        ]
+        res = mem.ensure(task.model_id, upcoming)
+        if res is None:
+            return  # cannot evict enough right now; retry on next dispatch
+        fetch_s, _ = res
+        # Pin for the duration of the fetch so another task's eviction
+        # cannot displace the in-flight model; released by the bookkeeping
+        # event at fetch completion (execution re-pins at start).
+        mem.pin(task.model_id)
+        js.tasks[tid].fetching = True
+        js.tasks[tid].was_miss = True
+        self._fetch_busy[worker] = True
+        self._publish_cache(worker)
+        self._post(self._now + fetch_s, "task_fetch_bookkeep", js, tid, worker)
+        self._post(self._now + fetch_s, "fetch_done", worker)
+
+    def _on_fetch_bookkeep(self, js: _JobState, tid: str, worker: int) -> None:
+        js.tasks[tid].fetching = False
+        task = js.job.dfg.tasks[tid]
+        if task.model_id is not None:
+            self.memories[worker].unpin(task.model_id)
+
+    # -- state publication ---------------------------------------------------------
+    def _update_load(self, worker: int) -> None:
+        """Recompute FT(w) = now + remaining work on the queue (§4.1)."""
+        ft = self._now
+        busy = self._gpu_busy[worker]
+        if busy is not None:
+            js, tid = busy
+            task = js.job.dfg.tasks[tid]
+            # remaining = expected runtime (we don't know the noise draw)
+            elapsed = self._now - (js.tasks[tid].started or self._now)
+            ft += max(0.0, self.profiles.runtime(task, worker) - elapsed)
+        for js, tid in self._queues[worker]:
+            ft += self.profiles.runtime(js.job.dfg.tasks[tid], worker)
+        self.sst.update_load(worker, ft)
+
+    def _publish_cache(self, worker: int) -> None:
+        mem = self.memories[worker]
+        self.sst.update_cache(worker, mem.bitmap, mem.free_bytes)

@@ -1,0 +1,14 @@
+from repro.training import checkpoint, optimizer
+from repro.training.train import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "checkpoint",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+    "optimizer",
+]

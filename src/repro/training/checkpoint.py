@@ -1,0 +1,67 @@
+"""Minimal dependency-free checkpointing: pytree → .npz + JSON manifest.
+
+Leaves are addressed by their tree path; restore validates structure and
+shapes.  (The offline container has no orbax; this implements the same
+contract at laptop scale and round-trips optimizer state + params + step.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Pytree, metadata: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    np.savez(path + ".npz", **leaves)
+    manifest = {
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in leaves.items()
+        },
+        "metadata": metadata or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, template: Pytree) -> Tuple[Pytree, Dict]:
+    """Restore into the structure of ``template`` (shapes validated)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    expected = _flatten_with_paths(template)
+    for key, leaf in expected.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if tuple(data[key].shape) != leaf.shape:
+            raise ValueError(
+                f"shape mismatch for {key!r}: checkpoint "
+                f"{data[key].shape} vs template {leaf.shape}"
+            )
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    restored = []
+    for path_keys, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys
+        )
+        restored.append(data[key].astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), restored
+    ), manifest["metadata"]

@@ -1,0 +1,211 @@
+"""Distributed train-step factory (pjit / GSPMD).
+
+``make_train_step`` builds a jitted (params, opt_state, batch) → (params,
+opt_state, metrics) function with explicit in/out shardings from
+``models.sharding`` and donated carry buffers.  The same factory serves
+the real trainer (examples/train_small.py) and the multi-pod dry-run
+(lowered with ShapeDtypeStructs, never allocated).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import next_token_loss
+from repro.models.config import ModelConfig
+from repro.models.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    data_axes,
+    param_pspecs,
+    to_named,
+)
+from repro.training import optimizer as opt
+
+Pytree = Any
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    opt_cfg: Optional[opt.AdamWConfig] = None,
+    *,
+    impl: str = "ref",
+    moe_dispatch: str = "sorted",
+    remat: bool = True,
+    donate: bool = True,
+    accum_steps: int = 1,
+    unroll: bool = False,
+):
+    """Returns (step_fn, jit_step factory).  ``accum_steps`` splits the
+    global batch into microbatches accumulated with lax.scan — the lever
+    that makes 100B+-param training fit a pod (activation memory scales
+    with the microbatch, not the global batch)."""
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+
+    loss_fn = functools.partial(
+        next_token_loss, cfg=cfg, impl=impl, moe_dispatch=moe_dispatch,
+        unroll=unroll, mesh=mesh if moe_dispatch == "ep" else None,
+    )
+    if remat:
+        loss_fn = jax.checkpoint(
+            loss_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        new_params, new_state, metrics = opt.apply(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    def shardings_for(params_tree, opt_tree, batch_tree):
+        p_spec = param_pspecs(mesh, params_tree, cfg)
+        o_spec = opt.AdamWState(
+            step=P(),
+            m=p_spec,
+            v=p_spec,
+        )
+        b_spec = batch_pspecs(mesh, batch_tree)
+        return p_spec, o_spec, b_spec
+
+    def jit_step(params_tree, opt_tree, batch_tree):
+        p_spec, o_spec, b_spec = shardings_for(params_tree, opt_tree, batch_tree)
+        metric_spec = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return jax.jit(
+            step,
+            in_shardings=(
+                to_named(mesh, p_spec),
+                to_named(mesh, o_spec),
+                to_named(mesh, b_spec),
+            ),
+            out_shardings=(
+                to_named(mesh, p_spec),
+                to_named(mesh, o_spec),
+                to_named(mesh, metric_spec),
+            ),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    return step, jit_step
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    impl: str = "ref",
+    moe_dispatch: str = "sorted",
+    donate: bool = True,
+    unroll: bool = False,
+    cache_update: str = "scatter",
+    serve_layout: bool = False,
+):
+    """One-token decode step factory: (params, cache, tokens) →
+    (logits, cache), sharded for the mesh.  ``serve_layout`` selects the
+    weight-stationary param sharding (§Perf P2)."""
+    from repro.models import decode_step
+
+    def step(params, cache, tokens):
+        return decode_step(
+            params, cache, tokens, cfg, impl=impl,
+            moe_dispatch=moe_dispatch, unroll=unroll,
+            mesh=mesh if moe_dispatch == "ep" else None,
+            cache_update=cache_update,
+        )
+
+    def jit_step(params_tree, cache_tree, tokens_tree):
+        p_spec = param_pspecs(mesh, params_tree, cfg, serve=serve_layout)
+        c_spec = cache_pspecs(mesh, cache_tree)
+        dp = data_axes(mesh)
+        b = tokens_tree.shape[0]
+        t_spec = P(dp if b % _dp_size(mesh) == 0 else None)
+        logits_spec = P(
+            dp if b % _dp_size(mesh) == 0 else None, None
+        )
+        return jax.jit(
+            step,
+            in_shardings=(
+                to_named(mesh, p_spec),
+                to_named(mesh, c_spec),
+                NamedSharding(mesh, t_spec),
+            ),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec),
+                to_named(mesh, c_spec),
+            ),
+            donate_argnums=(1,) if donate else (),
+        )
+
+    return step, jit_step
+
+
+def make_prefill_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    impl: str = "ref",
+    moe_dispatch: str = "sorted",
+    unroll: bool = False,
+):
+    """Full-sequence forward (inference prefill): (params, batch) → logits."""
+    from repro.models import forward
+
+    def step(params, batch):
+        logits, _ = forward(
+            params, batch, cfg, impl=impl, moe_dispatch=moe_dispatch,
+            unroll=unroll, mesh=mesh if moe_dispatch == "ep" else None,
+        )
+        return logits
+
+    def jit_step(params_tree, batch_tree):
+        p_spec = param_pspecs(mesh, params_tree, cfg)
+        b_spec = batch_pspecs(mesh, batch_tree)
+        dp = data_axes(mesh)
+        b = batch_tree["tokens"].shape[0]
+        out_spec = P(dp if b % _dp_size(mesh) == 0 else None, None, None)
+        return jax.jit(
+            step,
+            in_shardings=(to_named(mesh, p_spec), to_named(mesh, b_spec)),
+            out_shardings=NamedSharding(mesh, out_spec),
+        )
+
+    return step, jit_step
+
+
+def _dp_size(mesh: Mesh) -> int:
+    import numpy as np
+
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

@@ -1,0 +1,21 @@
+from repro.workflows.paper_pipelines import (
+    DFG_MIX,
+    MODELS,
+    MODEL_SPECS,
+    image_caption_dfg,
+    paper_dfgs,
+    perception_dfg,
+    translation_dfg,
+    vpa_dfg,
+)
+
+__all__ = [
+    "DFG_MIX",
+    "MODELS",
+    "MODEL_SPECS",
+    "image_caption_dfg",
+    "paper_dfgs",
+    "perception_dfg",
+    "translation_dfg",
+    "vpa_dfg",
+]

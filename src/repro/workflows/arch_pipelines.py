@@ -1,0 +1,111 @@
+"""Serving DFGs whose vertices are the assigned architectures.
+
+This closes the loop between the two halves of the repo: Navigator
+schedules *workflows of models*, and the assigned-architecture zoo
+provides the models.  Each pipeline mirrors a realistic multi-model
+serving pattern; profiles (runtime, model bytes) derive from the configs
+so the scheduler sees the real size/compute asymmetries (e.g. the MoE
+model is huge to cache but cheap to run — exactly the regime where
+Navigator's cache-aware placement matters most; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs import ARCHS
+from repro.core.types import DFG, MB, MLModel, TaskSpec
+
+# model-id assignments within the SST's 0..63 space
+ARCH_MODEL_IDS: Dict[str, int] = {
+    name: i for i, name in enumerate(sorted(ARCHS))
+}
+
+# TPU-serving runtime estimate: ~2·N_active·D / (utilized flops);
+# coarse but keeps relative magnitudes right for the scheduler.
+_UTILIZED_FLOPS = 0.4 * 197e12
+
+
+def _serve_runtime_s(arch: str, tokens: int = 256) -> float:
+    cfg = ARCHS[arch]
+    n = cfg.param_count(active_only=cfg.arch_type == "moe")
+    return max(2.0 * n * tokens / _UTILIZED_FLOPS, 1e-3)
+
+
+def arch_models() -> Dict[int, MLModel]:
+    out = {}
+    for name, mid in ARCH_MODEL_IDS.items():
+        cfg = ARCHS[name]
+        out[mid] = MLModel(mid, name, float(cfg.param_count() * 2))  # bf16
+    return out
+
+
+def _task(tid: str, arch: str, tokens: int = 256, out_mb: float = 0.05,
+          in_mb: float = 0.05) -> TaskSpec:
+    return TaskSpec(
+        tid,
+        _serve_runtime_s(arch, tokens),
+        model_id=ARCH_MODEL_IDS[arch],
+        output_bytes=out_mb * MB,
+        input_bytes=in_mb * MB,
+    )
+
+
+def speculative_pipeline() -> DFG:
+    """Draft (mamba2, O(1)-state) → verify (llama3) → safety (nemo)."""
+    return DFG(
+        "spec_decode",
+        tasks=[
+            _task("draft", "mamba2-780m", tokens=512),
+            _task("verify", "llama3-405b", tokens=64),
+            _task("safety", "mistral-nemo-12b", tokens=64),
+        ],
+        edges=[("draft", "verify"), ("verify", "safety")],
+    )
+
+
+def multimodal_pipeline() -> DFG:
+    """Transcribe (whisper) ∥ perceive (qwen2-vl) → reason (deepseek MoE)."""
+    return DFG(
+        "multimodal_assist",
+        tasks=[
+            _task("transcribe", "whisper-medium", tokens=128, in_mb=2.0),
+            _task("perceive", "qwen2-vl-72b", tokens=256, in_mb=4.0),
+            _task("reason", "deepseek-v2-236b", tokens=256),
+        ],
+        edges=[("transcribe", "reason"), ("perceive", "reason")],
+    )
+
+
+def code_pipeline() -> DFG:
+    """Route (qwen3 MoE) → generate (granite code) → review (mistral-large)."""
+    return DFG(
+        "code_assist",
+        tasks=[
+            _task("route", "qwen3-moe-30b-a3b", tokens=64),
+            _task("generate", "granite-20b", tokens=512),
+            _task("review", "mistral-large-123b", tokens=256),
+        ],
+        edges=[("route", "generate"), ("generate", "review")],
+    )
+
+
+def longdoc_pipeline() -> DFG:
+    """Skim (zamba2 hybrid, long-context) → answer (mistral-large)."""
+    return DFG(
+        "longdoc_qa",
+        tasks=[
+            _task("skim", "zamba2-7b", tokens=2048, in_mb=8.0),
+            _task("answer", "mistral-large-123b", tokens=256),
+        ],
+        edges=[("skim", "answer")],
+    )
+
+
+def arch_dfgs() -> List[DFG]:
+    return [
+        speculative_pipeline(),
+        multimodal_pipeline(),
+        code_pipeline(),
+        longdoc_pipeline(),
+    ]

@@ -1,0 +1,68 @@
+"""Assigned-architecture serving pipelines under the Navigator scheduler
+(closing the loop between the paper's scheduler and the model zoo)."""
+
+import pytest
+
+from repro.core import GB, ProfileRepository
+from repro.core.netmodel import AcceleratorLink, ClusterSpec, NetworkModel
+from repro.sim import Simulation, poisson_workload
+from repro.workflows.arch_pipelines import (
+    ARCH_MODEL_IDS,
+    arch_dfgs,
+    arch_models,
+)
+
+
+@pytest.fixture
+def pod_cluster():
+    # 8 serving pods as Navigator workers; fetch link ≈ DCN weight load.
+    return ClusterSpec(
+        n_workers=8,
+        gpu_capacity_bytes=4096 * GB,
+        link=AcceleratorLink(bandwidth_bytes_per_s=100 * GB, delta_s=0.5),
+        network=NetworkModel(bandwidth_bytes_per_s=50 * GB, delta_s=1e-4),
+        compression_ratio=1.0,
+    )
+
+
+def test_model_ids_fit_sst_bitmap():
+    assert all(0 <= mid <= 63 for mid in ARCH_MODEL_IDS.values())
+    assert len(set(ARCH_MODEL_IDS.values())) == 10
+
+
+def test_model_sizes_reflect_param_counts():
+    models = arch_models()
+    by_name = {m.name: m for m in models.values()}
+    assert by_name["llama3-405b"].size_bytes > by_name["mamba2-780m"].size_bytes * 100
+
+
+def test_pipelines_schedule_and_complete(pod_cluster):
+    models = arch_models()
+    dfgs = arch_dfgs()
+    profiles = ProfileRepository(pod_cluster, models)
+    for d in dfgs:
+        profiles.register(d)
+    jobs = poisson_workload(dfgs, 1.0, 120.0, seed=5)
+    res = Simulation(
+        pod_cluster, profiles, models, scheduler="navigator", seed=1
+    ).run(jobs)
+    assert len(res.records) == len(jobs)
+    assert res.cache_hit_rate > 0.8
+
+
+def test_navigator_beats_hash_on_arch_pipelines(pod_cluster):
+    """The paper's value proposition carries to pod-scale model serving:
+    cache-aware placement wins when 'models' are multi-hundred-GB shards."""
+    models = arch_models()
+    dfgs = arch_dfgs()
+    out = {}
+    for sched in ["navigator", "hash"]:
+        profiles = ProfileRepository(pod_cluster, models)
+        for d in dfgs:
+            profiles.register(d)
+        jobs = poisson_workload(dfgs, 1.2, 300.0, seed=5)
+        out[sched] = Simulation(
+            pod_cluster, profiles, models, scheduler=sched, seed=1
+        ).run(jobs)
+    assert out["navigator"].mean_slowdown < out["hash"].mean_slowdown
+    assert out["navigator"].cache_hit_rate > out["hash"].cache_hit_rate

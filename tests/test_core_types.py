@@ -1,0 +1,122 @@
+"""Unit tests for DFG/ADFG types, bitmaps, ranking and the profile repo."""
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    DFG,
+    GB,
+    MB,
+    MLModel,
+    ProfileRepository,
+    TaskSpec,
+)
+from repro.core import bitmaps
+from repro.workflows import MODELS, paper_dfgs, translation_dfg
+
+
+def test_dfg_structure():
+    dfg = translation_dfg()
+    assert dfg.entry_tasks == ["opt_ingest"]
+    assert dfg.exit_tasks == ["aggregate"]
+    assert dfg.is_join("aggregate")
+    assert not dfg.is_join("mt5_zh")
+    assert set(dfg.model_ids()) == {0, 1, 2}
+
+
+def test_dfg_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        DFG(
+            "bad",
+            tasks=[TaskSpec("a", 1.0), TaskSpec("b", 1.0)],
+            edges=[("a", "b"), ("b", "a")],
+        )
+
+
+def test_dfg_unknown_edge():
+    with pytest.raises(ValueError, match="unknown task"):
+        DFG("bad", tasks=[TaskSpec("a", 1.0)], edges=[("a", "zz")])
+
+
+def test_lower_bound_is_critical_path():
+    dfg = translation_dfg()
+    t = dfg.tasks
+    expected = (
+        t["opt_ingest"].runtime_s
+        + max(
+            t["marian_fr"].runtime_s,
+            t["mt5_zh"].runtime_s,
+            t["mt5_ja"].runtime_s,
+        )
+        + t["aggregate"].runtime_s
+    )
+    assert dfg.lower_bound_latency() == pytest.approx(expected)
+
+
+def test_model_id_space_bounds():
+    with pytest.raises(ValueError):
+        MLModel(model_id=64, name="too-big", size_bytes=1.0)
+    with pytest.raises(ValueError):
+        MLModel(model_id=-1, name="neg", size_bytes=1.0)
+
+
+def test_bitmap_roundtrip():
+    ids = [0, 3, 17, 63]
+    bm = bitmaps.pack(ids)
+    assert bitmaps.unpack(bm) == ids
+    assert bitmaps.contains(bm, 17)
+    assert not bitmaps.contains(bm, 18)
+    bm2 = bitmaps.remove(bm, 3)
+    assert bitmaps.unpack(bm2) == [0, 17, 63]
+    assert bitmaps.popcount(bm) == 4
+
+
+def test_ranks_decrease_along_edges():
+    """Eq. 1: a task's rank strictly exceeds every successor's rank."""
+    cluster = ClusterSpec()
+    profiles = ProfileRepository(cluster, MODELS)
+    for dfg in paper_dfgs():
+        profiles.register(dfg)
+        ranks = profiles.ranks(dfg)
+        for u, v in dfg.edges:
+            assert ranks[u] > ranks[v]
+
+
+def test_rank_order_respects_dependencies():
+    cluster = ClusterSpec()
+    profiles = ProfileRepository(cluster, MODELS)
+    for dfg in paper_dfgs():
+        profiles.register(dfg)
+        order = profiles.rank_order(dfg)
+        pos = {t: i for i, t in enumerate(order)}
+        for u, v in dfg.edges:
+            assert pos[u] < pos[v]
+
+
+def test_profile_rejects_unknown_model():
+    cluster = ClusterSpec()
+    profiles = ProfileRepository(cluster, {})
+    with pytest.raises(KeyError):
+        profiles.register(translation_dfg())
+
+
+def test_heterogeneous_runtime():
+    cluster = ClusterSpec(n_workers=2, worker_speed={0: 1.0, 1: 2.0})
+    profiles = ProfileRepository(cluster, MODELS)
+    task = TaskSpec("t", 1.0, model_id=0)
+    assert profiles.runtime(task, 0) == pytest.approx(1.0)
+    assert profiles.runtime(task, 1) == pytest.approx(0.5)
+    assert profiles.mean_runtime(task) == pytest.approx(0.75)
+
+
+def test_transfer_models():
+    cluster = ClusterSpec()
+    net = cluster.network
+    assert net.transfer_time(0) == 0.0
+    t1 = net.transfer_time(1 * MB)
+    t2 = net.transfer_time(2 * MB)
+    assert t2 > t1 > net.delta_s
+    link = cluster.link
+    assert link.fetch_time(4 * GB) == pytest.approx(
+        4 * GB / link.bandwidth_bytes_per_s + link.delta_s
+    )

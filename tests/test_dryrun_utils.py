@@ -1,0 +1,90 @@
+"""Dry-run machinery: HLO collective parsing, input specs, skip rules.
+(The full lower+compile path is exercised by `python -m repro.launch.dryrun`;
+these tests cover the pure-python pieces without forcing 512 devices.)"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch.dryrun import _shape_bytes, parse_collective_bytes
+from repro.launch.specs import batch_specs, build_case, skip_reason
+from repro.models.config import INPUT_SHAPES
+
+
+HLO = """
+HloModule test
+  %x = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%sum
+  %rs.1 = bf16[16,256]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%p, %q)
+  %cp = u32[4]{0} collective-permute(%r), source_target_pairs={{0,1}}
+  %ag2 = bf16[10]{0} all-gather-start(%x)
+  %agd = bf16[10]{0} all-gather-done(%ag2)
+  %mm = f32[10,10]{1,0} dot(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert _shape_bytes("f32[64]{0}") == 256
+    assert _shape_bytes("(f32[8,8]{1,0}, f32[8,8]{1,0})") == 2 * 64 * 4
+    assert _shape_bytes("token[]") == 0
+
+
+def test_parse_collectives():
+    got = parse_collective_bytes(HLO)
+    assert got["all-gather"] == 2048 * 256 * 2 + 10 * 2  # incl. -start
+    assert got["all-reduce"] == 64 * 4
+    assert got["reduce-scatter"] == 16 * 256 * 2
+    assert got["all-to-all"] == 2 * 8 * 8 * 4
+    assert got["collective-permute"] == 4 * 4
+    assert got["count"] == 6  # -done not double counted
+
+
+def test_skip_rules():
+    assert skip_reason(ARCHS["whisper-medium"], INPUT_SHAPES["long_500k"])
+    assert not skip_reason(ARCHS["whisper-medium"], INPUT_SHAPES["decode_32k"])
+    assert not skip_reason(ARCHS["llama3-405b"], INPUT_SHAPES["long_500k"])
+    n_skipped = sum(
+        bool(skip_reason(cfg, sh))
+        for cfg in ARCHS.values()
+        for sh in INPUT_SHAPES.values()
+    )
+    assert n_skipped == 1  # exactly the documented whisper long_500k
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_build_case_shapes(arch, shape):
+    cfg = ARCHS[arch]
+    sh = INPUT_SHAPES[shape]
+    if skip_reason(cfg, sh):
+        with pytest.raises(ValueError, match="skipped"):
+            build_case(cfg, sh)
+        return
+    case = build_case(cfg, sh)
+    assert case["kind"] == sh.kind
+    if sh.kind in ("train", "prefill"):
+        assert case["batch"]["tokens"].shape == (sh.global_batch, sh.seq_len)
+        if cfg.arch_type == "vlm":
+            assert "vision_embeds" in case["batch"]
+        if cfg.arch_type == "audio":
+            assert "audio_frames" in case["batch"]
+    else:
+        assert case["tokens"].shape == (sh.global_batch,)
+        # decode caches exist and are abstract (no allocation)
+        leaves = jax.tree.leaves(case["cache"])
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        if shape == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm"):
+            # windowed: cache time dim == window, not 524288
+            big = max(l.shape[2] for l in leaves if len(l.shape) > 2)
+            assert big <= 8192
+
+
+def test_train_batch_divisible_for_accum():
+    from repro.launch.specs import TRAIN_ACCUM
+
+    for arch, accum in TRAIN_ACCUM.items():
+        assert INPUT_SHAPES["train_4k"].global_batch % accum == 0, arch

@@ -1,0 +1,249 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle across
+shape/dtype sweeps, plus hypothesis property tests on the oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.key(key), shape) * scale).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kh,d,causal,window",
+    [
+        (1, 128, 4, 4, 64, True, None),     # MHA, aligned
+        (2, 200, 8, 2, 64, True, None),     # GQA, ragged seq
+        (2, 96, 8, 1, 32, True, None),      # MQA
+        (1, 256, 4, 2, 128, False, None),   # bidirectional (encoder)
+        (2, 160, 4, 4, 64, True, 64),       # sliding window
+        (1, 64, 2, 2, 8, True, None),       # tiny head dim
+    ],
+)
+def test_flash_attention_matches_oracle(b, s, h, kh, d, causal, window, dtype):
+    q = rnd(1, (b, s, h, d), dtype)
+    k = rnd(2, (b, s, kh, d), dtype)
+    v = rnd(3, (b, s, kh, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=64, block_k=64, interpret=True,
+    )
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_flash_attention_q_offset():
+    """A 1-row query block attending into longer history == decode."""
+    b, h, d, t = 2, 4, 32, 96
+    q = rnd(1, (b, 1, h, d))
+    k = rnd(2, (b, t, h, d))
+    v = rnd(3, (b, t, h, d))
+    out = flash_attention(
+        q, k, v, causal=True, q_offset=t - 1, block_k=32, interpret=True
+    )
+    expect = ref.attention_ref(q, k, v, causal=True, q_offset=t - 1)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,d,t,block_k",
+    [
+        (1, 4, 4, 64, 128, 64),
+        (2, 8, 2, 64, 300, 128),
+        (4, 8, 1, 32, 64, 32),
+        (2, 16, 8, 128, 512, 256),
+    ],
+)
+def test_decode_attention_matches_oracle(b, h, kh, d, t, block_k, dtype):
+    q = rnd(4, (b, h, d), dtype)
+    kc = rnd(5, (b, t, kh, d), dtype)
+    vc = rnd(6, (b, t, kh, d), dtype)
+    lens = jnp.asarray(
+        np.random.RandomState(0).randint(1, t + 1, size=(b,)), jnp.int32
+    )
+    out = decode_attention(q, kc, vc, lens, block_k=block_k, interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_decode_attention_len_one():
+    """Degenerate cache of a single valid entry == that entry's value."""
+    b, h, d, t = 1, 2, 16, 64
+    q = rnd(7, (b, h, d))
+    kc = rnd(8, (b, t, h, d))
+    vc = rnd(9, (b, t, h, d))
+    lens = jnp.array([1], jnp.int32)
+    out = decode_attention(q, kc, vc, lens, block_k=32, interpret=True)
+    np.testing.assert_allclose(out[0], vc[0, 0], atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,t,h,p,n,chunk",
+    [
+        (1, 64, 2, 32, 16, 16),
+        (2, 100, 3, 32, 16, 32),   # ragged chunks
+        (1, 33, 1, 16, 8, 8),
+        (2, 128, 4, 64, 32, 64),
+    ],
+)
+def test_ssd_scan_matches_oracle(b, t, h, p, n, chunk):
+    x = rnd(1, (b, t, h, p), scale=0.5)
+    dt = jax.nn.softplus(rnd(2, (b, t, h)))
+    a = -jnp.exp(rnd(3, (h,), scale=0.3))
+    bb = rnd(4, (b, t, h, n), scale=0.5)
+    cc = rnd(5, (b, t, h, n), scale=0.5)
+    y, fs = ssd_scan(x, dt, a, bb, cc, chunk=chunk, interpret=True)
+    ye, fse = ref.ssd_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(y, ye, atol=5e-5, rtol=5e-4)
+    np.testing.assert_allclose(fs, fse, atol=5e-5, rtol=5e-4)
+
+
+def test_ssd_decode_consistent_with_scan():
+    """T sequential decode steps == one scan over T."""
+    b, t, h, p, n = 1, 24, 2, 16, 8
+    x = rnd(1, (b, t, h, p), scale=0.5)
+    dt = jax.nn.softplus(rnd(2, (b, t, h)))
+    a = -jnp.exp(rnd(3, (h,), scale=0.3))
+    bb = rnd(4, (b, t, h, n), scale=0.5)
+    cc = rnd(5, (b, t, h, n), scale=0.5)
+    y_scan, fs = ref.ssd_ref(x, dt, a, bb, cc)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for i in range(t):
+        yi, state = ref.ssd_decode_ref(
+            x[:, i], dt[:, i], a, bb[:, i], cc[:, i], state
+        )
+        ys.append(yi)
+    y_dec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_dec, y_scan, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(state, fs, atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "t,din,dout,e,block_t,block_n",
+    [
+        (50, 64, 48, 4, 16, 16),
+        (128, 32, 32, 8, 32, 32),
+        (17, 16, 64, 3, 8, 16),     # ragged everything
+        (64, 128, 96, 1, 64, 48),   # single expert == plain matmul
+    ],
+)
+def test_moe_gmm_matches_oracle(t, din, dout, e, block_t, block_n):
+    x = rnd(6, (t, din))
+    w = rnd(7, (e, din, dout))
+    rs = np.random.RandomState(e)
+    cuts = np.sort(rs.randint(0, t + 1, size=e - 1))
+    sizes = np.diff(np.concatenate([[0], cuts, [t]]))
+    gs = jnp.asarray(sizes, jnp.int32)
+    out = moe_gmm(x, w, gs, block_t=block_t, block_n=block_n, interpret=True)
+    expect = ref.moe_gmm_ref(x, w, gs)
+    np.testing.assert_allclose(out, expect, atol=2e-4, rtol=2e-4)
+
+
+def test_moe_gmm_empty_groups():
+    x = rnd(8, (20, 16))
+    w = rnd(9, (5, 16, 8))
+    gs = jnp.array([0, 20, 0, 0, 0], jnp.int32)
+    out = moe_gmm(x, w, gs, block_t=8, block_n=8, interpret=True)
+    np.testing.assert_allclose(out, x @ w[1], atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests on the oracles
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(2, 40),
+    h=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+)
+def test_attention_oracle_is_convex_combination(s, h, group):
+    """Attention output lies in the convex hull of V rows: max|out| ≤ max|V|."""
+    kh = h // group if h % group == 0 else h
+    q = rnd(10, (1, s, h, 16))
+    k = rnd(11, (1, s, kh, 16))
+    v = rnd(12, (1, s, kh, 16))
+    out = ref.attention_ref(q, k, v, causal=True)
+    assert jnp.max(jnp.abs(out)) <= jnp.max(jnp.abs(v)) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 32))
+def test_attention_first_token_is_v0(s):
+    """Causally, position 0 attends only to itself."""
+    q = rnd(13, (1, s, 2, 8))
+    k = rnd(14, (1, s, 2, 8))
+    v = rnd(15, (1, s, 2, 8))
+    out = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 30), scale=st.floats(0.1, 2.0))
+def test_ssd_oracle_linearity_in_x(t, scale):
+    """The SSD map is linear in x for fixed (dt, a, b, c)."""
+    b, h, p, n = 1, 1, 8, 4
+    x = rnd(16, (b, t, h, p))
+    dt = jax.nn.softplus(rnd(17, (b, t, h)))
+    a = -jnp.exp(rnd(18, (h,), scale=0.2))
+    bb = rnd(19, (b, t, h, n))
+    cc = rnd(20, (b, t, h, n))
+    y1, _ = ref.ssd_ref(x, dt, a, bb, cc)
+    y2, _ = ref.ssd_ref(x * scale, dt, a, bb, cc)
+    np.testing.assert_allclose(y2, y1 * scale, atol=1e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 50),
+    e=st.integers(1, 6),
+    seed=st.integers(0, 100),
+)
+def test_gmm_oracle_equals_blockwise_matmul(t, e, seed):
+    rs = np.random.RandomState(seed)
+    sizes = rs.multinomial(t, [1 / e] * e)
+    x = rnd(seed, (t, 8))
+    w = rnd(seed + 1, (e, 8, 4))
+    out = ref.moe_gmm_ref(x, w, jnp.asarray(sizes, jnp.int32))
+    start = 0
+    for ei, sz in enumerate(sizes):
+        if sz:
+            np.testing.assert_allclose(
+                out[start : start + sz], x[start : start + sz] @ w[ei],
+                atol=1e-5, rtol=1e-5,
+            )
+        start += sz

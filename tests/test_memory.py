@@ -1,0 +1,120 @@
+"""GPU memory manager: FIFO vs queue-lookahead eviction, execution memory,
+pinning, AVC accounting (§3.3, §5.3)."""
+
+import pytest
+
+from repro.core import AcceleratorLink, GB, GpuMemoryManager, MLModel
+
+
+def mk_models(sizes):
+    return {
+        i: MLModel(model_id=i, name=f"m{i}", size_bytes=s * GB)
+        for i, s in enumerate(sizes)
+    }
+
+
+def mk_mem(capacity_gb=10.0, sizes=(4, 4, 4, 4), policy="fifo", ratio=1.0):
+    return GpuMemoryManager(
+        capacity_gb * GB,
+        mk_models(sizes),
+        AcceleratorLink(),
+        policy=policy,
+        compression_ratio=ratio,
+    )
+
+
+def test_hit_and_miss_accounting():
+    mem = mk_mem()
+    fetch, evicted = mem.ensure(0)
+    assert fetch > 0 and evicted == []
+    assert mem.stats.misses == 1
+    fetch, evicted = mem.ensure(0)
+    assert fetch == 0.0
+    assert mem.stats.hits == 1
+
+
+def test_fifo_evicts_oldest():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4, 4, 4), policy="fifo")
+    mem.ensure(0)
+    mem.ensure(1)  # 8 GB used
+    _, evicted = mem.ensure(2)  # needs eviction of oldest = 0
+    assert evicted == [0]
+    assert mem.resident_models() == [1, 2]
+
+
+def test_lookahead_protects_soon_needed():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4, 4, 4), policy="lookahead")
+    mem.ensure(0)
+    mem.ensure(1)
+    # model 0 is needed by an upcoming queued task, model 1 is not → evict 1.
+    _, evicted = mem.ensure(2, upcoming_model_ids=[0])
+    assert evicted == [1]
+    assert mem.resident_models() == [0, 2]
+
+
+def test_lookahead_orders_by_next_use():
+    mem = mk_mem(capacity_gb=12.0, sizes=(4, 4, 4, 4, 4), policy="lookahead")
+    mem.ensure(0)
+    mem.ensure(1)
+    mem.ensure(2)
+    # 1 is needed soonest, then 0; 2 unneeded → evict 2 first.
+    _, evicted = mem.ensure(3, upcoming_model_ids=[1, 0])
+    assert evicted == [2]
+
+
+def test_pinned_models_not_evicted():
+    mem = mk_mem(capacity_gb=8.0, sizes=(4, 4, 4), policy="fifo", ratio=0.5)
+    mem.ensure(0)
+    mem.pin(0)
+    mem.ensure(1)
+    mem.ensure(2)  # fits: 3 × 2 GB cached
+    # Fill with a 4th model requiring eviction: pinned 0 survives.
+    mem.models[3] = mem.models[0].__class__(
+        model_id=3, name="m3", size_bytes=mem.models[0].size_bytes
+    )
+    mem.ensure(3, upcoming_model_ids=[])
+    assert mem.has(0)
+
+
+def test_ensure_returns_none_when_pins_block():
+    mem = mk_mem(capacity_gb=6.5, sizes=(4, 4), policy="fifo", ratio=0.5)
+    mem.ensure(0)
+    mem.begin_execution(0)  # exec copy 4 GB: free = 0.5 GB, model 0 pinned
+    assert mem.ensure(1) is None  # nothing evictable
+
+
+def test_execution_memory_reserves_and_releases():
+    # capacity 10, ratio 0.5: cached copies are 2 GB, execution copy 4 GB.
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4, 4, 4), policy="fifo", ratio=0.5)
+    mem.ensure(0)
+    mem.ensure(1)
+    mem.ensure(2)
+    mem.ensure(3)  # 8 GB cache
+    assert mem.free_bytes == pytest.approx(2 * GB)
+    mem.begin_execution(0)
+    # needs 4 GB exec: evicts until free ≥ 0 (model 0 pinned, evict 1)
+    assert mem.free_bytes >= 0
+    assert mem.has(0)
+    assert not mem.has(1)
+    mem.end_execution(0)
+    assert mem.exec_reserved_bytes == 0
+
+
+def test_bitmap_tracks_contents():
+    mem = mk_mem()
+    mem.ensure(0)
+    mem.ensure(2)
+    assert mem.bitmap == (1 << 0) | (1 << 2)
+
+
+def test_oversized_model_rejected():
+    mem = mk_mem(capacity_gb=5.0, sizes=(4,), ratio=1.0)
+    with pytest.raises(ValueError, match="exceeds GPU capacity"):
+        mem.ensure(0)  # 4 cached + 4 decompressed > 5
+
+
+def test_preload():
+    mem = mk_mem(ratio=0.5)
+    mem.preload([0, 1])
+    assert mem.has(0) and mem.has(1)
+    assert mem.stats.hits == 0 and mem.stats.misses == 0

@@ -1,0 +1,189 @@
+"""Scheduler unit tests: Alg. 1 planning, Eq. 2 locality, Alg. 2
+adjustment, SST staleness semantics, baselines."""
+
+import pytest
+
+from repro.core import (
+    ADFG,
+    ClusterSpec,
+    GB,
+    Job,
+    NavigatorConfig,
+    NavigatorScheduler,
+    ProfileRepository,
+    SharedStateTable,
+    make_scheduler,
+)
+from repro.core import bitmaps
+from repro.workflows import MODELS, paper_dfgs, translation_dfg, vpa_dfg
+
+
+@pytest.fixture
+def profiles():
+    cluster = ClusterSpec(n_workers=4)
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def idle_sst(n, capacity=16 * GB):
+    sst = SharedStateTable(n)
+    for w in range(n):
+        sst.update_cache(w, 0, capacity)
+        sst.push(w, 0.0)
+    return sst
+
+
+def test_plan_assigns_every_task(profiles):
+    sched = NavigatorScheduler(profiles)
+    sst = idle_sst(4)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    adfg = sched.plan(job, 0.0, 0, sst.view(0))
+    assert set(adfg.assignment) == set(job.dfg.tasks)
+    assert all(0 <= w < 4 for _, w in adfg.items())
+
+
+def test_plan_prefers_cached_worker(profiles):
+    """Eq. 2: a worker holding the model should win an otherwise-idle tie."""
+    sched = NavigatorScheduler(profiles)
+    sst = idle_sst(4)
+    # Worker 2 holds opt (model 0) and bart (5).
+    sst.update_cache(2, bitmaps.pack([0, 5]), 16 * GB)
+    sst.push(2, 0.0)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    adfg = sched.plan(job, 0.0, 0, sst.view(0))
+    assert adfg["opt_dialogue"] == 2
+    assert adfg["bart_shape"] == 2
+
+
+def test_plan_spreads_parallel_tasks_under_load(profiles):
+    """With all models everywhere, fan-out siblings should not all pile on
+    one worker (ft_map update on line 12 of Alg. 1)."""
+    sched = NavigatorScheduler(profiles)
+    sst = idle_sst(4)
+    full = bitmaps.pack(range(8))
+    for w in range(4):
+        sst.update_cache(w, full, 16 * GB)
+        sst.push(w, 0.0)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    adfg = sched.plan(job, 0.0, 0, sst.view(0))
+    parallel = {adfg["marian_fr"], adfg["mt5_zh"], adfg["mt5_ja"]}
+    assert len(parallel) >= 2
+
+
+def test_plan_avoids_loaded_worker(profiles):
+    sched = NavigatorScheduler(profiles)
+    sst = idle_sst(4)
+    sst.update_load(1, 50.0)  # worker 1 has a huge backlog
+    for w in range(4):
+        sst.push(w, 0.0)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    adfg = sched.plan(job, 0.0, 0, sst.view(0))
+    assert all(w != 1 for _, w in adfg.items())
+
+
+def test_locality_ablation_ignores_cache(profiles):
+    cfg = NavigatorConfig(use_model_locality=False)
+    sched = NavigatorScheduler(profiles, cfg)
+    sst = idle_sst(4)
+    sst.update_cache(2, bitmaps.pack([0, 5]), 16 * GB)
+    sst.push(2, 0.0)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    adfg = sched.plan(job, 0.0, 0, sst.view(0))
+    # Without locality the cached worker gets no preference; the planner
+    # should fall back to origin/idle-order rather than seeking worker 2.
+    assert adfg["opt_dialogue"] != 2 or adfg["bart_shape"] != 2
+
+
+def test_adjustment_triggers_on_overload(profiles):
+    sched = NavigatorScheduler(profiles, NavigatorConfig(adjustment_threshold=2.0))
+    sst = idle_sst(4)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    adfg = ADFG(job)
+    adfg["opt_dialogue"] = 0
+    adfg["bart_shape"] = 0
+    adfg.planned_ft["opt_dialogue"] = 1.0
+    # Planned worker 0 suddenly has a 60 s backlog.
+    sst.update_load(0, 60.0)
+    for w in range(4):
+        sst.push(w, 1.0)
+    new_w = sched.adjust(
+        job, adfg, "bart_shape", 1.0, sst.view(0), 0, input_bytes=1e5
+    )
+    assert new_w != 0
+
+
+def test_adjustment_keeps_plan_when_fine(profiles):
+    sched = NavigatorScheduler(profiles)
+    sst = idle_sst(4)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    adfg = ADFG(job)
+    adfg["opt_dialogue"] = 0
+    adfg["bart_shape"] = 0
+    new_w = sched.adjust(
+        job, adfg, "bart_shape", 1.0, sst.view(0), 0, input_bytes=1e5
+    )
+    assert new_w == 0
+
+
+def test_join_tasks_never_adjusted(profiles):
+    sched = NavigatorScheduler(profiles)
+    sst = idle_sst(4)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    adfg = ADFG(job)
+    for t in job.dfg.tasks:
+        adfg[t] = 0
+    sst.update_load(0, 100.0)
+    for w in range(4):
+        sst.push(w, 0.0)
+    assert sched.adjust(job, adfg, "aggregate", 0.0, sst.view(0), 0, 1e5) == 0
+
+
+def test_hash_is_deterministic(profiles):
+    sched = make_scheduler("hash", profiles)
+    sst = idle_sst(4)
+    job = Job(7, translation_dfg(), arrival_time=0.0)
+    a1 = sched.plan(job, 0.0, 0, sst.view(0))
+    a2 = sched.plan(job, 0.0, 1, sst.view(1))
+    assert a1.assignment == a2.assignment
+
+
+def test_heft_ignores_load(profiles):
+    sched = make_scheduler("heft", profiles)
+    sst = idle_sst(4)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    base = sched.plan(job, 0.0, 0, sst.view(0)).assignment
+    sst.update_load(base["opt_dialogue"], 100.0)
+    for w in range(4):
+        sst.push(w, 0.0)
+    again = sched.plan(job, 0.0, 0, sst.view(0)).assignment
+    assert again == base  # HEFT is load-blind by design
+
+
+def test_jit_picks_cached_idle_worker(profiles):
+    sched = make_scheduler("jit", profiles)
+    sst = idle_sst(4)
+    sst.update_cache(3, bitmaps.pack([0]), 16 * GB)
+    sst.push(3, 0.0)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    w = sched.select_worker_at_ready(
+        job, "opt_dialogue", 0.0, sst.view(0), {"": 0}, {"": 1e5}, self_worker=0
+    )
+    assert w == 3
+
+
+def test_sst_staleness_semantics():
+    sst = SharedStateTable(3, push_interval_s=0.2)
+    sst.update_load(1, 42.0)
+    # Not yet pushed: readers other than worker 1 see the old value.
+    assert sst.view(0)[1].ft_estimate_s == 0.0
+    # Worker 1 itself sees fresh local state.
+    assert sst.view(1)[1].ft_estimate_s == 42.0
+    sst.push_load(1, 0.2)
+    assert sst.view(0)[1].ft_estimate_s == 42.0
+
+
+def test_unknown_scheduler_rejected(profiles):
+    with pytest.raises(ValueError):
+        make_scheduler("nope", profiles)

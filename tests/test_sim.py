@@ -1,0 +1,145 @@
+"""Integration tests: the event-driven simulator end-to-end (§5.4, §6)."""
+
+import pytest
+
+from repro.core import ClusterSpec, GB, Job, NavigatorConfig, ProfileRepository
+from repro.sim import Simulation, bursty_trace_workload, poisson_workload
+from repro.workflows import MODELS, paper_dfgs, translation_dfg
+
+
+def make_profiles(cluster):
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def run_sim(scheduler="navigator", rate=2.0, duration=120.0, seed=3, **kw):
+    cluster = kw.pop("cluster", ClusterSpec(n_workers=5))
+    profiles = make_profiles(cluster)
+    jobs = poisson_workload(paper_dfgs(), rate, duration, seed=seed)
+    sim = Simulation(cluster, profiles, MODELS, scheduler=scheduler, seed=1, **kw)
+    return sim.run(jobs), jobs
+
+
+@pytest.mark.parametrize("scheduler", ["navigator", "jit", "heft", "hash"])
+def test_all_jobs_complete(scheduler):
+    res, jobs = run_sim(scheduler=scheduler)
+    assert len(res.records) == len(jobs)
+    for r in res.records:
+        assert r.finish >= r.arrival
+        # Lower bound uses *expected* runtimes; lognormal noise draws can
+        # beat it slightly, so allow headroom below 1.0.
+        assert r.slowdown > 0.5
+
+
+def test_single_job_near_lower_bound():
+    """One job on an idle, warm cluster should finish close to its lower
+    bound (only dispatch/transfer overheads + first fetches)."""
+    cluster = ClusterSpec(n_workers=5)
+    profiles = make_profiles(cluster)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator",
+        runtime_noise_sigma=0.0, seed=0,
+    )
+    for mem in sim.memories:
+        mem.preload([0, 1, 2])
+        sim._publish_cache(sim.memories.index(mem))
+    for w in cluster.workers():
+        sim.sst.push(w, 0.0)
+    res = sim.run([job])
+    assert len(res.records) == 1
+    assert res.records[0].slowdown < 1.15
+
+
+def test_navigator_beats_static_schedulers_high_load():
+    """Claim C1 (vs HEFT/Hash): ≥2x mean latency advantage at high load."""
+    nav, _ = run_sim("navigator", rate=2.0, duration=200.0)
+    heft, _ = run_sim("heft", rate=2.0, duration=200.0)
+    hsh, _ = run_sim("hash", rate=2.0, duration=200.0)
+    assert heft.mean_latency > 2.0 * nav.mean_latency
+    assert hsh.mean_latency > 2.0 * nav.mean_latency
+
+
+def test_navigator_not_worse_than_jit():
+    """Aggregated over seeds (single-seed comparisons are noise-dominated)."""
+    nav = [run_sim("navigator", rate=2.0, duration=200.0, seed=s)[0].mean_slowdown
+           for s in (3, 7, 11)]
+    jit = [run_sim("jit", rate=2.0, duration=200.0, seed=s)[0].mean_slowdown
+           for s in (3, 7, 11)]
+    assert sum(nav) <= sum(jit) * 1.05
+
+
+def test_navigator_cache_hit_rate_high():
+    """Claim C2: ~99% hit rate at the paper's high-load setting."""
+    nav, _ = run_sim("navigator", rate=2.0, duration=200.0)
+    assert nav.cache_hit_rate > 0.97
+
+
+def test_ablation_dynamic_adjustment_helps():
+    cfg_off = NavigatorConfig(use_dynamic_adjustment=False)
+    on = off = 0.0
+    for s in (3, 7, 11):
+        r_on, _ = run_sim("navigator", rate=2.0, duration=200.0, seed=s)
+        r_off, _ = run_sim(
+            "navigator", rate=2.0, duration=200.0, seed=s,
+            navigator_config=cfg_off,
+        )
+        on += r_on.mean_slowdown
+        off += r_off.mean_slowdown
+        assert r_off.adjustments == 0 and r_on.adjustments > 0
+    assert off >= on * 0.95  # adjustment is never much worse, usually better
+
+
+def test_ablation_model_locality_matters():
+    """Claim C3: disabling locality degrades latency substantially and
+    drops the hit rate."""
+    cfg_off = NavigatorConfig(use_model_locality=False)
+    on, _ = run_sim("navigator", rate=2.0, duration=200.0)
+    off, _ = run_sim(
+        "navigator", rate=2.0, duration=200.0, navigator_config=cfg_off
+    )
+    assert off.mean_slowdown > 1.5 * on.mean_slowdown
+    assert off.cache_hit_rate < on.cache_hit_rate
+
+
+def test_eviction_policy_lookahead_not_worse():
+    la, _ = run_sim("navigator", rate=2.0, duration=200.0,
+                    eviction_policy="lookahead")
+    ff, _ = run_sim("navigator", rate=2.0, duration=200.0,
+                    eviction_policy="fifo")
+    assert la.cache_evictions <= ff.cache_evictions * 1.25
+
+
+def test_staleness_degrades_gracefully():
+    """Claim C4: finer dissemination should not be worse; very stale load
+    info hurts."""
+    fresh, _ = run_sim("navigator", rate=2.0, duration=200.0,
+                       push_interval_s=0.1)
+    stale, _ = run_sim("navigator", rate=2.0, duration=200.0,
+                       push_interval_s=2.0)
+    assert stale.mean_slowdown >= fresh.mean_slowdown * 0.9
+
+
+def test_energy_and_utilization_metrics():
+    res, _ = run_sim("navigator", rate=2.0, duration=120.0)
+    cluster = ClusterSpec(n_workers=5)
+    assert 0.0 < res.gpu_utilization < 1.0
+    assert res.energy_joules(cluster) > 0
+    assert res.percentile_latency(0.5) <= res.percentile_latency(0.99)
+
+
+def test_bursty_workload_completes():
+    cluster = ClusterSpec(n_workers=5)
+    profiles = make_profiles(cluster)
+    jobs = bursty_trace_workload(paper_dfgs(), 0.5, 120.0, seed=5)
+    res = Simulation(cluster, profiles, MODELS, scheduler="navigator", seed=2).run(jobs)
+    assert len(res.records) == len(jobs)
+
+
+def test_deterministic_given_seed():
+    a, _ = run_sim("navigator", rate=1.0, duration=60.0, seed=11)
+    b, _ = run_sim("navigator", rate=1.0, duration=60.0, seed=11)
+    assert a.mean_latency == b.mean_latency
+    assert a.cache_hits == b.cache_hits
