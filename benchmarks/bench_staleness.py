@@ -1,17 +1,103 @@
-"""Fig. 8: sensitivity to SST dissemination rate — load-info staleness ×
-cache-info staleness grid at high load."""
+"""Staleness sensitivity of the decentralized metadata plane.
+
+Two sweeps:
+
+* **Gossip sweep** (the default ``run()``): gossip period × offered load
+  × fleet heterogeneity, per scheduler, on the decentralized per-worker
+  SST views (``core/sst_exchange.GossipPlane``).  Each worker plans from
+  its own replica, so growing the gossip period genuinely widens the gap
+  between a scheduler's view and reality — the regime that separates
+  Compass from centralized baselines.  Reports P50/P99 JCT and mean
+  slowdown; the acceptance bar is *graceful* degradation of Navigator JCT
+  as the period grows (no cliff).
+
+* **Fig. 8 push-interval grid** (``run_push_interval_grid()``): the
+  paper's load-staleness × cache-staleness grid on the single-published-
+  snapshot ``SharedStateTable``.  Included in the default ``run()``;
+  ``--legacy`` runs it alone.
+
+    PYTHONPATH=src python -m benchmarks.bench_staleness [--legacy]
+"""
 
 from __future__ import annotations
 
+import sys
 from typing import List, Tuple
 
 from benchmarks.common import mean_over_seeds, run_sim, save_json
+from repro.core import GossipConfig, NavigatorConfig, fleet
 
+# Gossip sweep axes.
+PERIODS = [0.05, 0.2, 1.0, 4.0]        # seconds between gossip rounds
+RATES = [1.0, 2.0]                     # offered load (req/s at speed-1.0 fleet)
+FLEET_NAMES = ["uniform", "mixed"]     # worker heterogeneity presets
+# (label, scheduler, navigator_config): the +margin variant turns on the
+# staleness-aware Alg. 2 hysteresis so the sweep measures whether it
+# helps where it is meant to — at long gossip periods.
+SCHEDULER_VARIANTS = [
+    ("navigator", "navigator", None),
+    (
+        "navigator+margin",
+        "navigator",
+        NavigatorConfig(staleness_margin_per_s=0.05),
+    ),
+    ("jit", "jit", None),
+]
+FANOUT = 2
+DURATION = 150.0
+
+# Legacy Fig. 8 grid.
 LOAD_DELAYS = [0.1, 0.2, 0.5, 1.0]     # seconds between load pushes
 CACHE_DELAYS = [0.1, 0.5, 1.0, 2.0]    # seconds between cache pushes
 
 
 def run() -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    grid = {}
+    for fleet_name in FLEET_NAMES:
+        for rate in RATES:
+            for label, sched, nav_cfg in SCHEDULER_VARIANTS:
+                for period in PERIODS:
+
+                    def cell(seed):
+                        res = run_sim(
+                            sched,
+                            rate=rate,
+                            seed=seed,
+                            duration=DURATION,
+                            navigator_config=nav_cfg,
+                            cluster=fleet(fleet_name),
+                            scale_rate_to_fleet=True,
+                            gossip=GossipConfig(
+                                period_s=period, fanout=FANOUT
+                            ),
+                        )
+                        return {
+                            "p50_jct_s": res.percentile_latency(0.5),
+                            "p99_jct_s": res.percentile_latency(0.99),
+                            "mean_slowdown": res.mean_slowdown,
+                            "gossip_messages": float(res.sst_pushes),
+                        }
+
+                    # Tail percentiles from a single 150 s run are one or
+                    # two jobs deep — average over seeds like the Fig. 8
+                    # grid does.
+                    key = f"{fleet_name}/rate{rate}/{label}/period{period}"
+                    grid[key] = mean_over_seeds(cell)
+                    rows.append(
+                        (f"staleness/{key}/p50", 0.0, grid[key]["p50_jct_s"])
+                    )
+                    rows.append(
+                        (f"staleness/{key}/p99", 0.0, grid[key]["p99_jct_s"])
+                    )
+    save_json("staleness_gossip", grid)
+    # Keep the paper's Fig. 8 push-interval grid in the default suite.
+    rows += run_push_interval_grid()
+    return rows
+
+
+def run_push_interval_grid() -> List[Tuple[str, float, float]]:
+    """Fig. 8: SharedStateTable load-staleness × cache-staleness grid."""
     rows = []
     grid = {}
     for ld in LOAD_DELAYS:
@@ -31,5 +117,6 @@ def run() -> List[Tuple[str, float, float]]:
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
+    fn = run_push_interval_grid if "--legacy" in sys.argv[1:] else run
+    for name, us, derived in fn():
         print(f"{name},{us:.1f},{derived:.4f}")

@@ -8,7 +8,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import ClusterSpec, NavigatorConfig, ProfileRepository
-from repro.sim import SimResult, Simulation, poisson_workload
+from repro.sim import SimResult, Simulation, fleet_scaled_rate, poisson_workload
 from repro.workflows import MODELS, paper_dfgs
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
@@ -22,13 +22,17 @@ def run_sim(
     seed: int = 7,
     sim_seed: int = 1,
     navigator_config: Optional[NavigatorConfig] = None,
+    cluster: Optional[ClusterSpec] = None,
+    scale_rate_to_fleet: bool = False,
     **kw,
 ) -> SimResult:
-    cluster = ClusterSpec(n_workers=n_workers)
+    cluster = cluster or ClusterSpec(n_workers=n_workers)
     dfgs = paper_dfgs()
     profiles = ProfileRepository(cluster, MODELS)
     for d in dfgs:
         profiles.register(d)
+    if scale_rate_to_fleet:
+        rate = fleet_scaled_rate(cluster, rate)
     jobs = poisson_workload(dfgs, rate, duration, seed=seed)
     sim = Simulation(
         cluster, profiles, MODELS, scheduler=scheduler,

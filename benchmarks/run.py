@@ -12,12 +12,13 @@ import time
 
 
 SUITES = [
-    "schedulers",    # Fig. 6 + Table 1
-    "ablation",      # Fig. 7
-    "staleness",     # Fig. 8
-    "trace",         # Fig. 9
-    "scalability",   # Fig. 10
-    "kernels",       # Pallas-kernel ref-path micro-benches
+    "schedulers",      # Fig. 6 + Table 1
+    "ablation",        # Fig. 7
+    "staleness",       # gossip period × load × fleet sweep (+ Fig. 8 grid)
+    "trace",           # Fig. 9
+    "scalability",     # Fig. 10
+    "kernels",         # Pallas-kernel ref-path micro-benches
+    "sst_microbench",  # gossip O(dirty-rows) + planner placement cost
 ]
 
 

@@ -1,0 +1,36 @@
+"""Version-compat shims for the JAX surface this repo touches.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace (and its replication-check kwarg was renamed
+``check_rep`` → ``check_vma``) across the JAX versions the container may
+carry.  Import it from here; the wrapper accepts the modern ``check_vma``
+keyword and translates for older installs.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+try:  # jax >= 0.6: public top-level API
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    kw = {}
+    if "check_vma" in _PARAMS:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _PARAMS:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

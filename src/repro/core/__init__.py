@@ -13,7 +13,13 @@ from repro.core.netmodel import (
     NetworkModel,
     TPU_V5E_CLUSTER,
 )
-from repro.core.profiles import ProfileRepository
+from repro.core.profiles import (
+    FLEETS,
+    ProfileRepository,
+    WorkerProfile,
+    build_fleet,
+    fleet,
+)
 from repro.core.scheduler import (
     HEFTScheduler,
     HashScheduler,
@@ -24,6 +30,7 @@ from repro.core.scheduler import (
     Scheduler,
     make_scheduler,
 )
+from repro.core.sst_exchange import GossipConfig, GossipPlane
 from repro.core.state import SharedStateTable, SSTRow
 from repro.core.types import ADFG, DFG, GB, Job, MB, MLModel, TaskSpec
 
@@ -33,7 +40,10 @@ __all__ = [
     "CacheStats",
     "ClusterSpec",
     "DFG",
+    "FLEETS",
     "GB",
+    "GossipConfig",
+    "GossipPlane",
     "GpuMemoryManager",
     "HEFTScheduler",
     "HashScheduler",
@@ -51,5 +61,8 @@ __all__ = [
     "SharedStateTable",
     "TPU_V5E_CLUSTER",
     "TaskSpec",
+    "WorkerProfile",
+    "build_fleet",
+    "fleet",
     "make_scheduler",
 ]

@@ -69,6 +69,9 @@ class ClusterSpec:
     network: NetworkModel = dataclasses.field(default_factory=NetworkModel)
     link: AcceleratorLink = dataclasses.field(default_factory=AcceleratorLink)
     worker_speed: Optional[Dict[int, float]] = None
+    # Per-worker GPU memory overrides (heterogeneous fleets); workers not
+    # listed fall back to ``gpu_capacity_bytes``.
+    worker_gpu_capacity: Optional[Dict[int, float]] = None
     # Compressed/decompressed bytes ratio for Navigator-cache accounting
     # (§3.3: the cache holds models compressed; execution memory holds a
     # decompressed instance per active task).
@@ -81,6 +84,19 @@ class ClusterSpec:
         if self.worker_speed is None:
             return 1.0
         return self.worker_speed.get(worker, 1.0)
+
+    def gpu_capacity(self, worker: int) -> float:
+        """GPU memory of ``worker`` (heterogeneous fleets override the
+        uniform ``gpu_capacity_bytes`` per worker)."""
+        if self.worker_gpu_capacity is None:
+            return self.gpu_capacity_bytes
+        return self.worker_gpu_capacity.get(worker, self.gpu_capacity_bytes)
+
+    @property
+    def total_speed(self) -> float:
+        """Aggregate fleet throughput multiplier (used to hold offered
+        load constant when sweeping fleet heterogeneity)."""
+        return sum(self.speed(w) for w in self.workers())
 
     def runtime_on(self, base_runtime_s: float, worker: int) -> float:
         """R(t, w) from the profiled base runtime R(t)."""

@@ -1,4 +1,5 @@
-"""Repository of Workflow Profiles (§3.1) and vertex ranking (§4.2.1).
+"""Repository of Workflow Profiles (§3.1) and vertex ranking (§4.2.1),
+plus heterogeneous worker-fleet profiles.
 
 Holds static DFG metadata: expected runtimes R(t), input/output object
 sizes, model sizes — plus the statically computed upward ranks (Eq. 1):
@@ -8,14 +9,78 @@ sizes, model sizes — plus the statically computed upward ranks (Eq. 1):
 Ranks depend only on the DFG and the cluster's network model, so Navigator
 computes them once when the DFG is loaded and caches them here (§4.2.1);
 dynamic inputs merely update, not recompute, the static values.
+
+Fleet profiles: the paper's testbed is 5 identical T4 workers, but edge
+clusters are rarely uniform.  ``WorkerProfile`` describes one GPU class
+(FLOPS multiplier + memory) and ``build_fleet`` assembles a
+``ClusterSpec`` from a mix; ``FLEETS`` names the presets the staleness /
+heterogeneity sweeps use.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Tuple
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.netmodel import ClusterSpec
-from repro.core.types import DFG, MLModel, TaskSpec
+from repro.core.types import DFG, GB, MLModel, TaskSpec
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous fleet profiles
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WorkerProfile:
+    """One GPU class: ``speed`` multiplies task throughput
+    (R(t, w) = R(t) / speed), ``gpu_capacity_bytes`` bounds the Navigator
+    cache."""
+
+    name: str
+    speed: float = 1.0
+    gpu_capacity_bytes: float = 16.0 * GB
+
+
+# The paper's T4 is the 1.0x reference; the others are plausible edge/DC
+# neighbours (relative serving throughput, not peak-FLOPS marketing).
+T4 = WorkerProfile("t4", 1.0, 16.0 * GB)
+L4 = WorkerProfile("l4", 1.6, 24.0 * GB)
+A10 = WorkerProfile("a10", 2.0, 24.0 * GB)
+EDGE = WorkerProfile("edge", 0.5, 8.0 * GB)
+
+#: Named fleet mixes for the heterogeneity sweeps (bench_staleness.py).
+FLEETS: Dict[str, Tuple[WorkerProfile, ...]] = {
+    "uniform": (T4, T4, T4, T4, T4),
+    "mixed": (A10, L4, T4, T4, EDGE),
+    "edge_heavy": (L4, EDGE, EDGE, EDGE, EDGE),
+}
+
+
+def build_fleet(
+    profiles: Sequence[WorkerProfile], **cluster_kwargs
+) -> ClusterSpec:
+    """Assemble a ``ClusterSpec`` from a worker-profile mix.  Extra
+    keyword arguments (network, link, …) pass through to the spec."""
+    if not profiles:
+        raise ValueError("fleet needs at least one worker profile")
+    return ClusterSpec(
+        n_workers=len(profiles),
+        gpu_capacity_bytes=max(p.gpu_capacity_bytes for p in profiles),
+        worker_speed={w: p.speed for w, p in enumerate(profiles)},
+        worker_gpu_capacity={
+            w: p.gpu_capacity_bytes for w, p in enumerate(profiles)
+        },
+        **cluster_kwargs,
+    )
+
+
+def fleet(name: str, **cluster_kwargs) -> ClusterSpec:
+    """Named preset → ``ClusterSpec`` (see ``FLEETS``)."""
+    try:
+        return build_fleet(FLEETS[name], **cluster_kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown fleet {name!r}; have {sorted(FLEETS)}"
+        ) from None
 
 
 class ProfileRepository:

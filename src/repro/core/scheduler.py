@@ -48,6 +48,13 @@ class NavigatorConfig:
     # relative margin.  0.0 = the paper's unconditional argmin (which also
     # measured best in our multi-seed calibration; see EXPERIMENTS.md).
     adjustment_margin: float = 0.0
+    # Staleness-aware hysteresis (decentralized gossip plane): the margin
+    # grows with the age of the candidate worker's row, so the staler the
+    # evidence for moving, the bigger the predicted win must be.  Effective
+    # margin = adjustment_margin + staleness_margin_per_s × row age.  0.0
+    # disables (and with a fresh SharedStateTable rows are near-zero age,
+    # so this is a no-op for the centralized-snapshot configuration).
+    staleness_margin_per_s: float = 0.0
     # Ablations:
     use_model_locality: bool = True      # Fig. 7 "model locality"
     use_dynamic_adjustment: bool = True  # Fig. 7 "dynamic task scheduling"
@@ -263,11 +270,22 @@ class NavigatorScheduler(Scheduler):
             if ft < best_ft:
                 best_w, best_ft = w, ft
         # Hysteresis: require a clear predicted win before abandoning the
-        # planned (cache-affine) worker.
+        # planned (cache-affine) worker.  Under the gossip plane the margin
+        # scales with the age of the candidate's row — stale evidence for a
+        # move must clear a higher bar (the adjuster only sees *its own*
+        # replica of the candidate's state, which may lag reality).
         planned_ft = est(w_planned)
-        if best_w != w_planned and best_ft > planned_ft * (
-            1.0 - self.config.adjustment_margin
+        margin = self.config.adjustment_margin
+        if (
+            best_w != w_planned
+            and best_w != current_worker
+            and self.config.staleness_margin_per_s > 0.0
         ):
+            # The adjuster's own worker is never stale (local ground
+            # truth); only remote rows carry age-scaled uncertainty.
+            age = max(0.0, now - sst[best_w].pushed_at)
+            margin += self.config.staleness_margin_per_s * age
+        if best_w != w_planned and best_ft > planned_ft * (1.0 - margin):
             return w_planned
         return best_w                                           # lines 12-13
 

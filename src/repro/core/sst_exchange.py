@@ -1,36 +1,50 @@
-"""Decentralized SST exchange as a JAX collective (TPU-native analogue of
-the paper's RDMA one-sided row pushes, §5.2).
+"""Decentralized SST exchange: the metadata plane of the paper (§5.2).
 
-The paper's SST is an O(n²) replicated table: every worker pushes its row
-to every peer.  On a TPU mesh the natural primitive is an all-gather of
-per-device rows over the data axis: each device contributes its local
-(1, ROW_WIDTH) row and receives the full (W, ROW_WIDTH) table.  Like the
-RDMA original, a push moves one cache line per peer — the row layout
-below packs into 64 bytes (8 × f32/u32 lanes ≈ one cache line), keeping
-the wire format faithful to Fig. 5.
+Two transports live here:
+
+1. **GossipPlane** — the per-worker-view subsystem.  Every worker keeps a
+   versioned local replica of every peer's row; a configurable periodic
+   gossip/broadcast exchange (period, fan-out, drop probability; message
+   delay sampled through ``core/netmodel.py`` by the driving engine)
+   disseminates row updates epidemically.  Schedulers read *their own
+   worker's* replica (``view(w)``), so different workers plan from
+   genuinely different — possibly stale — snapshots, which is the regime
+   that separates Compass from centralized baselines.
+
+   Exchanges are **diff-based**: each worker keeps an append-only change
+   log of rows it has learned and a per-peer cursor into that log, so a
+   gossip round with ``k`` dirty rows ships (and costs) O(k), never a
+   full-table copy (``benchmarks/bench_sst_microbench.py`` guards this).
+
+2. **make_sst_allgather** — a TPU-native analogue of the paper's RDMA
+   one-sided row pushes: an all-gather of per-device rows over the data
+   axis of a JAX mesh.  Like the RDMA original, a push moves one cache
+   line per peer.
 
 Row layout (uint32 lanes — exact bit transport; 8 lanes = 32 bytes, half a
-cache line):
+cache line, keeping the wire format faithful to Fig. 5):
   [0] ft_estimate_s   (f32 bit pattern)
   [1] cache_bitmap lo 32 bits
   [2] cache_bitmap hi 32 bits
   [3] free cache KiB
   [4] queue_len
-  [5..7] reserved
+  [5] row version (monotonic per owner; merge is newest-wins)
+  [6..7] reserved
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import List
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.state import SSTRow
+
+# jax is imported lazily inside make_sst_allgather so the gossip plane
+# (pure Python) stays importable on hosts without an accelerator stack.
 
 ROW_WIDTH = 8
 
@@ -42,6 +56,7 @@ def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
     out[2] = np.uint32((row.cache_bitmap >> 32) & 0xFFFFFFFF)
     out[3] = np.uint32(min(row.free_cache_bytes / 1024.0, 2**32 - 1))
     out[4] = np.uint32(queue_len)
+    out[5] = np.uint32(row.version & 0xFFFFFFFF)
     return out
 
 
@@ -54,18 +69,23 @@ def unpack_rows(table: np.ndarray) -> List[SSTRow]:
                 ft_estimate_s=float(r[0:1].view(np.float32)[0]),
                 cache_bitmap=bitmap,
                 free_cache_bytes=float(r[3]) * 1024.0,
+                version=int(r[5]),
             )
         )
     return rows
 
 
-def make_sst_allgather(mesh: Mesh, axis: str = "data"):
+def make_sst_allgather(mesh, axis: str = "data"):
     """Returns a jitted (local_rows) → (replicated_table) exchange.
 
     ``local_rows``: (W, ROW_WIDTH) array sharded so each device along
     ``axis`` holds its own row; the result is the fully replicated table —
     exactly the post-push SST state every scheduler reads.
     """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     @functools.partial(
         shard_map,
@@ -79,3 +99,337 @@ def make_sst_allgather(mesh: Mesh, axis: str = "data"):
         return jax.lax.all_gather(local_row, axis, axis=0, tiled=True)
 
     return jax.jit(exchange)
+
+
+# --------------------------------------------------------------------------
+# Per-worker SST views with diff-based gossip dissemination
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    """Tunables for the decentralized exchange.
+
+    ``period_s``   — seconds between a worker's gossip rounds (the paper's
+                     200 ms push cadence, §5.2, is the default).
+    ``fanout``     — peers contacted per round.  ``fanout >= n-1`` degrades
+                     to the paper's full broadcast; smaller fan-outs trade
+                     message count for propagation hops (epidemic spread).
+    ``drop_prob``  — per-message loss probability.  Lost rows are *not*
+                     retransmitted point-to-point; they reach the peer via
+                     relay through third parties, as in rumor mongering.
+    ``wire_row_bytes`` — bytes per row update on the wire (the 8-lane
+                     packed row above plus an owner header).
+    ``seed``       — peer-selection / drop-sampling RNG seed (combined
+                     with the driving engine's seed for determinism).
+    """
+
+    period_s: float = 0.2
+    fanout: int = 2
+    drop_prob: float = 0.0
+    wire_row_bytes: float = 40.0
+    seed: int = 0
+
+
+#: One row update on the wire: (owner worker id, owner version, row).
+RowUpdate = Tuple[int, int, SSTRow]
+
+#: One outbound message: (destination worker, row updates, payload bytes).
+GossipMessage = Tuple[int, List[RowUpdate], float]
+
+
+class GossipPlane:
+    """Decentralized Shared State Table with genuinely per-worker views.
+
+    Unlike ``SharedStateTable`` (single published snapshot, uniform
+    staleness), every worker ``w`` here holds its *own* replica of every
+    peer's row, merged newest-version-wins from gossip messages.  Two
+    workers generally disagree about the cluster state, and a scheduler
+    running on ``w`` sees exactly ``w``'s view — the decentralized regime
+    of the paper (§5).
+
+    Complexity: a round with ``k`` dirty rows (rows this worker learned
+    since it last contacted the chosen peer) does O(k) work and ships
+    O(k) bytes.  Quiescent rounds are O(fanout).  This is achieved with an
+    append-only per-worker change log plus a per-(worker, peer) cursor —
+    a version-vector diff without the O(n) vector scan.
+
+    The plane is engine-agnostic: ``exchange(w, now)`` returns the
+    messages a round emits (drops already sampled) and the caller decides
+    delivery timing — the simulator posts delayed ``deliver`` events using
+    its network model; the serving engine folds delivery into its virtual
+    clock via ``advance(now)``.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        config: Optional[GossipConfig] = None,
+        seed: int = 0,
+    ) -> None:
+        self.n_workers = n_workers
+        self.config = config or GossipConfig()
+        # Stable int mix of config seed + engine seed (tuple seeding is
+        # hash-based, hence process-dependent and deprecated).
+        self.rng = random.Random(self.config.seed * 1_000_003 + seed * 7_919 + 17)
+        # Ground truth: each worker's own row.
+        self.local: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
+        # views[w][p]: worker w's replica of p's row.
+        self.views: List[List[SSTRow]] = [
+            [SSTRow() for _ in range(n_workers)] for _ in range(n_workers)
+        ]
+        # versions[w][p]: version of p's row that w holds.
+        self.versions: List[List[int]] = [
+            [0] * n_workers for _ in range(n_workers)
+        ]
+        # Change log: owner ids of rows w has learned, in learn order.
+        # Cursor positions are *absolute* (entries ever appended);
+        # ``_log_base[w]`` is how many entries have been truncated from the
+        # front, so log index = absolute position - base.  A peer whose
+        # cursor has fallen below the base missed truncated history and
+        # gets an anti-entropy full sync on next contact.
+        self._log: List[List[int]] = [[] for _ in range(n_workers)]
+        self._log_base: List[int] = [0] * n_workers
+        # cursor[w][q]: absolute position in w's log up to which w synced q.
+        self._cursor: List[List[int]] = [
+            [0] * n_workers for _ in range(n_workers)
+        ]
+        # Hard cap on retained log entries (strict memory bound even when
+        # some peer is never contacted).
+        self._max_log = max(64, 16 * n_workers)
+        # Lazily-built full peer lists (broadcast fan-out only).
+        self._all_peers: Dict[int, List[int]] = {}
+        # Log length at which the next (O(n)) compaction check runs —
+        # amortizes the min-cursor scan over >= n appends.
+        self._compact_at: List[int] = [4 * n_workers] * n_workers
+        # Stats.  *_sent counters use sender-side semantics (a dropped
+        # message was still sent — the wire cost was paid); subtract
+        # ``messages_dropped`` / use ``messages_delivered`` for what peers
+        # actually received.
+        self.messages_sent = 0
+        self.messages_dropped = 0
+        self.rows_sent = 0
+        self.rounds = 0
+        self.full_syncs = 0
+        self._next_round_at = self.config.period_s  # for advance()
+
+    # -- local updates (the owning worker's ground truth) -------------------
+    def _bump(self, worker: int, now: float) -> None:
+        row = self.local[worker]
+        row.version += 1
+        # Monotonic, like SharedStateTable: a caller omitting ``now`` must
+        # not rewind the modification stamp (staleness-aware consumers
+        # would misread the row as ancient).
+        row.pushed_at = max(row.pushed_at, now)
+        self._log[worker].append(worker)
+        # Own view mirrors ground truth.
+        self.views[worker][worker] = row.copy()
+        self.versions[worker][worker] = row.version
+
+    def update_load(
+        self, worker: int, ft_estimate_s: float, now: float = 0.0
+    ) -> None:
+        self.local[worker].ft_estimate_s = ft_estimate_s
+        self._bump(worker, now)
+
+    def update_cache(
+        self,
+        worker: int,
+        cache_bitmap: int,
+        free_cache_bytes: float,
+        now: float = 0.0,
+    ) -> None:
+        row = self.local[worker]
+        row.cache_bitmap = cache_bitmap
+        row.free_cache_bytes = free_cache_bytes
+        self._bump(worker, now)
+
+    # -- exchange ------------------------------------------------------------
+    def _full_peer_list(self, worker: int) -> List[int]:
+        peers = self._all_peers.get(worker)
+        if peers is None:
+            peers = [w for w in range(self.n_workers) if w != worker]
+            self._all_peers[worker] = peers
+        return peers
+
+    def _peers(self, worker: int) -> List[int]:
+        n = self.n_workers
+        fanout = min(self.config.fanout, n - 1)
+        if fanout <= 0:
+            return []
+        if fanout == n - 1:  # full broadcast
+            return self._full_peer_list(worker)
+        if fanout > (n - 1) // 2:
+            # Dense fan-out: rejection sampling degrades; sample directly
+            # from the cached full peer list instead.
+            return self.rng.sample(self._full_peer_list(worker), fanout)
+        # Sparse fan-out: rejection-sample distinct peers — O(fanout)
+        # expected, so a quiescent round never touches O(n) state.
+        chosen: List[int] = []
+        seen = {worker}
+        while len(chosen) < fanout:
+            q = self.rng.randrange(n)
+            if q not in seen:
+                seen.add(q)
+                chosen.append(q)
+        return chosen
+
+    def exchange(self, worker: int, now: float) -> List[GossipMessage]:
+        """One gossip round for ``worker``: pick fan-out peers, ship each
+        the rows learned since the last contact (deduped, newest version).
+        Message drops are sampled here; only surviving messages are
+        returned.
+
+        Cost is O(log entries since that peer's last contact) — i.e. the
+        rows touched since the two last spoke, never a table scan; a
+        quiescent round allocates nothing.  A peer so far behind that its
+        history was truncated (cursor < log base) gets an anti-entropy
+        **full sync** of every row this worker knows — the standard rare
+        repair path that keeps the log memory strictly bounded."""
+        self.rounds += 1
+        out: List[GossipMessage] = []
+        base = self._log_base[worker]
+        log = self._log[worker]
+        head = base + len(log)
+        for q in self._peers(worker):
+            lo = self._cursor[worker][q]
+            self._cursor[worker][q] = head
+            full_sync = lo < base
+            if full_sync:
+                # Anti-entropy repair: truncated history, send everything.
+                self.full_syncs += 1
+                updates = [
+                    (o, self.versions[worker][o], self.views[worker][o].copy())
+                    for o in range(self.n_workers)
+                ]
+            else:
+                entries = log[lo - base:]
+                if not entries:
+                    continue
+                dirty: List[int] = []
+                seen: Dict[int, bool] = {}
+                for owner in entries:
+                    if owner not in seen:
+                        seen[owner] = True
+                        dirty.append(owner)
+                updates = [
+                    (o, self.versions[worker][o], self.views[worker][o].copy())
+                    for o in dirty
+                ]
+            self.messages_sent += 1
+            self.rows_sent += len(updates)
+            if self.rng.random() < self.config.drop_prob:
+                self.messages_dropped += 1
+                if full_sync:
+                    # A lost diff is repaired by relay through other peers,
+                    # but a lost full sync is the repair of last resort —
+                    # rewind the cursor so the next contact retries it.
+                    self._cursor[worker][q] = lo
+                continue
+            out.append((q, updates, self.config.wire_row_bytes * len(updates)))
+        self._compact(worker)
+        return out
+
+    def deliver(self, worker: int, updates: Sequence[RowUpdate], now: float) -> None:
+        """Merge a received message into ``worker``'s view (newest version
+        wins) and queue accepted rows for relay to this worker's own peers
+        — the epidemic step that lets updates cross the cluster even with
+        ``fanout < n-1``."""
+        for owner, version, row in updates:
+            if owner == worker:
+                continue  # own row is authoritative, never overwritten
+            if version > self.versions[worker][owner]:
+                self.versions[worker][owner] = version
+                self.views[worker][owner] = row.copy()
+                self._log[worker].append(owner)
+
+    def _compact(self, worker: int) -> None:
+        """Bound the retained log.  First drop the prefix every peer has
+        already seen; if the log still exceeds the hard cap (because some
+        peer hasn't been contacted), force-truncate — laggards repair via
+        the full-sync path in ``exchange``.  The O(n) min-cursor scan only
+        runs once the log has grown by >= 4n entries since the last check,
+        so its cost amortizes to O(1) per logged row."""
+        log = self._log[worker]
+        if len(log) < self._compact_at[worker] or self.n_workers <= 1:
+            return
+        base = self._log_base[worker]
+        cursors = self._cursor[worker]
+        floor = min(c for i, c in enumerate(cursors) if i != worker)
+        drop = max(0, floor - base)
+        if len(log) - drop > self._max_log:
+            drop = len(log) - self._max_log // 2  # force: keep recent half-cap
+        if drop > 0:
+            self._log[worker] = log[drop:]
+            self._log_base[worker] = base + drop
+        self._compact_at[worker] = len(self._log[worker]) + 4 * self.n_workers
+
+    def mark_synced(self, worker: int) -> None:
+        """Consider every peer caught up with ``worker``'s log (e.g. right
+        after a bootstrap broadcast, or between microbenchmark rounds) and
+        drop the retained entries."""
+        head = self._log_base[worker] + len(self._log[worker])
+        self._cursor[worker] = [head] * self.n_workers
+        self._log_base[worker] = head
+        self._log[worker] = []
+
+    # -- bootstrap / compatibility -------------------------------------------
+    def push(self, worker: int, now: float) -> None:
+        """Synchronous broadcast of ``worker``'s current row to every peer
+        (bootstrap/warm-start only; live dissemination goes through
+        ``exchange``).  Mirrors ``SharedStateTable.push``."""
+        if self.local[worker].version == 0:
+            self._bump(worker, now)
+        ver = self.local[worker].version
+        for q in range(self.n_workers):
+            if q == worker:
+                continue
+            if ver > self.versions[q][worker]:
+                self.versions[q][worker] = ver
+                self.views[q][worker] = self.local[worker].copy()
+
+    @property
+    def messages_delivered(self) -> int:
+        return self.messages_sent - self.messages_dropped
+
+    @property
+    def total_pushes(self) -> int:
+        return self.messages_sent
+
+    # -- reads ----------------------------------------------------------------
+    def view(self, reader_worker: Optional[int] = None) -> List[SSTRow]:
+        """The table as the scheduler on ``reader_worker`` sees it: its own
+        row fresh from ground truth, peer rows from its gossip replicas.
+        ``reader_worker=None`` returns ground truth for every row (an
+        omniscient observer, used by diagnostics)."""
+        if reader_worker is None:
+            return [r.copy() for r in self.local]
+        rows = [r.copy() for r in self.views[reader_worker]]
+        rows[reader_worker] = self.local[reader_worker].copy()
+        return rows
+
+    def staleness(self, now: float, reader_worker: Optional[int] = None) -> float:
+        """Max age (seconds) of any remote row in the reader's view;
+        aggregated over all readers when ``reader_worker`` is None."""
+        readers = (
+            range(self.n_workers) if reader_worker is None else [reader_worker]
+        )
+        worst = 0.0
+        for r in readers:
+            for p in range(self.n_workers):
+                if p == r:
+                    continue
+                worst = max(worst, now - self.views[r][p].pushed_at)
+        return worst
+
+    # -- synchronous driver (virtual-clock engines) ---------------------------
+    def advance(self, now: float) -> None:
+        """Run every gossip round due up to ``now`` with immediate
+        delivery (message delay folded into the round period).  Used by
+        engines with a coarse virtual clock (e.g. ``serving/engine.py``);
+        the discrete-event simulator drives ``exchange``/``deliver``
+        itself with sampled network delays."""
+        while self._next_round_at <= now:
+            t = self._next_round_at
+            for w in range(self.n_workers):
+                for q, updates, _nbytes in self.exchange(w, t):
+                    self.deliver(q, updates, t)
+            self._next_round_at += self.config.period_s

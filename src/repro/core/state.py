@@ -33,6 +33,9 @@ class SSTRow:
     cache_bitmap: int = 0
     free_cache_bytes: float = 0.0
     pushed_at: float = 0.0
+    # Monotonic per-owner version; the gossip plane (sst_exchange.py) uses
+    # it to merge replicas newest-wins and to ship version-vector diffs.
+    version: int = 0
 
     def copy(self) -> "SSTRow":
         return SSTRow(
@@ -40,6 +43,7 @@ class SSTRow:
             self.cache_bitmap,
             self.free_cache_bytes,
             self.pushed_at,
+            self.version,
         )
 
 
@@ -69,15 +73,28 @@ class SharedStateTable:
         self._pushes = 0
 
     # -- local updates (free, instantaneous) -------------------------------
-    def update_load(self, worker: int, ft_estimate_s: float) -> None:
-        self.local[worker].ft_estimate_s = ft_estimate_s
+    # ``now`` stamps the local row's modification time (the same signature
+    # the gossip plane uses), so a reader substituting its own local row
+    # sees a current ``pushed_at`` and staleness-aware consumers don't
+    # mistake own ground truth for ancient data.
+    def update_load(
+        self, worker: int, ft_estimate_s: float, now: float = 0.0
+    ) -> None:
+        row = self.local[worker]
+        row.ft_estimate_s = ft_estimate_s
+        row.pushed_at = max(row.pushed_at, now)
 
     def update_cache(
-        self, worker: int, cache_bitmap: int, free_cache_bytes: float
+        self,
+        worker: int,
+        cache_bitmap: int,
+        free_cache_bytes: float,
+        now: float = 0.0,
     ) -> None:
         row = self.local[worker]
         row.cache_bitmap = cache_bitmap
         row.free_cache_bytes = free_cache_bytes
+        row.pushed_at = max(row.pushed_at, now)
 
     # -- publication --------------------------------------------------------
     def push_load(self, worker: int, now: float) -> None:

@@ -34,6 +34,7 @@ from repro.core import (
     SharedStateTable,
 )
 from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.sst_exchange import GossipConfig, GossipPlane
 from repro.core.types import DFG, MLModel, TaskSpec
 from repro.models import decode_step, forward, init_cache, init_params
 from repro.models.config import ModelConfig
@@ -116,6 +117,7 @@ class ServingCluster:
         scheduler: str = "navigator",
         navigator_config: Optional[NavigatorConfig] = None,
         decode_tokens: int = 8,
+        gossip: Optional[GossipConfig] = None,
     ) -> None:
         self.cluster = cluster
         self.hosted = {h.model_id: h for h in hosted}
@@ -127,21 +129,28 @@ class ServingCluster:
         self.scheduler: Scheduler = make_scheduler(
             scheduler, self.profiles, navigator_config
         )
-        self.sst = SharedStateTable(cluster.n_workers)
+        # ``gossip`` swaps the single-snapshot table for the decentralized
+        # per-worker view plane: the planner then reads the *origin
+        # worker's* replica, which lags peers by up to a gossip period.
+        self.gossip = gossip
+        if gossip is not None:
+            self.sst = GossipPlane(cluster.n_workers, gossip)
+        else:
+            self.sst = SharedStateTable(cluster.n_workers)
         self.memories = [
             GpuMemoryManager(
-                cluster.gpu_capacity_bytes,
+                cluster.gpu_capacity(w),
                 self.catalog,
                 cluster.link,
                 compression_ratio=cluster.compression_ratio,
             )
-            for _ in cluster.workers()
+            for w in cluster.workers()
         ]
         self.engine = ExecutionEngine(self.hosted, decode_tokens)
         self._vclock = [0.0] * cluster.n_workers  # per-worker virtual time
         self._jobid = 0
         for w in cluster.workers():
-            self.sst.update_cache(w, 0, cluster.gpu_capacity_bytes)
+            self.sst.update_cache(w, 0, cluster.gpu_capacity(w), 0.0)
             self.sst.push(w, 0.0)
         self.results: List[RequestResult] = []
 
@@ -159,6 +168,10 @@ class ServingCluster:
         now = max(self._vclock)
         job = Job(self._jobid, dfg, arrival_time=now)
         self._jobid += 1
+        if self.gossip is not None:
+            # Run the gossip rounds due up to the request's arrival; the
+            # origin worker then plans from its own (possibly stale) view.
+            self.sst.advance(now)
         adfg = self.scheduler.plan(job, now, origin, self.sst.view(origin))
         if adfg is None:
             raise NotImplementedError("serving engine drives planned schedulers")
@@ -186,7 +199,7 @@ class ServingCluster:
                 if res is not None:
                     fetch_s, _ = res
                     start += fetch_s
-                self.sst.update_cache(w, mem.bitmap, mem.free_bytes)
+                self.sst.update_cache(w, mem.bitmap, mem.free_bytes, start)
                 prompt = self._task_input(tid, dfg, inputs, outputs)
                 out, wall = self.engine.run_task(task.model_id, prompt)
                 outputs[tid] = out
@@ -200,8 +213,11 @@ class ServingCluster:
                 runtime = 1e-4
             finish[tid] = start + runtime
             self._vclock[w] = finish[tid]
-            self.sst.update_load(w, self._vclock[w])
-            self.sst.push(w, finish[tid])
+            self.sst.update_load(w, self._vclock[w], finish[tid])
+            if self.gossip is not None:
+                self.sst.advance(finish[tid])
+            else:
+                self.sst.push(w, finish[tid])
         result = RequestResult(
             job_id=job.job_id,
             dfg_name=dfg.name,

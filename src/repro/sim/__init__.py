@@ -2,6 +2,8 @@ from repro.sim.engine import JobRecord, SimResult, Simulation
 from repro.sim.workload import (
     arrival_rate_timeline,
     bursty_trace_workload,
+    fleet_scaled_rate,
+    fleet_workload,
     poisson_workload,
 )
 
@@ -11,5 +13,7 @@ __all__ = [
     "Simulation",
     "arrival_rate_timeline",
     "bursty_trace_workload",
+    "fleet_scaled_rate",
+    "fleet_workload",
     "poisson_workload",
 ]

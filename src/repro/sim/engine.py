@@ -36,6 +36,7 @@ from repro.core.scheduler import (
     Scheduler,
     make_scheduler,
 )
+from repro.core.sst_exchange import GossipConfig, GossipPlane
 from repro.core.state import SharedStateTable
 from repro.core.types import ADFG, Job, MLModel
 
@@ -168,6 +169,7 @@ class Simulation:
         eviction_policy: str = GpuMemoryManager.LOOKAHEAD,
         push_interval_s: float = 0.2,
         cache_push_interval_s: Optional[float] = None,
+        gossip: Optional[GossipConfig] = None,
         runtime_noise_sigma: float = 0.25,
         seed: int = 0,
     ) -> None:
@@ -177,18 +179,25 @@ class Simulation:
         self.scheduler: Scheduler = make_scheduler(
             scheduler, profiles, navigator_config
         )
-        self.sst = SharedStateTable(
-            cluster.n_workers, push_interval_s, cache_push_interval_s
-        )
+        # Metadata plane: ``gossip`` selects the decentralized per-worker
+        # view subsystem (each worker plans from its own, possibly stale,
+        # replica); default is the single-published-snapshot table.
+        self.gossip = gossip
+        if gossip is not None:
+            self.sst = GossipPlane(cluster.n_workers, gossip, seed=seed)
+        else:
+            self.sst = SharedStateTable(
+                cluster.n_workers, push_interval_s, cache_push_interval_s
+            )
         self.memories = [
             GpuMemoryManager(
-                cluster.gpu_capacity_bytes,
+                cluster.gpu_capacity(w),
                 self.models,
                 cluster.link,
                 policy=eviction_policy,
                 compression_ratio=cluster.compression_ratio,
             )
-            for _ in cluster.workers()
+            for w in cluster.workers()
         ]
         self.rng = random.Random(seed)
         self.noise_sigma = runtime_noise_sigma
@@ -209,7 +218,7 @@ class Simulation:
         self._workers_used: Set[int] = set()
         self._adjustments = 0
         for w in cluster.workers():
-            self.sst.update_cache(w, 0, cluster.gpu_capacity_bytes)
+            self.sst.update_cache(w, 0, cluster.gpu_capacity(w), 0.0)
             self.sst.push(w, 0.0)
 
     # -- event plumbing ----------------------------------------------------------
@@ -227,15 +236,22 @@ class Simulation:
         for job in sorted(jobs, key=lambda j: j.arrival_time):
             self._post(job.arrival_time, "arrival", job, next(origin))
         # SST dissemination schedule (staggered per worker).
-        for w in self.cluster.workers():
-            offset = (w + 1) * self.sst.push_interval_s / max(
-                1, self.cluster.n_workers
-            )
-            self._post(offset, "sst_load", w)
-            offset_c = (w + 1) * self.sst.cache_push_interval_s / max(
-                1, self.cluster.n_workers
-            )
-            self._post(offset_c, "sst_cache", w)
+        if self.gossip is not None:
+            for w in self.cluster.workers():
+                offset = (w + 1) * self.gossip.period_s / max(
+                    1, self.cluster.n_workers
+                )
+                self._post(offset, "gossip", w)
+        else:
+            for w in self.cluster.workers():
+                offset = (w + 1) * self.sst.push_interval_s / max(
+                    1, self.cluster.n_workers
+                )
+                self._post(offset, "sst_load", w)
+                offset_c = (w + 1) * self.sst.cache_push_interval_s / max(
+                    1, self.cluster.n_workers
+                )
+                self._post(offset_c, "sst_cache", w)
         self._jobs_open = len(jobs)
 
         while self._heap and self._jobs_open > 0:
@@ -262,6 +278,10 @@ class Simulation:
                 self._post(
                     t + self.sst.cache_push_interval_s, "sst_cache", ev[1]
                 )
+            elif kind == "gossip":
+                self._on_gossip(ev[1])
+            elif kind == "gossip_rx":
+                self.sst.deliver(ev[1], ev[2], t)
             else:  # pragma: no cover
                 raise AssertionError(f"unknown event {kind}")
 
@@ -489,6 +509,17 @@ class Simulation:
         if task.model_id is not None:
             self.memories[worker].unpin(task.model_id)
 
+    # -- gossip plane (decentralized SST, §5.2) ------------------------------------
+    def _on_gossip(self, worker: int) -> None:
+        """One gossip round: the plane computes the diff messages (drops
+        already sampled); delivery is delayed by the network model, so a
+        reader's view lags by period + wire time."""
+        assert self.gossip is not None and isinstance(self.sst, GossipPlane)
+        for peer, updates, nbytes in self.sst.exchange(worker, self._now):
+            delay = self.cluster.network.transfer_time(nbytes)
+            self._post(self._now + delay, "gossip_rx", peer, updates)
+        self._post(self._now + self.gossip.period_s, "gossip", worker)
+
     # -- state publication ---------------------------------------------------------
     def _update_load(self, worker: int) -> None:
         """Recompute FT(w) = now + remaining work on the queue (§4.1)."""
@@ -502,8 +533,8 @@ class Simulation:
             ft += max(0.0, self.profiles.runtime(task, worker) - elapsed)
         for js, tid in self._queues[worker]:
             ft += self.profiles.runtime(js.job.dfg.tasks[tid], worker)
-        self.sst.update_load(worker, ft)
+        self.sst.update_load(worker, ft, self._now)
 
     def _publish_cache(self, worker: int) -> None:
         mem = self.memories[worker]
-        self.sst.update_cache(worker, mem.bitmap, mem.free_bytes)
+        self.sst.update_cache(worker, mem.bitmap, mem.free_bytes, self._now)

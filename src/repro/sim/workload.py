@@ -14,6 +14,7 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.netmodel import ClusterSpec
 from repro.core.types import DFG, Job
 
 
@@ -100,6 +101,43 @@ def bursty_trace_workload(
         for i, a in enumerate(arrivals)
         if a < duration_s
     ]
+
+
+def fleet_scaled_rate(
+    cluster: ClusterSpec,
+    base_rate_per_s: float,
+    reference_speed: float = 1.0,
+) -> float:
+    """Scale an arrival rate by aggregate fleet throughput so a sweep over
+    heterogeneous fleets holds *offered load* (arrival rate ÷ service
+    capacity) constant.  ``base_rate_per_s`` is the rate calibrated for a
+    fleet of ``n_workers`` × ``reference_speed`` workers (the paper's
+    uniform-T4 testbed)."""
+    reference_capacity = reference_speed * cluster.n_workers
+    if reference_capacity <= 0:
+        return base_rate_per_s
+    return base_rate_per_s * cluster.total_speed / reference_capacity
+
+
+def fleet_workload(
+    dfgs: Sequence[DFG],
+    cluster: ClusterSpec,
+    base_rate_per_s: float,
+    duration_s: float,
+    seed: int = 0,
+    weights: Optional[Sequence[float]] = None,
+) -> List[Job]:
+    """Poisson workload whose rate is scaled to the fleet's aggregate
+    throughput (see ``fleet_scaled_rate``) — the generator the
+    heterogeneity sweeps use so "high load" means the same utilisation on
+    every fleet."""
+    return poisson_workload(
+        dfgs,
+        fleet_scaled_rate(cluster, base_rate_per_s),
+        duration_s,
+        seed=seed,
+        weights=weights,
+    )
 
 
 def arrival_rate_timeline(

@@ -1,0 +1,381 @@
+"""Decentralized SST gossip plane (§5.2): per-worker views, diff-based
+exchange, staleness bounds, and staleness-aware scheduling behaviour."""
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    GB,
+    GossipConfig,
+    GossipPlane,
+    Job,
+    NavigatorConfig,
+    NavigatorScheduler,
+    ProfileRepository,
+    build_fleet,
+    fleet,
+)
+from repro.core import bitmaps
+from repro.core.profiles import EDGE, T4, WorkerProfile
+from repro.sim import Simulation, fleet_scaled_rate, poisson_workload
+from repro.workflows import MODELS, paper_dfgs, translation_dfg, vpa_dfg
+
+
+def broadcast_plane(n, **cfg):
+    cfg.setdefault("fanout", n - 1)
+    return GossipPlane(n, GossipConfig(**cfg))
+
+
+def run_rounds(plane, t):
+    """One synchronous all-worker round at time ``t`` (immediate delivery)."""
+    for w in range(plane.n_workers):
+        for q, updates, _ in plane.exchange(w, t):
+            plane.deliver(q, updates, t)
+
+
+# -- view semantics ----------------------------------------------------------
+def test_views_are_per_worker():
+    plane = broadcast_plane(4)
+    plane.update_load(0, 33.0, now=1.0)
+    # Before any exchange: only worker 0 itself sees the update.
+    assert plane.view(0)[0].ft_estimate_s == 33.0
+    for w in (1, 2, 3):
+        assert plane.view(w)[0].ft_estimate_s == 0.0
+    # Two different workers can hold different replicas of the same row:
+    # gossip only to worker 1.
+    msgs = plane.exchange(0, 1.1)
+    (q, updates, _), = [m for m in msgs if m[0] == 1]
+    plane.deliver(1, updates, 1.1)
+    assert plane.view(1)[0].ft_estimate_s == 33.0
+
+
+def test_own_row_always_fresh_and_authoritative():
+    plane = broadcast_plane(3)
+    plane.update_load(1, 7.0, now=0.5)
+    assert plane.view(1)[1].ft_estimate_s == 7.0
+    # A stale echo of worker 1's own row must never overwrite ground truth.
+    stale = plane.view(0)[1]
+    plane.deliver(1, [(1, 999, stale)], 2.0)
+    assert plane.view(1)[1].ft_estimate_s == 7.0
+
+
+def test_staleness_bound_under_periodic_gossip():
+    """With broadcast rounds every P seconds and instant delivery, the age
+    of any remote row is bounded by P plus the owner's update recency: a
+    row updated just before a round is everywhere at most P old until the
+    next round."""
+    period = 0.2
+    plane = broadcast_plane(5, period_s=period)
+    for r in range(1, 11):
+        t_round = r * period
+        for w in range(5):  # every owner refreshes just before the round
+            plane.update_load(w, float(r * 10 + w), now=t_round - 0.01)
+        run_rounds(plane, t_round)
+        # At the round instant every view holds rows at most 0.01 s old...
+        assert plane.staleness(t_round) <= 0.01 + 1e-9
+        # ...and until the next round the lag grows to at most P + 0.01.
+        assert plane.staleness(t_round + period) <= period + 0.01 + 1e-9
+
+
+def test_convergence_after_quiescence():
+    """Random updates, then no further writes: a few fanout-2 rounds must
+    bring every worker's view to exact agreement with ground truth."""
+    plane = GossipPlane(6, GossipConfig(fanout=2, seed=11))
+    for step in range(30):
+        plane.update_load(step % 6, float(step), now=0.1 * step)
+    for r in range(12):  # epidemic spread: O(log n) rounds suffice w.h.p.
+        run_rounds(plane, 3.0 + 0.2 * r)
+    for reader in range(6):
+        view = plane.view(reader)
+        for owner in range(6):
+            assert view[owner].ft_estimate_s == plane.local[owner].ft_estimate_s
+            assert plane.versions[reader][owner] == plane.local[owner].version
+
+
+def test_exchange_is_diff_based():
+    """A round with k dirty rows ships exactly k row updates per contacted
+    peer — never the full table — and a peer already up to date receives
+    nothing on the next round."""
+    n = 64
+    plane = broadcast_plane(n, seed=5)
+    k = 7
+    for owner in range(k):
+        plane.update_load(owner, 1.0, now=0.1)
+        # Hand worker 0 the k dirty rows (as if learned from gossip).
+        if owner != 0:
+            plane.deliver(
+                0, [(owner, plane.local[owner].version, plane.local[owner])], 0.1
+            )
+    msgs = plane.exchange(0, 0.2)
+    assert all(len(updates) == k for _, updates, _ in msgs)
+    # Every peer's cursor has advanced: the next round ships nothing.
+    before = plane.rows_sent
+    assert plane.exchange(0, 0.4) == []
+    assert plane.rows_sent == before
+
+
+def test_dropped_messages_are_not_retransmitted_point_to_point():
+    plane = GossipPlane(2, GossipConfig(fanout=1, drop_prob=1.0))
+    plane.update_load(0, 5.0, now=0.1)
+    for r in range(5):
+        run_rounds(plane, 0.2 * (r + 1))
+    assert plane.view(1)[0].ft_estimate_s == 0.0
+    assert plane.messages_dropped > 0
+
+
+def test_bootstrap_push_broadcasts():
+    plane = GossipPlane(4, GossipConfig(fanout=1))
+    plane.update_cache(2, bitmaps.pack([1]), 8 * GB, now=0.0)
+    plane.push(2, 0.0)
+    for w in range(4):
+        assert plane.view(w)[2].cache_bitmap == bitmaps.pack([1])
+
+
+def test_log_compaction_bounds_memory():
+    n = 8
+    plane = GossipPlane(n, GossipConfig(fanout=n - 1, seed=2))
+    for step in range(2000):
+        plane.update_load(step % n, float(step), now=0.01 * step)
+        if step % 5 == 0:
+            run_rounds(plane, 0.01 * step)
+    assert max(len(log) for log in plane._log) < 40 * n
+
+
+def test_log_bounded_even_with_uncontacted_peer_then_full_sync_repairs():
+    """With fanout 1 some peer can go uncontacted for a long time; the log
+    must stay hard-bounded regardless, and a peer that fell behind the
+    truncated history must be repaired by an anti-entropy full sync."""
+    n = 4
+    plane = GossipPlane(n, GossipConfig(fanout=1, seed=9))
+    for step in range(5000):
+        plane.update_load(0, float(step), now=0.01 * step)
+        for q, updates, _ in plane.exchange(0, 0.01 * step):
+            plane.deliver(q, updates, 0.01 * step)
+    assert len(plane._log[0]) <= plane._max_log
+    # Force the full-sync path: a peer whose cursor predates the log base.
+    behind = next(
+        q for q in range(1, n) if plane._cursor[0][q] < plane._log_base[0]
+    ) if any(
+        plane._cursor[0][q] < plane._log_base[0] for q in range(1, n)
+    ) else 1
+    plane._cursor[0][behind] = 0
+    before = plane.full_syncs
+    # Exchange until the RNG picks that peer.
+    for step in range(200):
+        for q, updates, _ in plane.exchange(0, 100.0 + step):
+            plane.deliver(q, updates, 100.0 + step)
+        if plane.full_syncs > before:
+            break
+    assert plane.full_syncs > before
+    assert plane.view(behind)[0].ft_estimate_s == plane.local[0].ft_estimate_s
+
+
+def test_dropped_full_sync_is_retried():
+    """A lost diff is repaired by relay, but a lost anti-entropy full sync
+    must be retried on the next contact — otherwise a laggard peer whose
+    history was truncated is stranded with stale rows forever."""
+    n = 2  # single peer: every round contacts it
+    plane = GossipPlane(n, GossipConfig(fanout=1, drop_prob=1.0, seed=4))
+    plane.update_load(0, 42.0, now=0.1)
+    # Put peer 1 behind the truncated history.
+    plane.mark_synced(0)
+    plane._cursor[0][1] = 0
+    assert plane._cursor[0][1] < plane._log_base[0]
+    plane.exchange(0, 0.2)  # full sync attempted, dropped
+    assert plane.full_syncs == 1
+    # Cursor was rewound: the peer is still eligible for repair.
+    assert plane._cursor[0][1] < plane._log_base[0]
+    # Stop dropping: the retry lands and the peer converges.
+    object.__setattr__(plane.config, "drop_prob", 0.0)
+    for q, updates, _ in plane.exchange(0, 0.3):
+        plane.deliver(q, updates, 0.3)
+    assert plane.view(1)[0].ft_estimate_s == 42.0
+
+
+def test_mark_synced_empties_outbound_log():
+    plane = GossipPlane(4, GossipConfig(fanout=1, seed=1))
+    for i in range(10):
+        plane.update_load(0, float(i), now=0.1 * i)
+    plane.mark_synced(0)
+    assert plane._log[0] == []
+    assert plane.exchange(0, 2.0) == []  # nothing outstanding, no full sync
+    assert plane.full_syncs == 0
+
+
+# -- staleness-aware scheduling ----------------------------------------------
+@pytest.fixture
+def profiles():
+    cluster = ClusterSpec(n_workers=4)
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def warm_plane(n, capacity=16 * GB):
+    plane = broadcast_plane(n)
+    for w in range(n):
+        plane.update_cache(w, 0, capacity, now=0.0)
+        plane.push(w, 0.0)
+    return plane
+
+
+def test_navigator_plan_differs_between_fresh_and_stale_views(profiles):
+    """Regression for the decentralized regime: when a worker's queue
+    lengthens, a planner reading a *stale* replica keeps placing work on
+    it, while a planner with the fresh view avoids it."""
+    sched = NavigatorScheduler(profiles)
+    plane = warm_plane(4)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+
+    # Worker 0 holds the VPA models (cache-attractive), broadcast that...
+    plane.update_cache(0, bitmaps.pack([0, 5]), 16 * GB, now=0.0)
+    plane.push(0, 0.0)
+    # ...then its queue explodes at t=5, before any gossip round runs.
+    plane.update_load(0, 120.0, now=5.0)
+
+    stale_view = plane.view(1)  # worker 1 still believes 0 is idle
+    fresh_view = plane.view(0)  # worker 0 knows its own backlog
+    assert stale_view[0].ft_estimate_s == 0.0
+    assert fresh_view[0].ft_estimate_s == 120.0
+
+    plan_stale = sched.plan(job, 5.0, 1, stale_view)
+    plan_fresh = sched.plan(job, 5.0, 1, fresh_view)
+    # Stale planner chases the cached-and-supposedly-idle worker 0; the
+    # fresh planner knows better (120 s backlog >> refetching elsewhere).
+    assert any(w == 0 for _, w in plan_stale.items())
+    assert all(w != 0 for _, w in plan_fresh.items())
+    assert plan_stale.assignment != plan_fresh.assignment
+
+    # After one gossip round the stale planner converges to the fresh plan.
+    run_rounds(plane, 5.1)
+    plan_after = sched.plan(job, 5.2, 1, plane.view(1))
+    assert all(w != 0 for _, w in plan_after.items())
+
+
+def test_staleness_margin_blocks_moves_on_old_evidence(profiles):
+    """Alg. 2 hysteresis: with staleness_margin_per_s set, a very old row
+    advertising an idle worker is not enough to abandon the planned
+    (cache-affine) worker; with margin 0 the same evidence triggers the
+    move."""
+    from repro.core import ADFG
+
+    plane = warm_plane(4)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    now = 60.0
+    # Planned worker 0 is backlogged (fresh information)...
+    plane.update_load(0, now + 30.0, now=now)
+    run_rounds(plane, now)
+    # ...and candidate workers' rows are ancient (pushed_at == 0.0).
+    view = plane.view(0)
+    assert view[1].pushed_at == 0.0
+
+    adfg = ADFG(job)
+    adfg["opt_dialogue"] = 0
+    adfg["bart_shape"] = 0
+    adfg.planned_ft["opt_dialogue"] = now
+
+    eager = NavigatorScheduler(profiles, NavigatorConfig())
+    wary = NavigatorScheduler(
+        profiles,
+        NavigatorConfig(staleness_margin_per_s=1.0),  # 60 s age → huge bar
+    )
+    assert eager.adjust(job, adfg, "bart_shape", now, view, 0, 1e5) != 0
+    assert wary.adjust(job, adfg, "bart_shape", now, view, 0, 1e5) == 0
+
+
+def test_staleness_margin_exempts_adjusters_own_worker(profiles):
+    """The adjuster's own worker is local ground truth: even with an
+    ancient row and a large staleness margin, moving the task to the
+    worker doing the adjusting must not be blocked."""
+    from repro.core import ADFG, SharedStateTable
+
+    sst = SharedStateTable(4)
+    for w in range(4):
+        sst.update_cache(w, 0, 16 * GB, now=0.0)
+        sst.push(w, 0.0)
+    now = 60.0
+    sst.update_load(0, now + 30.0, now=now)  # planned worker backlogged
+    sst.push(0, now)
+    job = Job(0, vpa_dfg(), arrival_time=0.0)
+    adfg = ADFG(job)
+    adfg["opt_dialogue"] = 0
+    adfg["bart_shape"] = 0
+    adfg.planned_ft["opt_dialogue"] = now
+
+    wary = NavigatorScheduler(
+        profiles, NavigatorConfig(staleness_margin_per_s=10.0)
+    )
+    # Adjuster runs on worker 2; its own (fresh) row wins despite the
+    # huge margin, because self-evidence carries no staleness penalty.
+    view = sst.view(2)
+    assert wary.adjust(job, adfg, "bart_shape", now, view, 2, 1e5) == 2
+
+
+# -- simulator integration ---------------------------------------------------
+def sim_with_gossip(gossip, cluster=None, rate=2.0, duration=100.0, seed=3):
+    cluster = cluster or ClusterSpec(n_workers=5)
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    jobs = poisson_workload(paper_dfgs(), rate, duration, seed=seed)
+    sim = Simulation(
+        cluster, p, MODELS, scheduler="navigator", gossip=gossip, seed=1
+    )
+    return sim.run(jobs), jobs
+
+
+def test_gossip_sim_completes_all_jobs():
+    res, jobs = sim_with_gossip(GossipConfig(period_s=0.2, fanout=2))
+    assert len(res.records) == len(jobs)
+    assert res.sst_pushes > 0
+
+
+def test_gossip_staleness_degrades_gracefully():
+    """Navigator JCT should degrade, not cliff, as the gossip period grows
+    two orders of magnitude."""
+    fresh, _ = sim_with_gossip(GossipConfig(period_s=0.05, fanout=4))
+    stale, _ = sim_with_gossip(GossipConfig(period_s=4.0, fanout=4))
+    assert stale.mean_slowdown >= fresh.mean_slowdown * 0.9
+    assert stale.mean_slowdown <= fresh.mean_slowdown * 4.0
+
+
+def test_gossip_sim_deterministic():
+    a, _ = sim_with_gossip(GossipConfig(period_s=0.2, fanout=2))
+    b, _ = sim_with_gossip(GossipConfig(period_s=0.2, fanout=2))
+    assert a.mean_latency == b.mean_latency
+    assert a.sst_pushes == b.sst_pushes
+
+
+# -- heterogeneous fleets ----------------------------------------------------
+def test_build_fleet_spec():
+    cluster = build_fleet([T4, EDGE, WorkerProfile("big", 2.0, 24 * GB)])
+    assert cluster.n_workers == 3
+    assert cluster.speed(1) == 0.5 and cluster.speed(2) == 2.0
+    assert cluster.gpu_capacity(1) == 8 * GB
+    assert cluster.gpu_capacity(2) == 24 * GB
+    assert cluster.total_speed == pytest.approx(3.5)
+
+
+def test_fleet_scaled_rate_holds_load_constant():
+    uniform = fleet("uniform")
+    mixed = fleet("mixed")
+    base = 2.0
+    assert fleet_scaled_rate(uniform, base) == pytest.approx(base)
+    assert fleet_scaled_rate(mixed, base) == pytest.approx(
+        base * mixed.total_speed / mixed.n_workers
+    )
+
+
+def test_heterogeneous_fleet_sim_completes_and_uses_fast_workers():
+    cluster = fleet("mixed")
+    rate = fleet_scaled_rate(cluster, 2.0)
+    res, jobs = sim_with_gossip(
+        GossipConfig(period_s=0.2, fanout=2), cluster=cluster, rate=rate
+    )
+    assert len(res.records) == len(jobs)
+    # The fastest worker (A10, w=0) should carry more executed work than
+    # the slowest (edge, w=4): Navigator sees shorter queues there.
+    fast = res.busy_time[0] * cluster.speed(0)
+    slow = res.busy_time[4] * cluster.speed(4)
+    assert fast > slow
