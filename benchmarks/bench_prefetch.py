@@ -1,0 +1,114 @@
+"""Predictive prefetch plane sweep (core/prefetch.py).
+
+Prefetch policy × lookahead depth × load × fleet on the bursty
+production-trace workload (the regime where plan-driven staging pays:
+bursts enqueue tasks whose models are not yet resident, and reactive
+fetching serializes behind upstream compute).  Reports P50/P99 JCT,
+demand hit rate, and wasted-prefetch bytes (aborted + evicted-unused +
+end-of-run resident-unused).
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+from benchmarks.common import save_json
+from repro.core import (
+    NavigatorConfig,
+    PrefetchConfig,
+    ProfileRepository,
+    fleet,
+)
+from repro.sim import Simulation, bursty_trace_workload, fleet_scaled_rate
+from repro.workflows import MODELS, paper_dfgs
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+DURATION_S = 90.0 if SMOKE else 600.0
+SEEDS = (3,) if SMOKE else (3, 7, 11)
+FLEETS = ["uniform"] if SMOKE else ["uniform", "mixed"]
+BASE_RATES = [0.8] if SMOKE else [0.8, 1.2]
+DEPTHS = [4] if SMOKE else [2, 4, 8]
+
+#: policy name -> (PrefetchConfig | None, NavigatorConfig)
+def _policies():
+    out = {"off": (None, NavigatorConfig())}
+    for depth in DEPTHS:
+        out[f"on_d{depth}"] = (
+            PrefetchConfig(lookahead_depth=depth),
+            NavigatorConfig(),
+        )
+    if not SMOKE:
+        # Ablations: fill-free-memory-only speculation, and intents
+        # advertised but never discounted by the planner.
+        out["on_noevict"] = (
+            PrefetchConfig(evict_for_prefetch=False),
+            NavigatorConfig(),
+        )
+        out["on_conf0"] = (
+            PrefetchConfig(),
+            NavigatorConfig(intent_confidence=0.0),
+        )
+    return out
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    out = {}
+    dfgs = paper_dfgs()
+    for fleet_name in FLEETS:
+        cluster = fleet(fleet_name)
+        profiles = ProfileRepository(cluster, MODELS)
+        for d in dfgs:
+            profiles.register(d)
+        for base_rate in BASE_RATES:
+            rate = fleet_scaled_rate(cluster, base_rate)
+            for policy, (pf, nc) in _policies().items():
+                p50s, p99s, hits, wasted = [], [], [], []
+                for seed in SEEDS:
+                    jobs = bursty_trace_workload(
+                        dfgs, rate, DURATION_S, seed=seed
+                    )
+                    res = Simulation(
+                        cluster,
+                        profiles,
+                        MODELS,
+                        scheduler="navigator",
+                        navigator_config=nc,
+                        prefetch=pf,
+                        seed=1,
+                    ).run(jobs)
+                    p50s.append(res.percentile_latency(0.5))
+                    p99s.append(res.percentile_latency(0.99))
+                    hits.append(res.cache_hit_rate)
+                    wasted.append(
+                        res.prefetch_wasted_bytes
+                        + res.prefetch_unused_resident_bytes
+                    )
+                key = f"{fleet_name}/load{base_rate}/{policy}"
+                n = len(SEEDS)
+                stats = {
+                    "p50_jct_s": sum(p50s) / n,
+                    "p99_jct_s": sum(p99s) / n,
+                    "hit_rate": sum(hits) / n,
+                    "wasted_prefetch_mb": sum(wasted) / n / 2**20,
+                }
+                out[key] = stats
+                rows.append((f"prefetch/{key}/p50_jct_s", 0.0,
+                             stats["p50_jct_s"]))
+                rows.append((f"prefetch/{key}/p99_jct_s", 0.0,
+                             stats["p99_jct_s"]))
+                rows.append((f"prefetch/{key}/hit_rate", 0.0,
+                             stats["hit_rate"]))
+                rows.append((f"prefetch/{key}/wasted_prefetch_mb", 0.0,
+                             stats["wasted_prefetch_mb"]))
+    save_json("prefetch", out)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

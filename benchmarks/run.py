@@ -1,12 +1,17 @@
 """Benchmark driver: one suite per paper table/figure plus kernel micro-
 benches and the roofline summary.  Prints ``name,us_per_call,derived``
-CSV; per-suite JSON artifacts land in results/bench/.
+CSV; per-suite JSON artifacts land in results/bench/, and a top-level
+``BENCH_trajectory.json`` (per-suite P50/P99 JCT + hit rate) is merged
+after every run so the performance trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [suite ...]
 """
 
 from __future__ import annotations
 
+import json
+import os
+import re
 import sys
 import time
 
@@ -16,14 +21,50 @@ SUITES = [
     "ablation",        # Fig. 7
     "staleness",       # gossip period × load × fleet sweep (+ Fig. 8 grid)
     "trace",           # Fig. 9
+    "prefetch",        # predictive prefetch plane sweep
     "scalability",     # Fig. 10
     "kernels",         # Pallas-kernel ref-path micro-benches
     "sst_microbench",  # gossip O(dirty-rows) + planner placement cost
 ]
 
+TRAJECTORY_PATH = os.environ.get("REPRO_TRAJECTORY", "BENCH_trajectory.json")
+
+# Row-name fragments worth tracking across PRs (JCT percentiles + hit
+# rates, whatever the suite's exact naming scheme).
+_TRACK = re.compile(
+    r"(p50|p95|p99|median|mean)_?(jct|latency|slowdown)|hit", re.IGNORECASE
+)
+
+
+def _summarize(rows):
+    """Pick the trajectory-worthy metrics out of a suite's rows."""
+    return {
+        name: round(derived, 6)
+        for name, _us, derived in rows
+        if _TRACK.search(name)
+    }
+
+
+def _merge_trajectory(per_suite):
+    """Update BENCH_trajectory.json in place, suite by suite, so partial
+    runs never clobber other suites' history."""
+    traj = {}
+    if os.path.exists(TRAJECTORY_PATH):
+        try:
+            with open(TRAJECTORY_PATH) as f:
+                traj = json.load(f)
+        except (OSError, ValueError):
+            traj = {}
+    suites = traj.setdefault("suites", {})
+    for suite, payload in per_suite.items():
+        suites[suite] = payload
+    with open(TRAJECTORY_PATH, "w") as f:
+        json.dump(traj, f, indent=1, sort_keys=True)
+
 
 def main() -> None:
     want = sys.argv[1:] or SUITES
+    per_suite = {}
     print("name,us_per_call,derived")
     for suite in want:
         mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
@@ -31,8 +72,18 @@ def main() -> None:
         rows = mod.run()
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.4f}", flush=True)
-        print(f"# suite {suite} done in {time.time()-t0:.1f}s",
+        elapsed = time.time() - t0
+        print(f"# suite {suite} done in {elapsed:.1f}s",
               file=sys.stderr)
+        summary = _summarize(rows)
+        if summary:
+            per_suite[suite] = {
+                "metrics": summary,
+                "wall_s": round(elapsed, 1),
+            }
+    if per_suite:
+        _merge_trajectory(per_suite)
+        print(f"# trajectory -> {TRAJECTORY_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,12 @@ from repro.core.netmodel import (
     NetworkModel,
     TPU_V5E_CLUSTER,
 )
+from repro.core.prefetch import (
+    PrefetchConfig,
+    PrefetchIntent,
+    PrefetchPlane,
+    PrefetchStats,
+)
 from repro.core.profiles import (
     FLEETS,
     ProfileRepository,
@@ -54,6 +60,10 @@ __all__ = [
     "NavigatorConfig",
     "NavigatorScheduler",
     "NetworkModel",
+    "PrefetchConfig",
+    "PrefetchIntent",
+    "PrefetchPlane",
+    "PrefetchStats",
     "ProfileRepository",
     "SCHEDULERS",
     "SSTRow",

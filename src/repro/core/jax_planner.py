@@ -36,6 +36,7 @@ class StaticPlanInputs:
     model_ids: np.ndarray                  # (T,) int, -1 = no model
     fetch_times: np.ndarray                # (T,) TD_model on miss
     cached_sizes: np.ndarray               # (T,) compressed model bytes
+    full_sizes: np.ndarray                 # (T,) decompressed model bytes
     td_outputs: np.ndarray                 # (T,) TD_output(t)
     td_inputs: np.ndarray                  # (T,) TD_input(t) (entry tasks)
     preds: Tuple[Tuple[int, ...], ...]     # indices into `order`
@@ -63,6 +64,9 @@ def build_static_inputs(
         cached_sizes=np.array(
             [profiles.cached_model_size(t.model_id) for t in t_arr], np.float32
         ),
+        full_sizes=np.array(
+            [profiles.model_size(t.model_id) for t in t_arr], np.float32
+        ),
         td_outputs=np.array(
             [profiles.td_output(t) for t in t_arr], np.float32
         ),
@@ -88,6 +92,9 @@ def plan_vectorized(
     now: jax.Array,          # scalar
     origin_worker: jax.Array,  # scalar int
     worker_speed: Optional[Tuple[float, ...]] = None,
+    intent_bits: Optional[jax.Array] = None,   # (W, 64) bool — intent bitmaps
+    intent_fresh: Optional[jax.Array] = None,  # (W,) bool — row fresh enough
+    gpu_capacity: Optional[jax.Array] = None,  # (W,) bytes; None = unbounded
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (assignment (T,) int32, planned_ft (T,) float32)."""
     t_count = len(static.order)
@@ -98,6 +105,11 @@ def plan_vectorized(
     )
     ft = jnp.maximum(ft0, now)
     bits = cache_bits
+    use_intents = intent_bits is not None and config.intent_confidence > 0.0
+    if intent_bits is None:
+        intent_bits = jnp.zeros_like(cache_bits)
+    if intent_fresh is None:
+        intent_fresh = jnp.zeros((n_workers,), bool)
     avc = avc0
     assign = []
     task_ft = []
@@ -106,6 +118,8 @@ def plan_vectorized(
     for ti in range(t_count):
         r_w = static.runtimes[ti] / speed                     # R(t, w)
         mid = int(static.model_ids[ti])
+        hit = jnp.zeros((n_workers,), bool)
+        intent_m = jnp.zeros((n_workers,), bool)
         if mid < 0 or not config.use_model_locality:
             td_model = (
                 jnp.zeros((n_workers,), jnp.float32)
@@ -114,6 +128,7 @@ def plan_vectorized(
             )
         else:
             hit = bits[:, mid]
+            intent_m = intent_bits[:, mid] & intent_fresh
             fits = static.cached_sizes[ti] <= avc
             # Eq. 2 third case: mean refetch cost of resident models.
             if config.eviction_penalty_s is not None:
@@ -123,11 +138,16 @@ def plan_vectorized(
                 # fetch time (vector-friendly surrogate; exact per-worker
                 # catalogue means are maintained by the Python planner).
                 penalty = static.fetch_times[ti]
-            td_model = jnp.where(
-                hit,
-                0.0,
-                static.fetch_times[ti] + jnp.where(fits, 0.0, penalty),
-            )
+            miss_cost = static.fetch_times[ti] + jnp.where(fits, 0.0, penalty)
+            if use_intents:
+                # Prefetch plane: intended models cost the undiscounted
+                # remainder of the fetch (core/prefetch.py).
+                miss_cost = jnp.where(
+                    intent_m,
+                    static.fetch_times[ti] * (1.0 - config.intent_confidence),
+                    miss_cost,
+                )
+            td_model = jnp.where(hit, 0.0, miss_cost)
         # AT_allInputs (Eq. 3-4).
         if static.is_entry[ti]:
             at = now + jnp.where(
@@ -146,7 +166,32 @@ def plan_vectorized(
                 at = jnp.maximum(at, arrival)
         x = jnp.maximum(ft, at)                               # line 8
         ftw = x + td_model + r_w                              # line 9
+        if mid >= 0 and gpu_capacity is not None:
+            # Static feasibility: cached + decompressed must fit the GPU
+            # (mirrors ProfileRepository.model_fits).
+            feasible = (
+                static.cached_sizes[ti] + static.full_sizes[ti]
+                <= gpu_capacity
+            )
+            ftw = jnp.where(feasible, ftw, jnp.inf)
         w_min = jnp.argmin(ftw)                               # line 10
+        if (
+            mid >= 0
+            and config.use_model_locality
+            and config.intent_herd_margin > 0.0
+        ):
+            # Anti-herd stickiness (mirrors Scheduler._herd_sticky_choice):
+            # move to the cheapest holder/intender unless the plain argmin
+            # beats it by more than the margin.
+            have = hit | intent_m
+            ft_have = jnp.where(have, ftw, jnp.inf)
+            alt = jnp.argmin(ft_have)
+            use_alt = (
+                jnp.any(have)
+                & ~have[w_min]
+                & (ft_have[alt] <= ftw[w_min] * (1.0 + config.intent_herd_margin))
+            )
+            w_min = jnp.where(use_alt, alt, w_min)
         ft_min = ftw[w_min]
         assign.append(w_min)
         task_ft.append(ft_min)
@@ -180,9 +225,15 @@ class JaxNavigatorPlanner:
         static = self._static[dfg.name]
         n = self.profiles.cluster.n_workers
         bits = np.zeros((n, 64), bool)
+        ibits = np.zeros((n, 64), bool)
+        fresh = np.zeros((n,), bool)
         for w, row in enumerate(sst):
             for m in range(64):
                 bits[w, m] = bool((row.cache_bitmap >> m) & 1)
+                ibits[w, m] = bool((row.intent_bitmap >> m) & 1)
+            fresh[w] = (
+                max(0.0, now - row.pushed_at) <= self.config.intent_fresh_s
+            )
         assign, task_ft = plan_vectorized(
             static,
             self.config,
@@ -192,6 +243,12 @@ class JaxNavigatorPlanner:
             jnp.asarray([r.free_cache_bytes for r in sst], jnp.float32),
             jnp.float32(now),
             jnp.int32(origin_worker),
+            intent_bits=jnp.asarray(ibits),
+            intent_fresh=jnp.asarray(fresh),
+            gpu_capacity=jnp.asarray(
+                [self.profiles.cluster.gpu_capacity(w) for w in range(n)],
+                jnp.float32,
+            ),
         )
         adfg = ADFG(job)
         for i, tid in enumerate(static.order):

@@ -31,6 +31,15 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     bytes_fetched: float = 0.0
+    # Speculative (plan-driven) prefetch accounting.  ``bytes_fetched``
+    # stays the total PCIe traffic (demand + prefetch); the fields below
+    # split out the speculative share and its outcome.
+    prefetch_fetches: int = 0
+    prefetch_bytes: float = 0.0
+    prefetch_useful: int = 0        # prefetched model later demanded
+    prefetch_aborted: int = 0       # preempted/cancelled mid-flight
+    prefetch_wasted: int = 0        # never demanded before leaving cache
+    prefetch_wasted_bytes: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -74,6 +83,9 @@ class GpuMemoryManager:
         self._pinned: Dict[int, int] = {}  # model_id -> pin count
         # Decompressed execution-memory reservations: model_id -> count.
         self._executing: Dict[int, int] = {}
+        # Models brought in speculatively and not yet demanded; leaving
+        # the cache while in this set counts as wasted prefetch.
+        self._prefetched_unused: set = set()
         self.stats = CacheStats()
 
     def cached_size(self, model_id: int) -> float:
@@ -82,6 +94,14 @@ class GpuMemoryManager:
     # -- inspection ----------------------------------------------------------
     def has(self, model_id: int) -> bool:
         return model_id in self._contents
+
+    def can_host(self, model_id: int) -> bool:
+        """Whether this GPU can *ever* execute the model: one compressed
+        cache copy plus one decompressed execution instance must fit."""
+        return (
+            self.cached_size(model_id) + self.models[model_id].size_bytes
+            <= self.capacity_bytes
+        )
 
     @property
     def used_bytes(self) -> float:
@@ -98,6 +118,15 @@ class GpuMemoryManager:
     def free_bytes(self) -> float:
         """AVC(w) (§4.1): capacity minus cache minus execution memory."""
         return self.capacity_bytes - self.used_bytes - self.exec_reserved_bytes
+
+    @property
+    def available_bytes(self) -> float:
+        """AVC(w) as *advertised* under the prefetch plane: speculative
+        contents nobody has demanded yet are the cheapest victims, so the
+        space they occupy is still 'available' to the placement cost —
+        otherwise speculation would make workers look full and repel the
+        very tasks it prefetched for."""
+        return self.free_bytes + self.unused_prefetched_bytes()
 
     @property
     def bitmap(self) -> int:
@@ -120,6 +149,35 @@ class GpuMemoryManager:
     def _evictable(self) -> List[int]:
         return [m for m in self._contents if m not in self._pinned]
 
+    # -- prefetch bookkeeping -------------------------------------------------
+    def _note_demand_use(self, model_id: int) -> None:
+        """First demand touch of a speculatively fetched model."""
+        if model_id in self._prefetched_unused:
+            self._prefetched_unused.discard(model_id)
+            self.stats.prefetch_useful += 1
+
+    def _note_departure(self, model_id: int, bytes_lost: float) -> None:
+        """A model left the cache; if it was prefetched and never
+        demanded, its transfer was wasted."""
+        if model_id in self._prefetched_unused:
+            self._prefetched_unused.discard(model_id)
+            self.stats.prefetch_wasted += 1
+            self.stats.prefetch_wasted_bytes += bytes_lost
+
+    def _evict(self, model_id: int) -> None:
+        size = self._contents.pop(model_id)
+        self.stats.evictions += 1
+        self._note_departure(model_id, size)
+
+    def unused_prefetched_bytes(self) -> float:
+        """Resident bytes brought in speculatively and never demanded so
+        far (end-of-run residual waste, reported by the benchmarks)."""
+        return sum(
+            self._contents[m]
+            for m in self._prefetched_unused
+            if m in self._contents
+        )
+
     # -- eviction ------------------------------------------------------------
     def _eviction_order(self, upcoming_model_ids: Sequence[int]) -> List[int]:
         """Victims, most-evictable first."""
@@ -128,7 +186,9 @@ class GpuMemoryManager:
             return candidates  # already insertion ordered
         # Queue-lookahead: next-use position within the lookahead window;
         # models not needed in the window sort first (use position = inf),
-        # then by *latest* next use; FIFO breaks ties.
+        # then by *latest* next use; FIFO breaks ties.  Speculative
+        # contents nobody demanded yet are the cheapest victims of all —
+        # evicting them merely un-speculates.
         window = list(upcoming_model_ids)[: self.lookahead_depth]
         next_use: Dict[int, int] = {}
         for pos, mid in enumerate(window):
@@ -137,7 +197,11 @@ class GpuMemoryManager:
         fifo_pos = {mid: i for i, mid in enumerate(self._contents)}
         return sorted(
             candidates,
-            key=lambda m: (-next_use.get(m, 10**9), fifo_pos[m]),
+            key=lambda m: (
+                m not in self._prefetched_unused or m in next_use,
+                -next_use.get(m, 10**9),
+                fifo_pos[m],
+            ),
         )
 
     def would_evict(
@@ -179,6 +243,7 @@ class GpuMemoryManager:
             raise KeyError(f"unknown model id {model_id}")
         if self.has(model_id):
             self.stats.hits += 1
+            self._note_demand_use(model_id)
             # refresh nothing: FIFO order is by insertion, not use (§5.3.1)
             return 0.0, []
         size = self.cached_size(model_id)
@@ -190,12 +255,75 @@ class GpuMemoryManager:
         if size > self.free_bytes and not victims:
             return None
         for v in victims:
-            del self._contents[v]
-            self.stats.evictions += 1
+            self._evict(v)
         self._contents[model_id] = size
         self.stats.misses += 1
         self.stats.bytes_fetched += size
         return self.fetch_seconds(model_id), victims
+
+    # -- speculative fetch (predictive prefetch plane) ------------------------
+    def begin_prefetch(
+        self,
+        model_id: int,
+        upcoming_model_ids: Sequence[int] = (),
+        allow_evict: bool = False,
+    ) -> Optional[Tuple[float, List[int]]]:
+        """Start a speculative fetch of ``model_id`` on the fetch pipe.
+
+        Like :meth:`ensure` but with speculative accounting (no demand
+        miss is charged) and a fetch-pin held until
+        :meth:`complete_prefetch` / :meth:`abort_prefetch` — an in-flight
+        speculative model is never an eviction victim.  With
+        ``allow_evict=False`` (the default) the fetch only proceeds into
+        free memory: speculation must not displace resident models.
+        Returns ``None`` when the model is already resident or cannot be
+        staged right now.
+        """
+        if model_id not in self.models:
+            raise KeyError(f"unknown model id {model_id}")
+        if self.has(model_id):
+            return None
+        size = self.cached_size(model_id)
+        if size + self.models[model_id].size_bytes > self.capacity_bytes:
+            return None
+        victims: List[int] = []
+        if size > self.free_bytes:
+            if not allow_evict:
+                return None
+            victims = self.would_evict(model_id, upcoming_model_ids)
+            if not victims:
+                return None
+        for v in victims:
+            self._evict(v)
+        self._contents[model_id] = size
+        self._prefetched_unused.add(model_id)
+        self.pin(model_id)  # fetch-pin for the transfer duration
+        self.stats.prefetch_fetches += 1
+        self.stats.prefetch_bytes += size
+        self.stats.bytes_fetched += size
+        return self.fetch_seconds(model_id), victims
+
+    def complete_prefetch(self, model_id: int) -> None:
+        """The speculative transfer finished: release the fetch-pin (the
+        model stays resident, evictable per policy)."""
+        self.unpin(model_id)
+
+    def abort_prefetch(self, model_id: int, fraction_done: float = 0.0) -> None:
+        """A demand fetch preempted (or a cancellation killed) the
+        speculative transfer.  The partial bytes moved so far are wasted;
+        the un-transferred remainder never hit the pipe."""
+        self.unpin(model_id)
+        size = self._contents.pop(model_id, None)
+        if size is None:
+            return
+        frac = min(1.0, max(0.0, fraction_done))
+        undone = size * (1.0 - frac)
+        self.stats.bytes_fetched -= undone
+        self.stats.prefetch_bytes -= undone
+        self.stats.prefetch_aborted += 1
+        self._prefetched_unused.discard(model_id)
+        self.stats.prefetch_wasted += 1
+        self.stats.prefetch_wasted_bytes += size * frac
 
     # -- execution memory (§3.3) ----------------------------------------------
     def begin_execution(
@@ -208,13 +336,13 @@ class GpuMemoryManager:
         this is rare and self-corrects when tasks finish)."""
         self._executing[model_id] = self._executing.get(model_id, 0) + 1
         self.pin(model_id)
+        self._note_demand_use(model_id)
         if self.free_bytes >= 0:
             return
         for victim in self._eviction_order(upcoming_model_ids):
             if self.free_bytes >= 0:
                 break
-            del self._contents[victim]
-            self.stats.evictions += 1
+            self._evict(victim)
 
     def end_execution(self, model_id: int) -> None:
         n = self._executing.get(model_id, 0) - 1
@@ -225,7 +353,9 @@ class GpuMemoryManager:
         self.unpin(model_id)
 
     def drop(self, model_id: int) -> None:
-        self._contents.pop(model_id, None)
+        size = self._contents.pop(model_id, None)
+        if size is not None:
+            self._note_departure(model_id, size)
 
     def preload(self, model_ids: Iterable[int]) -> None:
         """Warm the cache without counting stats (test/benchmark setup)."""

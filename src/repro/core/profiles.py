@@ -143,6 +143,18 @@ class ProfileRepository:
             return 0.0
         return self.models[model_id].size_bytes * self.cluster.compression_ratio
 
+    def model_fits(self, model_id: Optional[int], worker: int) -> bool:
+        """Static feasibility: the worker's GPU must hold one compressed
+        cache copy plus one decompressed execution instance (§3.3).
+        Heterogeneous fleets can contain workers too small for the
+        largest models; capacity-aware schedulers price them out."""
+        if model_id is None:
+            return True
+        footprint = self.models[model_id].size_bytes * (
+            1.0 + self.cluster.compression_ratio
+        )
+        return footprint <= self.cluster.gpu_capacity(worker)
+
     # -- ranking (Eq. 1) ---------------------------------------------------------
     def _compute_ranks(self, dfg: DFG) -> Dict[str, float]:
         ranks: Dict[str, float] = {}

@@ -55,6 +55,25 @@ class NavigatorConfig:
     # disables (and with a fresh SharedStateTable rows are near-zero age,
     # so this is a no-op for the centralized-snapshot configuration).
     staleness_margin_per_s: float = 0.0
+    # Prefetch plane (core/prefetch.py): Eq. 2 discount for models a
+    # worker *intends* to hold (advertised intent bitmap ⊃ cache bitmap).
+    # An intended-but-not-yet-resident model costs
+    # ``TD_model × (1 − intent_confidence)`` — the fetch is (probably)
+    # already overlapping queue wait on that worker.  0.0 disables; the
+    # discount is inert anyway while intent bitmaps are all-zero (plane
+    # off).
+    intent_confidence: float = 0.7
+    # Intent advertisements older than this get no discount: the plan
+    # that produced them has likely played out or been adjusted away
+    # (anti-herd: stale evidence must not create phantom cheap workers).
+    intent_fresh_s: float = 5.0
+    # Anti-herd stickiness: when the cheapest worker for a model-bearing
+    # task neither holds nor intends the model but another worker does,
+    # prefer the intending worker unless the cheapest wins by more than
+    # this relative margin — concurrent planners then converge on the
+    # worker already committed to the fetch instead of spawning
+    # redundant fetches from stale views.  0.0 = pure argmin.
+    intent_herd_margin: float = 0.0
     # Ablations:
     use_model_locality: bool = True      # Fig. 7 "model locality"
     use_dynamic_adjustment: bool = True  # Fig. 7 "dynamic task scheduling"
@@ -135,6 +154,8 @@ class NavigatorScheduler(Scheduler):
         worker: int,
         bitmap: int,
         avc_bytes: float,
+        intent_bitmap: int = 0,
+        intent_fresh: bool = False,
     ) -> float:
         mid = task.model_id
         if mid is None:
@@ -146,6 +167,15 @@ class NavigatorScheduler(Scheduler):
         if bitmaps.contains(bitmap, mid):
             return 0.0
         fetch = self.profiles.td_model(mid)
+        if (
+            intent_fresh
+            and self.config.intent_confidence > 0.0
+            and bitmaps.contains(intent_bitmap, mid)
+        ):
+            # Prefetch plane: the worker advertises an in-flight/queued
+            # fetch for this model — by the time the task runs, (most of)
+            # the transfer has already overlapped queue wait.
+            return fetch * (1.0 - self.config.intent_confidence)
         if self.profiles.cached_model_size(mid) <= avc_bytes:
             return fetch
         return fetch + self._eviction_penalty(bitmap)
@@ -172,21 +202,34 @@ class NavigatorScheduler(Scheduler):
         ft_map = self._ft_map(now, sst)                       # line 2
         bitmap = [row.cache_bitmap for row in sst]
         avc = [row.free_cache_bytes for row in sst]
+        intent = [row.intent_bitmap for row in sst]
+        fresh = [
+            max(0.0, now - row.pushed_at) <= self.config.intent_fresh_s
+            for row in sst
+        ]
         adfg = ADFG(job)
 
         for tid in self.profiles.rank_order(dfg):             # lines 4-5
             task = dfg.tasks[tid]
-            best_w, best_ft = -1, float("inf")
+            fts: List[float] = []
             for w in workers:                                 # line 7
+                if not self.profiles.model_fits(task.model_id, w):
+                    fts.append(float("inf"))  # GPU can never host the model
+                    continue
                 at = self._at_all_inputs(job, tid, w, now, origin_worker, adfg)
                 x = max(ft_map[w], at)                        # line 8
-                ft = (
+                fts.append(
                     x
-                    + self._td_model(task, w, bitmap[w], avc[w])
+                    + self._td_model(
+                        task, w, bitmap[w], avc[w], intent[w], fresh[w]
+                    )
                     + self.profiles.runtime(task, w)
                 )                                             # line 9
-                if ft < best_ft:
-                    best_w, best_ft = w, ft
+            best_w = min(workers, key=lambda w: fts[w])       # line 10
+            best_w = self._herd_sticky_choice(
+                task.model_id, best_w, fts, bitmap, intent, fresh, workers
+            )
+            best_ft = fts[best_w]
             adfg[tid] = best_w                                # line 11
             adfg.planned_ft[tid] = best_ft
             ft_map[best_w] = best_ft                          # line 12
@@ -199,6 +242,42 @@ class NavigatorScheduler(Scheduler):
                         - self.profiles.cached_model_size(task.model_id),
                     )
         return adfg
+
+    def _herd_sticky_choice(
+        self,
+        model_id: Optional[int],
+        best_w: int,
+        fts: Sequence[float],
+        bitmap: Sequence[int],
+        intent: Sequence[int],
+        fresh: Sequence[bool],
+        workers: Sequence[int],
+    ) -> int:
+        """Anti-herd hysteresis: if the argmin worker neither holds nor
+        intends the task's model but some worker does, move to the best
+        such worker unless the argmin wins by more than the margin."""
+        margin = self.config.intent_herd_margin
+        if (
+            model_id is None
+            or margin <= 0.0
+            or not self.config.use_model_locality
+        ):
+            return best_w
+
+        def holds(w: int) -> bool:
+            return bitmaps.contains(bitmap[w], model_id) or (
+                fresh[w] and bitmaps.contains(intent[w], model_id)
+            )
+
+        if holds(best_w):
+            return best_w
+        holders = [w for w in workers if holds(w)]
+        if not holders:
+            return best_w
+        alt = min(holders, key=lambda w: fts[w])
+        if fts[alt] <= fts[best_w] * (1.0 + margin):
+            return alt
+        return best_w
 
     # -- Eq. 3-4 ----------------------------------------------------------------
     def _at_all_inputs(
@@ -253,10 +332,19 @@ class NavigatorScheduler(Scheduler):
         td_in = self.cluster.network.transfer_time(input_bytes)
 
         def est(w: int) -> float:
+            if not self.profiles.model_fits(task.model_id, w):
+                return float("inf")
+            row = sst[w]
             ft = (
                 ft_map[w]
                 + self._td_model(
-                    task, w, sst[w].cache_bitmap, sst[w].free_cache_bytes
+                    task,
+                    w,
+                    row.cache_bitmap,
+                    row.free_cache_bytes,
+                    row.intent_bitmap,
+                    max(0.0, now - row.pushed_at)
+                    <= self.config.intent_fresh_s,
                 )
                 + self.profiles.runtime(task, w)
             )
@@ -327,6 +415,8 @@ class JITScheduler(Scheduler):
         ft_map = self._ft_map(now, sst)
         best_w, best_ft = 0, float("inf")
         for w in range(len(ft_map)):
+            if not self.profiles.model_fits(task.model_id, w):
+                continue  # GPU can never host the model
             # Inputs that are not already on w must be transferred.
             td_in = 0.0
             for src, loc in input_locations.items():

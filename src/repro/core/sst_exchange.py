@@ -29,7 +29,8 @@ cache line, keeping the wire format faithful to Fig. 5):
   [3] free cache KiB
   [4] queue_len
   [5] row version (monotonic per owner; merge is newest-wins)
-  [6..7] reserved
+  [6] intent_bitmap lo 32 bits (prefetch plane: resident ∪ in-flight ∪ queued)
+  [7] intent_bitmap hi 32 bits
 """
 
 from __future__ import annotations
@@ -57,6 +58,8 @@ def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
     out[3] = np.uint32(min(row.free_cache_bytes / 1024.0, 2**32 - 1))
     out[4] = np.uint32(queue_len)
     out[5] = np.uint32(row.version & 0xFFFFFFFF)
+    out[6] = np.uint32(row.intent_bitmap & 0xFFFFFFFF)
+    out[7] = np.uint32((row.intent_bitmap >> 32) & 0xFFFFFFFF)
     return out
 
 
@@ -64,12 +67,14 @@ def unpack_rows(table: np.ndarray) -> List[SSTRow]:
     rows = []
     for r in np.asarray(table, np.uint32):
         bitmap = int(r[1]) | (int(r[2]) << 32)
+        intent = int(r[6]) | (int(r[7]) << 32)
         rows.append(
             SSTRow(
                 ft_estimate_s=float(r[0:1].view(np.float32)[0]),
                 cache_bitmap=bitmap,
                 free_cache_bytes=float(r[3]) * 1024.0,
                 version=int(r[5]),
+                intent_bitmap=intent,
             )
         )
     return rows
@@ -240,6 +245,14 @@ class GossipPlane:
         row = self.local[worker]
         row.cache_bitmap = cache_bitmap
         row.free_cache_bytes = free_cache_bytes
+        self._bump(worker, now)
+
+    def update_intent(
+        self, worker: int, intent_bitmap: int, now: float = 0.0
+    ) -> None:
+        """Prefetch-plane advertisement; disseminates like any other row
+        mutation (diff-shipped, epidemically relayed)."""
+        self.local[worker].intent_bitmap = intent_bitmap
         self._bump(worker, now)
 
     # -- exchange ------------------------------------------------------------

@@ -36,6 +36,10 @@ class SSTRow:
     # Monotonic per-owner version; the gossip plane (sst_exchange.py) uses
     # it to merge replicas newest-wins and to ship version-vector diffs.
     version: int = 0
+    # Prefetch-plane advertisement: resident ∪ in-flight ∪ queued-to-fetch
+    # models (core/prefetch.py).  Superset of ``cache_bitmap`` when the
+    # plane is enabled; 0 (inert) otherwise.
+    intent_bitmap: int = 0
 
     def copy(self) -> "SSTRow":
         return SSTRow(
@@ -44,6 +48,7 @@ class SSTRow:
             self.free_cache_bytes,
             self.pushed_at,
             self.version,
+            self.intent_bitmap,
         )
 
 
@@ -96,6 +101,15 @@ class SharedStateTable:
         row.free_cache_bytes = free_cache_bytes
         row.pushed_at = max(row.pushed_at, now)
 
+    def update_intent(
+        self, worker: int, intent_bitmap: int, now: float = 0.0
+    ) -> None:
+        """Prefetch-plane advertisement (resident ∪ in-flight ∪ queued);
+        rides the cache-field publication cadence."""
+        row = self.local[worker]
+        row.intent_bitmap = intent_bitmap
+        row.pushed_at = max(row.pushed_at, now)
+
     # -- publication --------------------------------------------------------
     def push_load(self, worker: int, now: float) -> None:
         self.published[worker].ft_estimate_s = self.local[worker].ft_estimate_s
@@ -105,6 +119,7 @@ class SharedStateTable:
     def push_cache(self, worker: int, now: float) -> None:
         self.published[worker].cache_bitmap = self.local[worker].cache_bitmap
         self.published[worker].free_cache_bytes = self.local[worker].free_cache_bytes
+        self.published[worker].intent_bitmap = self.local[worker].intent_bitmap
         self.published[worker].pushed_at = now
         self._pushes += 1
 

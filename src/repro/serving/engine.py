@@ -30,6 +30,8 @@ from repro.core import (
     GpuMemoryManager,
     Job,
     NavigatorConfig,
+    PrefetchConfig,
+    PrefetchPlane,
     ProfileRepository,
     SharedStateTable,
 )
@@ -118,6 +120,7 @@ class ServingCluster:
         navigator_config: Optional[NavigatorConfig] = None,
         decode_tokens: int = 8,
         gossip: Optional[GossipConfig] = None,
+        prefetch: Optional[PrefetchConfig] = None,
     ) -> None:
         self.cluster = cluster
         self.hosted = {h.model_id: h for h in hosted}
@@ -148,6 +151,20 @@ class ServingCluster:
         ]
         self.engine = ExecutionEngine(self.hosted, decode_tokens)
         self._vclock = [0.0] * cluster.n_workers  # per-worker virtual time
+        # Predictive prefetch plane (core/prefetch.py) on the virtual
+        # clock: planned intents stage models through the per-worker fetch
+        # pipe *before* their tasks reach the front of the queue.
+        self.prefetch_plane: Optional[PrefetchPlane] = None
+        if prefetch is not None:
+            self.prefetch_plane = PrefetchPlane(
+                cluster.n_workers, prefetch,
+                fetch_time_fn=self.profiles.td_model,
+            )
+        self._pipe_free_at = [0.0] * cluster.n_workers
+        # worker -> {model_id: virtual time the speculative transfer lands}
+        self._prefetch_ready_at: List[Dict[int, float]] = [
+            {} for _ in cluster.workers()
+        ]
         self._jobid = 0
         for w in cluster.workers():
             self.sst.update_cache(w, 0, cluster.gpu_capacity(w), 0.0)
@@ -175,6 +192,8 @@ class ServingCluster:
         adfg = self.scheduler.plan(job, now, origin, self.sst.view(origin))
         if adfg is None:
             raise NotImplementedError("serving engine drives planned schedulers")
+        if self.prefetch_plane is not None:
+            self._issue_prefetches(job, adfg, now)
 
         wall0 = time.perf_counter()
         outputs: Dict[str, np.ndarray] = {}
@@ -196,10 +215,39 @@ class ServingCluster:
             if task.model_id is not None:
                 upcoming = [task.model_id]
                 res = mem.ensure(task.model_id, upcoming)
+                ready = (
+                    self._prefetch_ready_at[w].pop(task.model_id, None)
+                    if self.prefetch_plane is not None
+                    else None
+                )
                 if res is not None:
                     fetch_s, _ = res
-                    start += fetch_s
+                    if fetch_s > 0.0 and self.prefetch_plane is not None:
+                        # Demand miss: demand preempts speculation on the
+                        # single fetch pipe — the transfer starts now, and
+                        # every speculative transfer still in flight is
+                        # pushed back behind it.
+                        t0 = start
+                        start += fetch_s
+                        self._pipe_free_at[w] = max(
+                            self._pipe_free_at[w] + fetch_s, start
+                        )
+                        for m, t in self._prefetch_ready_at[w].items():
+                            if t > t0:
+                                self._prefetch_ready_at[w][m] = t + fetch_s
+                    elif fetch_s > 0.0:
+                        start += fetch_s
+                    elif ready is not None:
+                        # Cache hit thanks to a speculative transfer that
+                        # may still be in flight on the virtual clock.
+                        start = max(start, ready)
                 self.sst.update_cache(w, mem.bitmap, mem.free_bytes, start)
+                if self.prefetch_plane is not None:
+                    self.sst.update_intent(
+                        w,
+                        mem.bitmap | self.prefetch_plane.advertised_bits(w),
+                        start,
+                    )
                 prompt = self._task_input(tid, dfg, inputs, outputs)
                 out, wall = self.engine.run_task(task.model_id, prompt)
                 outputs[tid] = out
@@ -228,6 +276,41 @@ class ServingCluster:
         )
         self.results.append(result)
         return result
+
+    def _issue_prefetches(self, job: Job, adfg, now: float) -> None:
+        """Virtual-clock analogue of the simulator's speculative fetch
+        path: every intended model is staged through the worker's fetch
+        pipe at plan time, so by the time its task reaches the front of
+        the queue the transfer has (partially) overlapped queue wait."""
+        plane = self.prefetch_plane
+        assert plane is not None
+        per = plane.plan_intents(job, adfg, self.profiles, now)
+        for w, intents in per.items():
+            plane.admit(w, intents, now)
+            mem = self.memories[w]
+            t_pipe = max(now, self._pipe_free_at[w])
+            while True:
+                intent, _ = plane.next_intent(w, now, mem.has, 0)
+                if intent is None:
+                    break
+                res = mem.begin_prefetch(
+                    intent.model_id,
+                    allow_evict=plane.config.evict_for_prefetch,
+                )
+                if res is None:
+                    # No room: fall back to demand fetching at task start.
+                    plane.stall_inflight(w, now)
+                    break
+                fetch_s, _ = res
+                t_pipe += fetch_s
+                mem.complete_prefetch(intent.model_id)
+                plane.complete_inflight(w)
+                self._prefetch_ready_at[w][intent.model_id] = t_pipe
+            self._pipe_free_at[w] = t_pipe
+            self.sst.update_cache(w, mem.bitmap, mem.available_bytes, now)
+            self.sst.update_intent(
+                w, mem.bitmap | plane.advertised_bits(w), now
+            )
 
     def _task_input(self, tid, dfg, inputs, outputs) -> np.ndarray:
         if not dfg.preds[tid]:

@@ -30,6 +30,12 @@ from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from repro.core.memory import GpuMemoryManager
 from repro.core.netmodel import ClusterSpec
+from repro.core.prefetch import (
+    INTENT_WIRE_BYTES,
+    PrefetchConfig,
+    PrefetchPlane,
+    PrefetchStats,
+)
 from repro.core.profiles import ProfileRepository
 from repro.core.scheduler import (
     NavigatorConfig,
@@ -49,6 +55,10 @@ class _TaskRun:
     enqueued: bool = False
     fetching: bool = False
     was_miss: bool = False
+    # Assigned to a GPU that can never host the model (capacity-blind
+    # scheduler on a heterogeneous fleet); being re-routed by the
+    # dispatcher.
+    bouncing: bool = False
     started: Optional[float] = None
     finished: Optional[float] = None
     worker: Optional[int] = None
@@ -107,6 +117,12 @@ class SimResult:
     sst_pushes: int
     workers_used: Set[int]
     adjustments: int = 0
+    # Predictive prefetch plane (core/prefetch.py); zeros when disabled.
+    prefetch_bytes: float = 0.0
+    prefetch_wasted_bytes: float = 0.0
+    prefetch_unused_resident_bytes: float = 0.0
+    prefetch_useful: int = 0
+    prefetch_stats: Optional[PrefetchStats] = None
 
     # -- aggregates ------------------------------------------------------------
     @property
@@ -170,6 +186,7 @@ class Simulation:
         push_interval_s: float = 0.2,
         cache_push_interval_s: Optional[float] = None,
         gossip: Optional[GossipConfig] = None,
+        prefetch: Optional[PrefetchConfig] = None,
         runtime_noise_sigma: float = 0.25,
         seed: int = 0,
     ) -> None:
@@ -211,7 +228,30 @@ class Simulation:
         self._gpu_busy: List[Optional[Tuple[_JobState, str]]] = [
             None for _ in cluster.workers()
         ]
+        # Fetch-pipe state (one PCIe transfer in flight per worker, §3.2).
+        # ``_fetch_model`` is the model on the pipe; ``_fetch_preemptible``
+        # marks a speculative prefetch a demand fetch may abort; the token
+        # invalidates posted completion events after a preemption.
         self._fetch_busy: List[bool] = [False for _ in cluster.workers()]
+        self._fetch_model: List[Optional[int]] = [
+            None for _ in cluster.workers()
+        ]
+        self._fetch_spec: List[bool] = [False for _ in cluster.workers()]
+        self._fetch_preemptible: List[bool] = [
+            False for _ in cluster.workers()
+        ]
+        self._fetch_started: List[float] = [0.0 for _ in cluster.workers()]
+        self._fetch_ends: List[float] = [0.0 for _ in cluster.workers()]
+        self._fetch_token: List[int] = [0 for _ in cluster.workers()]
+        # Predictive prefetch plane (plan-driven speculative fetches).
+        self.prefetch_plane: Optional[PrefetchPlane] = None
+        if prefetch is not None:
+            self.prefetch_plane = PrefetchPlane(
+                cluster.n_workers, prefetch, fetch_time_fn=profiles.td_model
+            )
+        self._poke_at: List[Optional[float]] = [
+            None for _ in cluster.workers()
+        ]
         self._busy_time: Dict[int, float] = {w: 0.0 for w in cluster.workers()}
         self._records: List[JobRecord] = []
         self._jobs_open = 0
@@ -265,11 +305,19 @@ class Simulation:
             elif kind == "input":
                 self._on_input(ev[1], ev[2], ev[3], ev[4])
             elif kind == "fetch_done":
-                self._on_fetch_done(ev[1])
+                self._on_fetch_done(ev[1], ev[2])
             elif kind == "task_done":
                 self._on_task_done(ev[1], ev[2], ev[3])
             elif kind == "task_fetch_bookkeep":
                 self._on_fetch_bookkeep(ev[1], ev[2], ev[3])
+            elif kind == "intent":
+                self._on_intent(ev[1], ev[2])
+            elif kind == "intent_cancel":
+                self._on_intent_cancel(ev[1], ev[2], ev[3])
+            elif kind == "prefetch_poke":
+                self._on_prefetch_poke(ev[1], t)
+            elif kind == "bounce":
+                self._on_bounce(ev[1], ev[2], ev[3])
             elif kind == "sst_load":
                 self.sst.push_load(ev[1], t)
                 self._post(t + self.sst.push_interval_s, "sst_load", ev[1])
@@ -299,6 +347,19 @@ class Simulation:
             sst_pushes=self.sst.total_pushes,
             workers_used=self._workers_used,
             adjustments=self._adjustments,
+            prefetch_bytes=sum(m.stats.prefetch_bytes for m in mems),
+            prefetch_wasted_bytes=sum(
+                m.stats.prefetch_wasted_bytes for m in mems
+            ),
+            prefetch_unused_resident_bytes=sum(
+                m.unused_prefetched_bytes() for m in mems
+            ),
+            prefetch_useful=sum(m.stats.prefetch_useful for m in mems),
+            prefetch_stats=(
+                self.prefetch_plane.stats
+                if self.prefetch_plane is not None
+                else None
+            ),
         )
 
     # -- event handlers --------------------------------------------------------------
@@ -312,6 +373,21 @@ class Simulation:
             for tid in job.dfg.entry_tasks:
                 self._jit_assign(js, tid, {"": origin}, {"": job.dfg.tasks[tid].input_bytes})
         else:
+            if self.prefetch_plane is not None:
+                # Plan → memory intents: every assigned worker learns which
+                # models its future tasks need.  The origin worker (which
+                # planned) knows immediately; remote workers learn after a
+                # small control-message delay.
+                per = self.prefetch_plane.plan_intents(
+                    job, adfg, self.profiles, self._now
+                )
+                for w, intents in per.items():
+                    delay = 0.0
+                    if w != origin:
+                        delay = self.cluster.network.transfer_time(
+                            INTENT_WIRE_BYTES * len(intents)
+                        )
+                    self._post(self._now + delay, "intent", w, intents)
             for tid in job.dfg.entry_tasks:
                 w = adfg[tid]
                 delay = 0.0
@@ -326,8 +402,13 @@ class Simulation:
         input_locations: Dict[str, int],
         input_sizes: Dict[str, float],
     ) -> None:
-        # Reader worker: where the (latest) input lives.
-        reader = next(iter(input_locations.values()))
+        # Reader worker: where the largest input lives — shipping cost is
+        # dominated by the biggest object, so the JIT decision is made (and
+        # the SST replica read) there.
+        reader_src = max(
+            input_locations, key=lambda s: input_sizes.get(s, 0.0)
+        )
+        reader = input_locations[reader_src]
         w = self.scheduler.select_worker_at_ready(
             js.job,
             task_id,
@@ -362,9 +443,20 @@ class Simulation:
             self._update_load(worker)
         self._dispatch(worker)
 
-    def _on_fetch_done(self, worker: int) -> None:
+    def _on_fetch_done(self, worker: int, token: int) -> None:
+        if token != self._fetch_token[worker]:
+            return  # the transfer this event described was preempted
+        mid = self._fetch_model[worker]
+        spec = self._fetch_spec[worker]
         self._fetch_busy[worker] = False
-        self._publish_cache(worker)
+        self._fetch_model[worker] = None
+        self._fetch_spec[worker] = False
+        self._fetch_preemptible[worker] = False
+        if spec and mid is not None:
+            self.memories[worker].complete_prefetch(mid)
+            if self.prefetch_plane is not None:
+                self.prefetch_plane.complete_inflight(worker)
+        self._publish_cache(worker)  # also refreshes the intent bitmap
         self._dispatch(worker)
 
     def _on_task_done(self, js: _JobState, task_id: str, worker: int) -> None:
@@ -415,6 +507,8 @@ class Simulation:
                     )
                     if new_w != adfg[succ]:
                         self._adjustments += 1
+                        if self.prefetch_plane is not None:
+                            self._migrate_intent(js, succ, adfg[succ], new_w)
                         adfg[succ] = new_w
                 w = adfg[succ]
                 delay = (
@@ -439,14 +533,24 @@ class Simulation:
             return
         queue = self._queues[worker]
         for idx, (js, tid) in enumerate(queue):
-            if not js.inputs_ready(tid):
+            if not js.inputs_ready(tid) or js.tasks[tid].bouncing:
                 continue
             task = js.job.dfg.tasks[tid]
             mem = self.memories[worker]
-            if task.model_id is not None and not mem.has(task.model_id):
-                if not self._fetch_busy[worker] and not js.tasks[tid].fetching:
-                    self._start_fetch(worker, js, tid)
-                continue  # leave on queue, proceed to next (paper §3.2)
+            mid = task.model_id
+            if mid is not None:
+                inflight = (
+                    self._fetch_busy[worker]
+                    and self._fetch_model[worker] == mid
+                )
+                if inflight and self._fetch_preemptible[worker]:
+                    # A queued task demands the model on the pipe: the
+                    # speculative prefetch becomes a demand fetch.
+                    self._promote_prefetch(worker, js, tid)
+                if not mem.has(mid) or inflight:
+                    if not inflight and not js.tasks[tid].fetching:
+                        self._request_demand_fetch(worker, js, tid)
+                    continue  # leave on queue, proceed to next (paper §3.2)
             # Start execution.
             queue.pop(idx)
             run = js.tasks[tid]
@@ -458,6 +562,10 @@ class Simulation:
                     js2.job.dfg.tasks[t2].model_id for js2, t2 in queue
                 ]
                 mem.begin_execution(task.model_id, upcoming)
+                if self.prefetch_plane is not None:
+                    self.prefetch_plane.consume(
+                        worker, js.job.job_id, tid
+                    )
                 self._publish_cache(worker)
             self._gpu_busy[worker] = (js, tid)
             self._workers_used.add(worker)
@@ -468,23 +576,55 @@ class Simulation:
         self._maybe_prefetch(worker)
 
     def _maybe_prefetch(self, worker: int) -> None:
+        """Keep the fetch pipe busy: demand fetches for queued tasks first;
+        with the prefetch plane enabled, speculative fetches from the
+        intent queue fill the idle pipe (demand preempts prefetch)."""
+        if not self._fetch_busy[worker] or self._fetch_preemptible[worker]:
+            for js, tid in self._queues[worker]:
+                task = js.job.dfg.tasks[tid]
+                mid = task.model_id
+                if (
+                    mid is None
+                    or js.tasks[tid].fetching
+                    or js.tasks[tid].bouncing
+                    or not js.inputs_ready(tid)
+                ):
+                    continue
+                if (
+                    self._fetch_busy[worker]
+                    and self._fetch_model[worker] == mid
+                ):
+                    if self._fetch_preemptible[worker]:
+                        self._promote_prefetch(worker, js, tid)
+                    continue  # transfer already underway for this model
+                if not self.memories[worker].has(mid):
+                    self._request_demand_fetch(worker, js, tid)
+                    return
+        if self.prefetch_plane is not None and not self._fetch_busy[worker]:
+            self._start_speculative_fetch(worker)
+
+    def _request_demand_fetch(self, worker: int, js: _JobState, tid: str) -> None:
         if self._fetch_busy[worker]:
-            return
-        for js, tid in self._queues[worker]:
-            task = js.job.dfg.tasks[tid]
-            if (
-                task.model_id is not None
-                and not self.memories[worker].has(task.model_id)
-                and not js.tasks[tid].fetching
-                and js.inputs_ready(tid)
-            ):
-                self._start_fetch(worker, js, tid)
-                return
+            if not self._fetch_preemptible[worker]:
+                return  # pipe owned by a demand (or promoted) fetch
+            # Demand preempts prefetch: abort the speculative transfer.
+            if self.prefetch_plane is not None:
+                self.prefetch_plane.preempt_inflight(worker, requeue=True)
+            self._abort_spec_fetch(worker)
+        self._start_fetch(worker, js, tid)
 
     def _start_fetch(self, worker: int, js: _JobState, tid: str) -> None:
         task = js.job.dfg.tasks[tid]
         assert task.model_id is not None
         mem = self.memories[worker]
+        if not mem.can_host(task.model_id):
+            # Capacity-blind scheduler put the task on a GPU that can
+            # never execute its model: the dispatcher rejects and
+            # re-routes it (handled as an event so the queue is not
+            # mutated mid-scan).
+            js.tasks[tid].bouncing = True
+            self._post(self._now, "bounce", js, tid, worker)
+            return
         upcoming = [
             js2.job.dfg.tasks[t2].model_id for js2, t2 in self._queues[worker]
         ]
@@ -499,15 +639,190 @@ class Simulation:
         js.tasks[tid].fetching = True
         js.tasks[tid].was_miss = True
         self._fetch_busy[worker] = True
-        self._publish_cache(worker)
+        self._fetch_model[worker] = task.model_id
+        self._fetch_spec[worker] = False
+        self._fetch_preemptible[worker] = False
+        self._fetch_started[worker] = self._now
+        self._fetch_ends[worker] = self._now + fetch_s
+        if self.prefetch_plane is not None:
+            # Demand took over this task's model staging; its intent (if
+            # still queued) is spent.
+            self.prefetch_plane.consume(worker, js.job.job_id, tid)
+        self._publish_cache(worker)  # also refreshes the intent bitmap
         self._post(self._now + fetch_s, "task_fetch_bookkeep", js, tid, worker)
-        self._post(self._now + fetch_s, "fetch_done", worker)
+        self._post(
+            self._now + fetch_s, "fetch_done", worker,
+            self._fetch_token[worker],
+        )
+
+    # -- speculative prefetch (core/prefetch.py) ---------------------------------
+    def _start_speculative_fetch(self, worker: int) -> None:
+        plane = self.prefetch_plane
+        assert plane is not None
+        if plane.queue_depth(worker) == 0:
+            return
+        mem = self.memories[worker]
+        peer_bits = 0
+        for w2, row in enumerate(self.sst.view(worker)):
+            if w2 != worker:
+                peer_bits |= row.cache_bitmap | row.intent_bitmap
+        intent, retry_at = plane.next_intent(
+            worker, self._now, mem.has, peer_bits
+        )
+        if intent is None:
+            self._schedule_poke(worker, retry_at)
+            return
+        res = mem.begin_prefetch(
+            intent.model_id,
+            upcoming_model_ids=[
+                js.job.dfg.tasks[t].model_id for js, t in self._queues[worker]
+            ],
+            allow_evict=plane.config.evict_for_prefetch,
+        )
+        if res is None:
+            # No room right now: park the intent and retry shortly.
+            until = self._now + max(0.1, plane.config.herd_backoff_s)
+            plane.stall_inflight(worker, until)
+            self._schedule_poke(worker, until)
+            return
+        fetch_s, _ = res
+        self._fetch_busy[worker] = True
+        self._fetch_model[worker] = intent.model_id
+        self._fetch_spec[worker] = True
+        self._fetch_preemptible[worker] = True
+        self._fetch_started[worker] = self._now
+        self._fetch_ends[worker] = self._now + fetch_s
+        self._post(
+            self._now + fetch_s, "fetch_done", worker,
+            self._fetch_token[worker],
+        )
+        self._publish_cache(worker)  # also refreshes the intent bitmap
+
+    def _promote_prefetch(self, worker: int, js: _JobState, tid: str) -> None:
+        self._fetch_preemptible[worker] = False
+        if self.prefetch_plane is not None:
+            self.prefetch_plane.promote_inflight(worker)
+        # The demanding task still waits for (the rest of) the transfer,
+        # so account it as a demand miss — hit rates stay comparable with
+        # the plane off; only fetches that *complete* before the task
+        # needs the model convert to hits.
+        run = js.tasks[tid]
+        if not run.was_miss:
+            run.was_miss = True
+            self.memories[worker].stats.misses += 1
+
+    def _abort_spec_fetch(self, worker: int) -> None:
+        """Tear down the in-flight speculative transfer (the plane-side
+        intent bookkeeping is the caller's job)."""
+        mid = self._fetch_model[worker]
+        assert mid is not None and self._fetch_spec[worker]
+        self._fetch_token[worker] += 1  # invalidate the posted completion
+        dur = self._fetch_ends[worker] - self._fetch_started[worker]
+        frac = 0.0 if dur <= 0 else (self._now - self._fetch_started[worker]) / dur
+        self.memories[worker].abort_prefetch(mid, frac)
+        self._fetch_busy[worker] = False
+        self._fetch_model[worker] = None
+        self._fetch_spec[worker] = False
+        self._fetch_preemptible[worker] = False
+        self._publish_cache(worker)  # also refreshes the intent bitmap
+
+    def _schedule_poke(self, worker: int, at: Optional[float]) -> None:
+        if at is None:
+            return
+        if self._poke_at[worker] is not None and self._poke_at[worker] <= at:
+            return
+        self._poke_at[worker] = at
+        self._post(at, "prefetch_poke", worker)
+
+    def _on_prefetch_poke(self, worker: int, t: float) -> None:
+        if self._poke_at[worker] is not None and self._poke_at[worker] <= t:
+            self._poke_at[worker] = None
+        self._maybe_prefetch(worker)
+
+    def _on_intent(self, worker: int, intents) -> None:
+        assert self.prefetch_plane is not None
+        self.prefetch_plane.admit(worker, intents, self._now)
+        self._publish_intent(worker)
+        self._maybe_prefetch(worker)
+
+    def _on_intent_cancel(self, worker: int, js: _JobState, task_id: str) -> None:
+        assert self.prefetch_plane is not None
+        aborted = self.prefetch_plane.cancel(
+            worker, js.job.job_id, task_id, migrated=True
+        )
+        if (
+            aborted is not None
+            and self._fetch_busy[worker]
+            and self._fetch_preemptible[worker]
+            and self._fetch_model[worker] == aborted.model_id
+        ):
+            self._abort_spec_fetch(worker)
+            self._maybe_prefetch(worker)
+        else:
+            self._publish_intent(worker)
 
     def _on_fetch_bookkeep(self, js: _JobState, tid: str, worker: int) -> None:
         js.tasks[tid].fetching = False
         task = js.job.dfg.tasks[tid]
         if task.model_id is not None:
             self.memories[worker].unpin(task.model_id)
+
+    def _on_bounce(self, js: _JobState, tid: str, worker: int) -> None:
+        """Re-route a task whose assigned GPU can never host its model:
+        ship it (and its already-arrived inputs) to the least-loaded
+        worker with enough memory."""
+        task = js.job.dfg.tasks[tid]
+        assert task.model_id is not None
+        feasible = [
+            w
+            for w in self.cluster.workers()
+            if self.memories[w].can_host(task.model_id)
+        ]
+        if not feasible:
+            raise ValueError(
+                f"model {task.model_id} fits no worker in the fleet"
+            )
+        sst = self.sst.view(worker)
+        target = min(
+            feasible, key=lambda w: (max(self._now, sst[w].ft_estimate_s), w)
+        )
+        run = js.tasks[tid]
+        run.bouncing = False
+        self._queues[worker] = [
+            (j, t) for j, t in self._queues[worker] if (j, t) != (js, tid)
+        ]
+        run.enqueued = False
+        run.worker = None
+        assert js.adfg is not None
+        js.adfg[tid] = target
+        dfg = js.job.dfg
+        delay = 0.0
+        srcs = list(js.inputs_arrived[tid])
+        for src in srcs:
+            nbytes = (
+                task.input_bytes if src == "" else dfg.tasks[src].output_bytes
+            )
+            delay = max(delay, self.cluster.network.transfer_time(nbytes))
+        js.inputs_arrived[tid] = set()
+        for src in srcs:
+            self._post(self._now + delay, "input", js, tid, src, target)
+        self._update_load(worker)
+        self._dispatch(worker)
+
+    def _migrate_intent(
+        self, js: _JobState, task_id: str, old_w: int, new_w: int
+    ) -> None:
+        """Alg. 2 moved a task: cancel the prefetch intent on the planned
+        worker (a control message) and re-issue it on the new one (riding
+        the input transfer that is about to ship there)."""
+        assert self.prefetch_plane is not None
+        ctrl = self.cluster.network.transfer_time(INTENT_WIRE_BYTES)
+        self._post(self._now + ctrl, "intent_cancel", old_w, js, task_id)
+        intent = self.prefetch_plane.make_intent(
+            js.job, task_id, new_w, self._now
+        )
+        if intent is not None:
+            self._post(self._now + ctrl, "intent", new_w, [intent])
 
     # -- gossip plane (decentralized SST, §5.2) ------------------------------------
     def _on_gossip(self, worker: int) -> None:
@@ -537,4 +852,31 @@ class Simulation:
 
     def _publish_cache(self, worker: int) -> None:
         mem = self.memories[worker]
-        self.sst.update_cache(worker, mem.bitmap, mem.free_bytes, self._now)
+        if self.prefetch_plane is None:
+            self.sst.update_cache(worker, mem.bitmap, mem.free_bytes, self._now)
+            return
+        # Under the prefetch plane the advertisement is honest about the
+        # pipe: a model still in flight is not usable residency (tasks
+        # wait for fetch completion), so it moves from the cache bitmap to
+        # the intent bitmap, where the planner prices it at the discounted
+        # remainder of the fetch.  AVC counts undemanded speculative
+        # contents as available — they are the cheapest victims.
+        bm = mem.bitmap
+        if self._fetch_busy[worker] and self._fetch_model[worker] is not None:
+            bm &= ~(1 << self._fetch_model[worker])
+        self.sst.update_cache(worker, bm, mem.available_bytes, self._now)
+        self.sst.update_intent(
+            worker,
+            mem.bitmap | self.prefetch_plane.advertised_bits(worker),
+            self._now,
+        )
+
+    def _publish_intent(self, worker: int) -> None:
+        if self.prefetch_plane is None:
+            return
+        mem = self.memories[worker]
+        self.sst.update_intent(
+            worker,
+            mem.bitmap | self.prefetch_plane.advertised_bits(worker),
+            self._now,
+        )

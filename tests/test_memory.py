@@ -118,3 +118,159 @@ def test_preload():
     mem.preload([0, 1])
     assert mem.has(0) and mem.has(1)
     assert mem.stats.hits == 0 and mem.stats.misses == 0
+
+
+# -- speculative prefetch hooks (core/prefetch.py fetch-pipe arbitration) ----
+def test_begin_prefetch_fetch_pin_blocks_eviction():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4, 4), policy="fifo")
+    assert mem.begin_prefetch(0) is not None
+    # In flight: fetch-pinned, so an 8 GB demand (needs eviction) can't
+    # displace it and nothing else is resident → ensure must refuse.
+    assert mem.ensure(1) is not None  # fits beside it (8 GB used)
+    assert mem.would_evict(2) == [1]  # victim is the unpinned model only
+    mem.complete_prefetch(0)
+    assert mem.would_evict(2) == [0]  # pin released → FIFO order again
+
+
+def test_fetch_pin_vs_execution_pin_interaction():
+    mem = mk_mem(capacity_gb=12.0, sizes=(4, 4, 4), policy="fifo", ratio=0.5)
+    assert mem.begin_prefetch(0) is not None
+    mem.begin_execution(0)  # demand hits the in-flight model: double pin
+    mem.complete_prefetch(0)  # fetch-pin released, execution-pin remains
+    assert mem.would_evict(1) == []  # fits
+    mem.ensure(1)
+    mem.ensure(2)
+    # 0 still execution-pinned: filling the cache evicts 1, never 0.
+    mem.models[3] = MLModel(model_id=3, name="m3", size_bytes=4 * GB)
+    _, evicted = mem.ensure(3)
+    assert 0 not in evicted
+    mem.end_execution(0)
+    assert mem.exec_reserved_bytes == 0
+
+
+def test_ensure_none_under_fetch_pin_pressure():
+    mem = mk_mem(capacity_gb=6.5, sizes=(4, 4), policy="fifo", ratio=0.5)
+    assert mem.begin_prefetch(0) is not None  # 2 GB cached, fetch-pinned
+    mem.begin_execution(0)  # + 4 GB execution copy → 0.5 GB free
+    assert mem.ensure(1) is None  # only pinned contents: nothing to evict
+
+
+def test_abort_prefetch_accounts_partial_waste():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4), policy="fifo", ratio=0.5)
+    assert mem.begin_prefetch(0) is not None
+    mem.abort_prefetch(0, fraction_done=0.25)
+    assert not mem.has(0)
+    # Only the transferred quarter hit the PCIe wire and is wasted.
+    assert mem.stats.prefetch_wasted_bytes == pytest.approx(0.25 * 2 * GB)
+    assert mem.stats.bytes_fetched == pytest.approx(0.25 * 2 * GB)
+    assert mem.stats.prefetch_aborted == 1
+
+
+def test_prefetch_useful_vs_wasted_accounting():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4, 4), policy="fifo", ratio=0.5)
+    mem.begin_prefetch(0)
+    mem.complete_prefetch(0)
+    mem.begin_prefetch(1)
+    mem.complete_prefetch(1)
+    # Model 0 gets demanded → useful; model 1 is evicted unused → wasted.
+    fetch, _ = mem.ensure(0)
+    assert fetch == 0.0 and mem.stats.hits == 1
+    assert mem.stats.prefetch_useful == 1
+    mem.drop(1)
+    assert mem.stats.prefetch_wasted == 1
+    assert mem.stats.prefetch_wasted_bytes == pytest.approx(2 * GB)
+    assert mem.unused_prefetched_bytes() == 0.0
+
+
+def test_lookahead_evicts_unused_prefetched_first():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 4, 4, 4), policy="lookahead",
+                 ratio=0.5)
+    mem.ensure(0)           # demand-fetched
+    mem.begin_prefetch(1)
+    mem.complete_prefetch(1)  # speculative, never demanded
+    mem.ensure(2)
+    mem.models[4] = MLModel(model_id=4, name="m4", size_bytes=12 * GB)
+    # Neither 0 nor 1 is in the window; the speculative one goes first.
+    _, evicted = mem.ensure(3, upcoming_model_ids=[2])
+    assert evicted == []  # fits: 8 GB used
+    victims = mem.would_evict(4, upcoming_model_ids=[2])
+    assert victims[0] == 1
+
+
+def test_can_host_static_feasibility():
+    mem = mk_mem(capacity_gb=10.0, sizes=(4, 8), ratio=0.6)
+    assert mem.can_host(0)       # 4×0.6 + 4 = 6.4 GB
+    assert not mem.can_host(1)   # 8×0.6 + 8 = 12.8 GB > 10
+    assert mem.begin_prefetch(1) is None  # speculation refuses too
+
+
+# -- randomized FIFO-vs-lookahead property tests ------------------------------
+def _random_mem(rng, policy):
+    sizes = [rng.choice([1, 2, 3, 4]) for _ in range(8)]
+    mem = GpuMemoryManager(
+        rng.uniform(8.0, 14.0) * GB,
+        {i: MLModel(model_id=i, name=f"m{i}", size_bytes=s * GB)
+         for i, s in enumerate(sizes)},
+        AcceleratorLink(),
+        policy=policy,
+        compression_ratio=0.5,
+    )
+    for mid in rng.sample(range(8), rng.randint(3, 6)):
+        if mem.cached_size(mid) <= mem.free_bytes:
+            mem.preload([mid])
+    return mem
+
+
+def test_property_lookahead_never_evicts_needed_before_unneeded():
+    """On random cache states and queues: a model needed inside the
+    lookahead window is only evicted once every evictable model *not*
+    needed in the window is gone too."""
+    import random as _random
+
+    rng = _random.Random(42)
+    for _ in range(200):
+        mem = _random_mem(rng, "lookahead")
+        upcoming = [rng.randrange(8) for _ in range(rng.randint(0, 10))]
+        target = rng.randrange(8)
+        victims = mem.would_evict(target, upcoming_model_ids=upcoming)
+        if not victims:
+            continue
+        window = set(upcoming[: mem.lookahead_depth])
+        resident = set(mem.resident_models())
+        needed_evicted = [v for v in victims if v in window]
+        if needed_evicted:
+            unneeded_survivors = (resident - set(victims)) - window
+            assert not unneeded_survivors, (
+                victims, upcoming, sorted(resident)
+            )
+
+
+def test_property_fifo_victims_are_insertion_prefix():
+    import random as _random
+
+    rng = _random.Random(7)
+    for _ in range(200):
+        mem = _random_mem(rng, "fifo")
+        target = rng.randrange(8)
+        victims = mem.would_evict(target)
+        order = mem.resident_models()  # insertion order
+        assert victims == order[: len(victims)]
+
+
+def test_property_policies_agree_when_no_eviction_needed():
+    import random as _random
+
+    rng = _random.Random(13)
+    for _ in range(100):
+        seed = rng.randrange(10**9)
+        results = []
+        for policy in ("fifo", "lookahead"):
+            r2 = _random.Random(seed)
+            mem = _random_mem(r2, policy)
+            target = r2.randrange(8)
+            if mem.has(target) or mem.cached_size(target) <= mem.free_bytes:
+                res = mem.ensure(target)
+                assert res is not None
+                results.append((mem.resident_models(), res[1]))
+        if len(results) == 2:
+            assert results[0] == results[1]  # identical without pressure

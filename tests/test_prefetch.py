@@ -1,0 +1,543 @@
+"""Predictive prefetch plane (core/prefetch.py): intent lifecycle, fetch-
+pipe arbitration, anti-herd hysteresis, intent-aware planning, and the
+intent bitmap on both metadata planes."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    GB,
+    GossipConfig,
+    GossipPlane,
+    Job,
+    MB,
+    NavigatorConfig,
+    NavigatorScheduler,
+    PrefetchConfig,
+    PrefetchPlane,
+    ProfileRepository,
+    SharedStateTable,
+)
+from repro.core.state import SSTRow
+from repro.core.types import DFG, TaskSpec
+from repro.sim import Simulation, bursty_trace_workload, poisson_workload
+from repro.workflows import MODELS, paper_dfgs, translation_dfg
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+def make_profiles(cluster=None):
+    cluster = cluster or ClusterSpec(n_workers=5)
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def planned_job(profiles, dfg=None, now=0.0, origin=0):
+    dfg = dfg or translation_dfg()
+    job = Job(0, dfg, arrival_time=now)
+    sst = [
+        SSTRow(free_cache_bytes=16 * GB, pushed_at=now) for _ in range(5)
+    ]
+    sched = NavigatorScheduler(profiles)
+    return job, sched.plan(job, now, origin, sst)
+
+
+def mk_plane(profiles, config=None, n_workers=5):
+    return PrefetchPlane(
+        n_workers, config or PrefetchConfig(),
+        fetch_time_fn=profiles.td_model,
+    )
+
+
+# --------------------------------------------------------------------------
+# intent derivation + queue maintenance
+# --------------------------------------------------------------------------
+def test_plan_intents_groups_by_worker_and_limits_depth():
+    profiles = make_profiles()
+    plane = mk_plane(profiles, PrefetchConfig(lookahead_depth=1))
+    job, adfg = planned_job(profiles)
+    per = plane.plan_intents(job, adfg, profiles, now=0.0)
+    assert per  # the translation DFG has model-bearing tasks
+    for w, intents in per.items():
+        assert len(intents) <= 1  # depth cap
+        for i in intents:
+            assert adfg[i.task_id] == w
+            assert i.model_id == job.dfg.tasks[i.task_id].model_id
+            assert i.expected_start_s >= 0.0
+
+
+def test_plan_intents_ordered_by_expected_start():
+    profiles = make_profiles()
+    plane = mk_plane(profiles, PrefetchConfig(lookahead_depth=8))
+    job, adfg = planned_job(profiles)
+    for intents in plane.plan_intents(job, adfg, profiles, 0.0).values():
+        starts = [i.expected_start_s for i in intents]
+        assert starts == sorted(starts)
+
+
+def test_admit_dedups_replans_and_counts():
+    profiles = make_profiles()
+    plane = mk_plane(profiles)
+    job, adfg = planned_job(profiles)
+    per = plane.plan_intents(job, adfg, profiles, 0.0)
+    w, intents = next(iter(per.items()))
+    plane.admit(w, intents, 0.0)
+    issued = plane.stats.intents_issued
+    # Re-planning the same tasks must not duplicate queue entries.
+    plane.admit(w, plane.plan_intents(job, adfg, profiles, 1.0)[w], 1.0)
+    assert plane.stats.intents_issued == issued
+    assert plane.queue_depth(w) == len(intents)
+
+
+def test_admit_bounds_queue_dropping_latest_needed():
+    profiles = make_profiles()
+    plane = mk_plane(profiles, PrefetchConfig(max_queue=2))
+    intents = [
+        plane.make_intent(
+            Job(j, translation_dfg(), 0.0), "mt5_zh", 0, 0.0,
+            expected_start_s=float(j),
+        )
+        for j in range(5)
+    ]
+    plane.admit(0, intents, 0.0)
+    assert plane.queue_depth(0) == 2
+    assert plane.stats.intents_dropped == 3
+    # The earliest-needed intents survive.
+    kept = sorted(i.expected_start_s for i in plane.queues[0].values())
+    assert kept == [0.0, 1.0]
+
+
+def test_cancel_removes_queued_intent():
+    profiles = make_profiles()
+    plane = mk_plane(profiles)
+    job = Job(7, translation_dfg(), 0.0)
+    plane.admit(2, [plane.make_intent(job, "mt5_zh", 2, 0.0)], 0.0)
+    assert plane.cancel(2, 7, "mt5_zh") is None  # nothing in flight
+    assert plane.queue_depth(2) == 0
+    assert plane.stats.intents_cancelled == 1
+
+
+def test_cancel_inflight_prefers_heir_over_abort():
+    profiles = make_profiles()
+    plane = mk_plane(profiles)
+    job_a, job_b = Job(1, translation_dfg(), 0.0), Job(2, translation_dfg(), 0.0)
+    plane.admit(0, [plane.make_intent(job_a, "mt5_zh", 0, 0.0)], 0.0)
+    intent, _ = plane.next_intent(0, 0.0, lambda m: False)
+    assert intent is not None and plane.inflight[0] is intent
+    # Another job wants the same model: cancelling the in-flight owner
+    # hands the transfer to the heir instead of aborting it.
+    plane.admit(0, [plane.make_intent(job_b, "mt5_ja", 0, 0.0)], 0.0)
+    assert plane.cancel(0, 1, "mt5_zh", migrated=True) is None
+    assert plane.inflight[0] is not None
+    assert plane.inflight[0].job_id == 2
+    # With no heir, cancel returns the aborted in-flight intent.
+    aborted = plane.cancel(0, 2, "mt5_ja")
+    assert aborted is not None and aborted.model_id == intent.model_id
+
+
+def test_consume_spends_intent_when_demand_takes_over():
+    profiles = make_profiles()
+    plane = mk_plane(profiles)
+    job = Job(3, translation_dfg(), 0.0)
+    plane.admit(1, [plane.make_intent(job, "marian_fr", 1, 0.0)], 0.0)
+    plane.consume(1, 3, "marian_fr")
+    assert plane.queue_depth(1) == 0
+    assert plane.stats.intents_consumed == 1
+
+
+def test_next_intent_skips_resident_and_expires_ttl():
+    profiles = make_profiles()
+    plane = mk_plane(profiles, PrefetchConfig(intent_ttl_s=5.0))
+    job = Job(4, translation_dfg(), 0.0)
+    plane.admit(0, [plane.make_intent(job, "opt_ingest", 0, 0.0)], 0.0)
+    # Resident → retired without a fetch.
+    intent, _ = plane.next_intent(0, 1.0, lambda m: True)
+    assert intent is None
+    assert plane.stats.already_resident == 1
+    # Stale → expired unissued.
+    plane.admit(0, [plane.make_intent(job, "mt5_zh", 0, 0.0)], 0.0)
+    intent, _ = plane.next_intent(0, 100.0, lambda m: False)
+    assert intent is None
+    assert plane.stats.intents_expired == 1
+
+
+def test_anti_herd_defers_nonurgent_when_peer_advertises():
+    profiles = make_profiles()
+    plane = mk_plane(
+        profiles, PrefetchConfig(herd_backoff_s=1.0, urgency_slack_s=0.1)
+    )
+    job = Job(5, translation_dfg(), 0.0)
+    mid = translation_dfg().tasks["mt5_zh"].model_id
+    # Task expected far in the future → not urgent.
+    plane.admit(
+        0, [plane.make_intent(job, "mt5_zh", 0, 0.0,
+                              expected_start_s=100.0)], 0.0
+    )
+    peer_bits = 1 << mid
+    intent, retry_at = plane.next_intent(0, 0.0, lambda m: False, peer_bits)
+    assert intent is None
+    assert plane.stats.deferrals == 1
+    assert retry_at == pytest.approx(1.0)
+    # Same situation but urgent (expected start imminent) → fetch anyway.
+    plane.admit(
+        0, [plane.make_intent(Job(6, translation_dfg(), 0.0), "mt5_ja", 0,
+                              0.0, expected_start_s=0.5)], 0.0
+    )
+    intent, _ = plane.next_intent(0, 0.0, lambda m: False, peer_bits)
+    assert intent is not None and intent.job_id == 6
+
+
+def test_advertised_bits_cover_queued_and_inflight():
+    profiles = make_profiles()
+    plane = mk_plane(profiles)
+    job = Job(8, translation_dfg(), 0.0)
+    plane.admit(0, [plane.make_intent(job, "opt_ingest", 0, 0.0)], 0.0)
+    plane.admit(0, [plane.make_intent(job, "mt5_zh", 0, 0.0)], 0.0)
+    queued = plane.advertised_bits(0)
+    assert queued & (1 << 0) and queued & (1 << 2)
+    intent, _ = plane.next_intent(0, 0.0, lambda m: False)
+    assert intent is not None
+    # Popped to in-flight: still advertised.
+    assert plane.advertised_bits(0) == queued
+
+
+# --------------------------------------------------------------------------
+# intent-aware planning (Eq. 2 discount + anti-herd stickiness)
+# --------------------------------------------------------------------------
+def _rows(n=5, now=0.0, **kw):
+    return [
+        SSTRow(free_cache_bytes=16 * GB, pushed_at=now, **kw)
+        for _ in range(n)
+    ]
+
+
+def test_planner_discounts_intended_worker():
+    profiles = make_profiles()
+    dfg = DFG("one", [TaskSpec("t", 0.4, model_id=2)], [])
+    profiles.register(dfg)
+    job = Job(0, dfg, 0.0)
+    sst = _rows()
+    sst[3].intent_bitmap = 1 << 2  # worker 3 intends model 2
+    sched = NavigatorScheduler(
+        profiles, NavigatorConfig(intent_confidence=0.9)
+    )
+    adfg = sched.plan(job, 0.0, 0, sst)
+    assert adfg["t"] == 3
+
+
+def test_stale_intent_gets_no_discount():
+    profiles = make_profiles()
+    dfg = DFG("one2", [TaskSpec("t", 0.4, model_id=2)], [])
+    profiles.register(dfg)
+    job = Job(0, dfg, 100.0)
+    sst = _rows(now=0.0)  # rows pushed at t=0, planning at t=100
+    sst[3].intent_bitmap = 1 << 2
+    sched = NavigatorScheduler(
+        profiles,
+        NavigatorConfig(intent_confidence=0.9, intent_fresh_s=5.0),
+    )
+    adfg = sched.plan(job, 100.0, 0, sst)
+    assert adfg["t"] == 0  # no discount → origin wins on input locality
+
+
+def test_herd_margin_moves_task_to_intending_worker():
+    profiles = make_profiles()
+    dfg = DFG("one3", [TaskSpec("t", 0.4, model_id=2)], [])
+    profiles.register(dfg)
+    job = Job(0, dfg, 0.0)
+    sst = _rows()
+    sst[3].intent_bitmap = 1 << 2
+    # Zero confidence: no cost discount, so only the sticky margin can
+    # pull the task onto the intending worker.
+    base = NavigatorConfig(intent_confidence=0.0, intent_herd_margin=0.0)
+    sticky = NavigatorConfig(intent_confidence=0.0, intent_herd_margin=0.9)
+    assert NavigatorScheduler(profiles, base).plan(job, 0.0, 0, sst)["t"] == 0
+    assert NavigatorScheduler(profiles, sticky).plan(job, 0.0, 0, sst)["t"] == 3
+
+
+def test_capacity_infeasible_worker_never_planned():
+    from repro.core import build_fleet, WorkerProfile
+
+    big = WorkerProfile("big", 1.0, 16.0 * GB)
+    tiny = WorkerProfile("tiny", 4.0, 2.0 * GB)  # fast but too small
+    cluster = build_fleet([big, tiny])
+    profiles = ProfileRepository(cluster, MODELS)
+    dfg = DFG("cap", [TaskSpec("t", 0.4, model_id=0)], [])  # 6.5 GB model
+    profiles.register(dfg)
+    job = Job(0, dfg, 0.0)
+    sst = [SSTRow(free_cache_bytes=cluster.gpu_capacity(w)) for w in range(2)]
+    adfg = NavigatorScheduler(profiles).plan(job, 0.0, 1, sst)
+    assert adfg["t"] == 0  # despite worker 1 being 4x faster and origin
+
+
+def test_jax_planner_matches_python_with_intents():
+    from repro.core.jax_planner import JaxNavigatorPlanner
+
+    cluster = ClusterSpec(n_workers=5)
+    profiles = make_profiles(cluster)
+    cfg = NavigatorConfig(
+        eviction_penalty_s=1.5,
+        intent_confidence=0.7,
+        intent_herd_margin=0.15,
+    )
+    py = NavigatorScheduler(profiles, cfg)
+    vec = JaxNavigatorPlanner(profiles, cfg)
+    rng = np.random.RandomState(0)
+    for trial in range(15):
+        sst = []
+        for w in range(5):
+            bitmap, intent = 0, 0
+            for m in range(8):
+                if rng.rand() < 0.3:
+                    bitmap |= 1 << m
+                if rng.rand() < 0.3:
+                    intent |= 1 << m
+            sst.append(
+                SSTRow(
+                    ft_estimate_s=float(rng.uniform(0, 5)),
+                    cache_bitmap=bitmap,
+                    free_cache_bytes=float(rng.uniform(0, 16 * GB)),
+                    pushed_at=1.0,
+                    intent_bitmap=bitmap | intent,
+                )
+            )
+        dfg = paper_dfgs()[trial % 4]
+        job = Job(trial, dfg, 1.0)
+        a_py = py.plan(job, 1.0, trial % 5, sst)
+        a_vec = vec.plan(job, 1.0, trial % 5, sst)
+        for t in dfg.tasks:
+            assert a_py[t] == a_vec[t], (trial, t, a_py.assignment,
+                                         a_vec.assignment)
+            assert a_py.planned_ft[t] == pytest.approx(
+                a_vec.planned_ft[t], rel=1e-5
+            )
+
+
+# --------------------------------------------------------------------------
+# intent bitmap on both metadata planes
+# --------------------------------------------------------------------------
+def test_sst_wire_row_carries_intent_bitmap():
+    from repro.core.sst_exchange import ROW_WIDTH, pack_row, unpack_rows
+
+    row = SSTRow(
+        ft_estimate_s=1.5,
+        cache_bitmap=(1 << 5) | 1,
+        intent_bitmap=(1 << 63) | (1 << 5) | 3,
+    )
+    packed = pack_row(row)
+    assert packed.shape == (ROW_WIDTH,) and packed.nbytes == 32
+    back = unpack_rows(packed[None])[0]
+    assert back.intent_bitmap == row.intent_bitmap
+    assert back.cache_bitmap == row.cache_bitmap
+
+
+def test_shared_state_table_publishes_intent_on_cache_cadence():
+    sst = SharedStateTable(3)
+    sst.update_intent(1, 0b1010, now=1.0)
+    assert sst.view(0)[1].intent_bitmap == 0  # not pushed yet
+    sst.push_cache(1, 2.0)
+    assert sst.view(0)[1].intent_bitmap == 0b1010
+    assert sst.view(1)[1].intent_bitmap == 0b1010  # own row always fresh
+
+
+def test_gossip_plane_carries_intent_bitmap():
+    plane = GossipPlane(3, GossipConfig(fanout=2, period_s=0.1))
+    plane.update_intent(0, 0b110, now=0.0)
+    for q, updates, _nbytes in plane.exchange(0, 0.1):
+        plane.deliver(q, updates, 0.1)
+    views = [plane.view(w)[0].intent_bitmap for w in range(3)]
+    assert views[0] == 0b110  # own ground truth
+    assert 0b110 in views[1:]  # at least one peer learned it this round
+
+
+# --------------------------------------------------------------------------
+# simulator integration: arbitration, migration, end-to-end
+# --------------------------------------------------------------------------
+def _sim(cluster, prefetch=None, scheduler="navigator", **kw):
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        profiles.register(d)
+    return Simulation(
+        cluster, profiles, MODELS, scheduler=scheduler,
+        prefetch=prefetch, **kw,
+    )
+
+
+def test_sim_prefetch_completes_all_jobs_and_populates_stats():
+    cluster = ClusterSpec(n_workers=5)
+    jobs = bursty_trace_workload(paper_dfgs(), 0.8, 120.0, seed=3)
+    res = _sim(cluster, prefetch=PrefetchConfig(), seed=1).run(jobs)
+    assert len(res.records) == len(jobs)
+    s = res.prefetch_stats
+    assert s is not None and s.intents_issued > 0
+    assert s.prefetches_started > 0
+    assert res.prefetch_bytes > 0
+
+
+def test_sim_prefetch_deterministic_given_seed():
+    cluster = ClusterSpec(n_workers=5)
+    jobs = poisson_workload(paper_dfgs(), 1.0, 60.0, seed=11)
+    a = _sim(cluster, prefetch=PrefetchConfig(), seed=1).run(jobs)
+    b = _sim(cluster, prefetch=PrefetchConfig(), seed=1).run(jobs)
+    assert a.mean_latency == b.mean_latency
+    assert a.prefetch_bytes == b.prefetch_bytes
+
+
+def test_sim_prefetch_improves_demand_hit_rate():
+    cluster = ClusterSpec(n_workers=5)
+    jobs = bursty_trace_workload(paper_dfgs(), 0.8, 200.0, seed=7)
+    off = _sim(cluster, prefetch=None, seed=1).run(jobs)
+    on = _sim(cluster, prefetch=PrefetchConfig(), seed=1).run(jobs)
+    assert on.cache_hit_rate >= off.cache_hit_rate
+    assert len(on.records) == len(off.records) == len(jobs)
+
+
+def test_demand_preempts_speculative_prefetch():
+    """One worker: job A's downstream model is being speculatively
+    fetched when job B's demand fetch arrives → the prefetch is aborted
+    (and the queued task later re-fetches its model)."""
+    chain = DFG(
+        "chain",
+        tasks=[
+            TaskSpec("a", 1.0, model_id=1, output_bytes=0.1 * MB),
+            TaskSpec("b", 0.5, model_id=2, output_bytes=0.1 * MB),
+        ],
+        edges=[("a", "b")],
+    )
+    solo = DFG("solo", [TaskSpec("c", 0.5, model_id=3)], [])
+    cluster = ClusterSpec(n_workers=1)
+    profiles = ProfileRepository(cluster, MODELS)
+    profiles.register(chain)
+    profiles.register(solo)
+    # Job A at t=0; job B lands while A's model-2 prefetch is in flight
+    # (A's model-1 demand fetch takes ~1.2 s, then "a" runs ~1 s while
+    # model 2 prefetches).
+    jobs = [Job(0, chain, 0.0), Job(1, solo, 1.6)]
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator",
+        prefetch=PrefetchConfig(herd_backoff_s=0.0),
+        runtime_noise_sigma=0.0, seed=0,
+    )
+    res = sim.run(jobs)
+    assert len(res.records) == 2
+    s = res.prefetch_stats
+    assert s.prefetches_started >= 1
+    assert s.prefetches_preempted >= 1
+    assert res.prefetch_wasted_bytes > 0  # the aborted partial transfer
+
+
+def test_prefetch_promotion_on_demand_of_inflight_model():
+    """The entry task's own model is speculatively fetched the moment the
+    plan lands — when the task itself arrives an instant later, the
+    transfer is promoted to a demand fetch, not restarted."""
+    solo = DFG("solo_p", [TaskSpec("c", 0.5, model_id=3)], [])
+    cluster = ClusterSpec(n_workers=1)
+    profiles = ProfileRepository(cluster, MODELS)
+    profiles.register(solo)
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator",
+        prefetch=PrefetchConfig(), runtime_noise_sigma=0.0, seed=0,
+    )
+    res = sim.run([Job(0, solo, 0.0)])
+    assert len(res.records) == 1
+    assert res.prefetch_stats.prefetches_promoted >= 1
+    # Promotion means no duplicate transfer: exactly one model-3 fetch.
+    assert res.bytes_fetched == pytest.approx(
+        MODELS[3].size_bytes * cluster.compression_ratio
+    )
+
+
+def test_adjustment_migrates_intent():
+    cluster = ClusterSpec(n_workers=5)
+    jobs = poisson_workload(paper_dfgs(), 2.0, 120.0, seed=3)
+    res = _sim(cluster, prefetch=PrefetchConfig(), seed=1).run(jobs)
+    assert len(res.records) == len(jobs)
+    if res.adjustments > 0:
+        assert res.prefetch_stats.intents_migrated > 0
+
+
+def test_capacity_blind_scheduler_bounces_on_small_gpu():
+    """Hash can place a 6.5 GB-model task on an 8 GB edge GPU that can
+    never host it (cached+decompressed 10.4 GB); the dispatcher must
+    re-route instead of crashing."""
+    import zlib
+
+    from repro.core import fleet
+
+    cluster = fleet("mixed")  # worker 4 is an 8 GB EDGE GPU
+    dfg = translation_dfg()
+    jid = next(
+        j for j in range(200)
+        if zlib.crc32(f"opt_ingest:{j}".encode()) % 5 == 4
+    )
+    profiles = ProfileRepository(cluster, MODELS)
+    profiles.register(dfg)
+    res = Simulation(
+        cluster, profiles, MODELS, scheduler="hash", seed=1
+    ).run([Job(jid, dfg, 0.0)])
+    assert len(res.records) == 1  # completed despite the infeasible GPU
+
+
+def test_serving_cluster_prefetch_parity():
+    """Virtual-clock parity: the serving engine stages intended models at
+    plan time and publishes the intent bitmap."""
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import HostedModel, ServingCluster
+
+    hosted = []
+    for mid, arch in enumerate(["mistral-nemo-12b", "mamba2-780m"]):
+        cfg = ARCHS[arch].reduced(dtype="float32")
+        hosted.append(
+            HostedModel(mid, cfg, init_params(cfg, jax.random.key(mid)))
+        )
+    dfg = DFG(
+        "pp",
+        tasks=[
+            TaskSpec("a", 0.05, model_id=1, output_bytes=0.01 * MB,
+                     input_bytes=0.01 * MB),
+            TaskSpec("b", 0.1, model_id=0, output_bytes=0.01 * MB),
+        ],
+        edges=[("a", "b")],
+    )
+    sc = ServingCluster(
+        ClusterSpec(n_workers=2, gpu_capacity_bytes=1 * GB),
+        hosted,
+        scheduler="navigator",
+        decode_tokens=2,
+        prefetch=PrefetchConfig(),
+    )
+    sc.register_pipeline(dfg)
+    prompts = {"a": np.array([[3, 1, 4]], np.int32)}
+    r1 = sc.submit(dfg, prompts, origin=0)
+    assert set(r1.assignment) == {"a", "b"}
+    assert r1.outputs["b"].shape[0] == 1
+    # Intent bitmaps advertised: every worker's intent row is a superset
+    # of its cache row.
+    for w in range(2):
+        row = sc.sst.view(None)[w]
+        assert row.intent_bitmap & row.cache_bitmap == row.cache_bitmap
+    # Second request hits the staged models.
+    r2 = sc.submit(dfg, prompts, origin=1)
+    assert r2.virtual_latency_s <= r1.virtual_latency_s
+    assert sc.cache_hit_rate() > 0.0
+    assert sc.prefetch_plane.stats.prefetches_completed >= 1
+
+
+def test_gossip_plus_prefetch_sim_completes():
+    cluster = ClusterSpec(n_workers=5)
+    jobs = poisson_workload(paper_dfgs(), 1.5, 90.0, seed=5)
+    res = _sim(
+        cluster,
+        prefetch=PrefetchConfig(),
+        gossip=GossipConfig(period_s=0.2, fanout=2),
+        seed=2,
+    ).run(jobs)
+    assert len(res.records) == len(jobs)
+    assert res.prefetch_stats.intents_issued > 0
