@@ -1,0 +1,150 @@
+"""Worker-churn sweep: MTBF × policy × fleet (fault-tolerance plane).
+
+For each policy the same seeded workloads run on a static fleet and under
+seeded churn schedules (crash/drain with repair, disruption budget
+``min_live=3``), with the membership lease enabled.  Reported per cell:
+
+* ``p99_jct_churn_s``       — absolute P99 JCT under churn
+* ``p99_jct_degradation_s`` — P99 JCT increase over the same policy's
+  static-fleet baseline (seconds), averaged over workload × churn seeds
+* ``reexec_overhead``       — re-executed/rescued task attempts per
+  completed task (the fault-tolerance tax)
+* ``churn_wasted_mb``       — PCIe bytes thrown away by churn
+
+The headline comparison (acceptance): on the paper's uniform 5-worker
+fleet at high load and MTBF=120 s, membership-aware Navigator degrades
+strictly less than the blind hash baseline — hash keeps shipping tasks at
+corpses for the whole repair window (each paying the dead-letter
+timeout), while Navigator routes around them one lease window after the
+crash.  On the *mixed* fleet the sign can flip: Navigator concentrates
+work (and cache) on the fast A10, so losing that one worker costs it
+more than hash's spread placement — see EXPERIMENTS.md §Churn.
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+from benchmarks.common import save_json
+from repro.core import (
+    GossipConfig,
+    LeaseConfig,
+    ProfileRepository,
+    fleet,
+)
+from repro.sim import (
+    Simulation,
+    churn_schedule,
+    fleet_scaled_rate,
+    poisson_workload,
+)
+from repro.workflows import MODELS, paper_dfgs
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+DURATION_S = 120.0 if SMOKE else 400.0
+BASE_RATE = 1.6
+SEEDS = (3,) if SMOKE else (3, 7, 11)
+CHURN_SEEDS = (17, 23) if SMOKE else (17, 23, 29)
+FLEETS = ["uniform"] if SMOKE else ["uniform", "mixed"]
+POLICIES = ["navigator", "hash"] if SMOKE else ["navigator", "hash", "heft"]
+MTBFS = [120.0] if SMOKE else [240.0, 120.0, 60.0]
+REPAIR_S = 20.0
+
+
+def _one(cluster, profiles, policy, jobs, schedule):
+    sim = Simulation(
+        cluster,
+        profiles,
+        MODELS,
+        scheduler=policy,
+        gossip=GossipConfig(period_s=0.2, fanout=2),
+        lease=LeaseConfig(),
+        churn=schedule,
+        seed=1,
+    )
+    return sim.run(jobs)
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    out = {}
+    dfgs = paper_dfgs()
+    for fleet_name in FLEETS:
+        cluster = fleet(fleet_name)
+        profiles = ProfileRepository(cluster, MODELS)
+        for d in dfgs:
+            profiles.register(d)
+        rate = fleet_scaled_rate(cluster, BASE_RATE)
+        workloads = {
+            seed: poisson_workload(dfgs, rate, DURATION_S, seed=seed)
+            for seed in SEEDS
+        }
+        for policy in POLICIES:
+            static_p99 = {
+                seed: _one(
+                    cluster, profiles, policy, workloads[seed], []
+                ).percentile_latency(0.99)
+                for seed in SEEDS
+            }
+            for mtbf in MTBFS:
+                deltas, p99s, overheads, wasted = [], [], [], []
+                for seed in SEEDS:
+                    for cseed in CHURN_SEEDS:
+                        schedule = churn_schedule(
+                            cluster.n_workers,
+                            DURATION_S,
+                            mtbf_s=mtbf,
+                            repair_s=REPAIR_S,
+                            seed=cseed,
+                            drain_fraction=0.25,
+                            min_live=3,
+                        )
+                        res = _one(
+                            cluster, profiles, policy, workloads[seed],
+                            schedule,
+                        )
+                        p99 = res.percentile_latency(0.99)
+                        p99s.append(p99)
+                        deltas.append(p99 - static_p99[seed])
+                        n_tasks = sum(
+                            len(j.dfg.tasks) for j in workloads[seed]
+                        )
+                        overheads.append(
+                            (res.tasks_rescued + res.outputs_recovered)
+                            / max(1, n_tasks)
+                        )
+                        wasted.append(res.churn_wasted_bytes)
+                n = len(deltas)
+                key = f"{fleet_name}/mtbf{int(mtbf)}/{policy}"
+                stats = {
+                    "p99_jct_churn_s": sum(p99s) / n,
+                    "p99_jct_static_s": sum(static_p99.values())
+                    / len(static_p99),
+                    "p99_jct_degradation_s": sum(deltas) / n,
+                    "reexec_overhead": sum(overheads) / n,
+                    "churn_wasted_mb": sum(wasted) / n / 2**20,
+                }
+                out[key] = stats
+                rows.append(
+                    (f"churn/{key}/p99_jct_churn_s", 0.0,
+                     stats["p99_jct_churn_s"])
+                )
+                rows.append(
+                    (f"churn/{key}/p99_jct_degradation_s", 0.0,
+                     stats["p99_jct_degradation_s"])
+                )
+                rows.append(
+                    (f"churn/{key}/reexec_overhead", 0.0,
+                     stats["reexec_overhead"])
+                )
+    save_json("churn", out)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

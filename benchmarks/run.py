@@ -22,6 +22,7 @@ SUITES = [
     "staleness",       # gossip period × load × fleet sweep (+ Fig. 8 grid)
     "trace",           # Fig. 9
     "prefetch",        # predictive prefetch plane sweep
+    "churn",           # worker churn / fault-tolerance sweep
     "scalability",     # Fig. 10
     "kernels",         # Pallas-kernel ref-path micro-benches
     "sst_microbench",  # gossip O(dirty-rows) + planner placement cost

@@ -37,14 +37,23 @@ from repro.core.scheduler import (
     make_scheduler,
 )
 from repro.core.sst_exchange import GossipConfig, GossipPlane
-from repro.core.state import SharedStateTable, SSTRow
+from repro.core.state import (
+    ALIVE,
+    DEAD,
+    LeaseConfig,
+    SharedStateTable,
+    SSTRow,
+    SUSPECT,
+)
 from repro.core.types import ADFG, DFG, GB, Job, MB, MLModel, TaskSpec
 
 __all__ = [
     "ADFG",
+    "ALIVE",
     "AcceleratorLink",
     "CacheStats",
     "ClusterSpec",
+    "DEAD",
     "DFG",
     "FLEETS",
     "GB",
@@ -55,6 +64,7 @@ __all__ = [
     "HashScheduler",
     "JITScheduler",
     "Job",
+    "LeaseConfig",
     "MB",
     "MLModel",
     "NavigatorConfig",
@@ -67,6 +77,7 @@ __all__ = [
     "ProfileRepository",
     "SCHEDULERS",
     "SSTRow",
+    "SUSPECT",
     "Scheduler",
     "SharedStateTable",
     "TPU_V5E_CLUSTER",

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.profiles import ProfileRepository
 from repro.core.scheduler import NavigatorConfig
+from repro.core.state import DEAD, SUSPECT
 from repro.core.types import ADFG, DFG, Job
 
 
@@ -95,6 +96,8 @@ def plan_vectorized(
     intent_bits: Optional[jax.Array] = None,   # (W, 64) bool — intent bitmaps
     intent_fresh: Optional[jax.Array] = None,  # (W,) bool — row fresh enough
     gpu_capacity: Optional[jax.Array] = None,  # (W,) bytes; None = unbounded
+    liveness_cost: Optional[jax.Array] = None,  # (W,) s; membership lane:
+    # 0 = ALIVE, suspect_penalty_s = SUSPECT, +inf = DEAD/draining
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (assignment (T,) int32, planned_ft (T,) float32)."""
     t_count = len(static.order)
@@ -174,7 +177,10 @@ def plan_vectorized(
                 <= gpu_capacity
             )
             ftw = jnp.where(feasible, ftw, jnp.inf)
-        w_min = jnp.argmin(ftw)                               # line 10
+        # Membership risk biases selection only; the recorded finish
+        # estimates (planned_ft / ft_map) stay time-shaped.
+        cost = ftw if liveness_cost is None else ftw + liveness_cost
+        w_min = jnp.argmin(cost)                              # line 10
         if (
             mid >= 0
             and config.use_model_locality
@@ -184,12 +190,12 @@ def plan_vectorized(
             # move to the cheapest holder/intender unless the plain argmin
             # beats it by more than the margin.
             have = hit | intent_m
-            ft_have = jnp.where(have, ftw, jnp.inf)
-            alt = jnp.argmin(ft_have)
+            cost_have = jnp.where(have, cost, jnp.inf)
+            alt = jnp.argmin(cost_have)
             use_alt = (
                 jnp.any(have)
                 & ~have[w_min]
-                & (ft_have[alt] <= ftw[w_min] * (1.0 + config.intent_herd_margin))
+                & (cost_have[alt] <= cost[w_min] * (1.0 + config.intent_herd_margin))
             )
             w_min = jnp.where(use_alt, alt, w_min)
         ft_min = ftw[w_min]
@@ -227,6 +233,7 @@ class JaxNavigatorPlanner:
         bits = np.zeros((n, 64), bool)
         ibits = np.zeros((n, 64), bool)
         fresh = np.zeros((n,), bool)
+        live = np.zeros((n,), np.float32)
         for w, row in enumerate(sst):
             for m in range(64):
                 bits[w, m] = bool((row.cache_bitmap >> m) & 1)
@@ -234,6 +241,10 @@ class JaxNavigatorPlanner:
             fresh[w] = (
                 max(0.0, now - row.pushed_at) <= self.config.intent_fresh_s
             )
+            if row.liveness == DEAD:
+                live[w] = np.inf
+            elif row.liveness == SUSPECT:
+                live[w] = self.config.suspect_penalty_s
         assign, task_ft = plan_vectorized(
             static,
             self.config,
@@ -249,6 +260,7 @@ class JaxNavigatorPlanner:
                 [self.profiles.cluster.gpu_capacity(w) for w in range(n)],
                 jnp.float32,
             ),
+            liveness_cost=jnp.asarray(live),
         )
         adfg = ADFG(job)
         for i, tid in enumerate(static.order):

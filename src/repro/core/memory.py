@@ -40,6 +40,10 @@ class CacheStats:
     prefetch_aborted: int = 0       # preempted/cancelled mid-flight
     prefetch_wasted: int = 0        # never demanded before leaving cache
     prefetch_wasted_bytes: float = 0.0
+    # Fleet-churn accounting: PCIe bytes thrown away because the worker
+    # died/drained mid-transfer or with speculative contents nobody used.
+    churn_wasted_bytes: float = 0.0
+    churn_resets: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -324,6 +328,42 @@ class GpuMemoryManager:
         self._prefetched_unused.discard(model_id)
         self.stats.prefetch_wasted += 1
         self.stats.prefetch_wasted_bytes += size * frac
+
+    def abort_fetch(self, model_id: int, fraction_done: float = 0.0) -> None:
+        """Tear down an in-flight *demand* fetch whose owning task died or
+        was re-routed off this worker (crash/drain): release the
+        fetch-pin, drop the partial model, and account the bytes moved so
+        far as churn waste (the un-transferred remainder never hit the
+        pipe, so it comes back off ``bytes_fetched``)."""
+        self.unpin(model_id)
+        size = self._contents.pop(model_id, None)
+        if size is None:
+            return
+        frac = min(1.0, max(0.0, fraction_done))
+        self.stats.bytes_fetched -= size * (1.0 - frac)
+        self.stats.churn_wasted_bytes += size * frac
+
+    def reset(self, graceful: bool = False) -> float:
+        """The worker left the fleet: every resident model, pin, and
+        execution reservation is gone.  Speculative contents nobody
+        demanded count as wasted prefetch; on a crash (``graceful=False``)
+        the lost residency is also churn waste (a drain served its cache
+        until the end, so only the unused speculation is charged).
+        Returns the resident bytes dropped."""
+        lost = self.used_bytes
+        for mid in list(self._prefetched_unused):
+            size = self._contents.get(mid, 0.0)
+            self.stats.prefetch_wasted += 1
+            self.stats.prefetch_wasted_bytes += size
+            self.stats.churn_wasted_bytes += size
+        if not graceful:
+            self.stats.churn_wasted_bytes += lost - self.unused_prefetched_bytes()
+        self._contents.clear()
+        self._pinned.clear()
+        self._executing.clear()
+        self._prefetched_unused.clear()
+        self.stats.churn_resets += 1
+        return lost
 
     # -- execution memory (§3.3) ----------------------------------------------
     def begin_execution(

@@ -130,6 +130,8 @@ class PrefetchStats:
     intents_consumed: int = 0    # demand reached the worker first
     intents_expired: int = 0     # TTL elapsed before issue
     intents_dropped: int = 0     # queue-bound overflow
+    intents_orphaned: int = 0    # owning worker crashed/drained
+    intents_rehomed: int = 0     # orphan re-issued on the task's heir worker
     already_resident: int = 0    # satisfied with no fetch needed
     prefetches_started: int = 0
     prefetches_completed: int = 0
@@ -294,6 +296,46 @@ class PrefetchPlane:
         if not cands:
             return None
         return min(cands, key=lambda i: i.expected_start_s)
+
+    def drop_worker(self, worker: int) -> List[PrefetchIntent]:
+        """The worker left the fleet (crash or drain): its queued intents
+        are orphaned and its in-flight speculative transfer is void (the
+        engine owns the fetch pipe and the partial-bytes accounting).
+
+        Returns the orphaned queue in expected-start order so the engine
+        can re-home each intent on the heir worker its task is re-routed
+        to (:meth:`rehome` stamps the move)."""
+        orphans = sorted(
+            self.queues[worker].values(), key=lambda i: i.expected_start_s
+        )
+        self.queues[worker] = {}
+        cur = self.inflight[worker]
+        if cur is not None:
+            self.inflight[worker] = None
+            cur.state = CANCELLED
+            orphans.append(cur)
+        for intent in orphans:
+            intent.state = CANCELLED
+            self.stats.intents_orphaned += 1
+        return orphans
+
+    def rehome(
+        self, intent: PrefetchIntent, worker: int, now: float
+    ) -> PrefetchIntent:
+        """Mint the heir copy of an orphaned intent for the worker the
+        engine's recovery re-routed its task to; the fresh issue time
+        restarts the TTL (the old plan's clock died with the old worker).
+        The caller delivers it like any other intent control message."""
+        heir = PrefetchIntent(
+            job_id=intent.job_id,
+            task_id=intent.task_id,
+            model_id=intent.model_id,
+            worker=worker,
+            issued_at=now,
+            expected_start_s=max(now, intent.expected_start_s),
+        )
+        self.stats.intents_rehomed += 1
+        return heir
 
     def consume(self, worker: int, job_id: int, task_id: str) -> None:
         """The task itself reached ``worker``'s execution queue — demand

@@ -29,7 +29,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import bitmaps
 from repro.core.profiles import ProfileRepository
-from repro.core.state import SSTRow
+from repro.core.state import DEAD, SSTRow, SUSPECT
 from repro.core.types import ADFG, DFG, Job, TaskSpec
 
 
@@ -74,6 +74,13 @@ class NavigatorConfig:
     # worker already committed to the fetch instead of spawning
     # redundant fetches from stale views.  0.0 = pure argmin.
     intent_herd_margin: float = 0.0
+    # Membership lane (core/state.py LeaseConfig): additive placement cost
+    # for a worker whose lease the reader's view marks SUSPECT — enough to
+    # lose ties against healthy workers but not a hard exclusion (the
+    # evidence is one missed heartbeat window, often just gossip lag).
+    # Workers the view marks DEAD always cost ∞.  Inert (all rows ALIVE)
+    # when no lease is configured.
+    suspect_penalty_s: float = 5.0
     # Ablations:
     use_model_locality: bool = True      # Fig. 7 "model locality"
     use_dynamic_adjustment: bool = True  # Fig. 7 "dynamic task scheduling"
@@ -88,6 +95,10 @@ class Scheduler:
     name = "base"
     needs_adjustment = False
     plans_at_arrival = True
+    # Membership lane: additive cost for SUSPECT rows in membership-aware
+    # schedulers (JIT uses this default; Navigator takes it from its
+    # config).  Hash/HEFT never read the SST and stay blind.
+    suspect_penalty_s = 5.0
 
     def __init__(self, profiles: ProfileRepository) -> None:
         self.profiles = profiles
@@ -134,6 +145,16 @@ class Scheduler:
         """worker_FT_map: published queue-drain times, clamped to now
         (a stale estimate in the past means 'idle as far as we know')."""
         return [max(now, row.ft_estimate_s) for row in sst]
+
+    def _liveness_cost(self, row: SSTRow, suspect_penalty_s: float = 0.0) -> float:
+        """Membership term of the placement cost: ∞ for workers this
+        reader's view marks DEAD (or draining), an additive penalty for
+        SUSPECT ones.  Zero on a static fleet (rows default ALIVE)."""
+        if row.liveness == DEAD:
+            return float("inf")
+        if row.liveness == SUSPECT:
+            return suspect_penalty_s
+        return 0.0
 
 
 class NavigatorScheduler(Scheduler):
@@ -209,6 +230,10 @@ class NavigatorScheduler(Scheduler):
         ]
         adfg = ADFG(job)
 
+        live_cost = [
+            self._liveness_cost(row, self.config.suspect_penalty_s)
+            for row in sst
+        ]
         for tid in self.profiles.rank_order(dfg):             # lines 4-5
             task = dfg.tasks[tid]
             fts: List[float] = []
@@ -225,9 +250,14 @@ class NavigatorScheduler(Scheduler):
                     )
                     + self.profiles.runtime(task, w)
                 )                                             # line 9
-            best_w = min(workers, key=lambda w: fts[w])       # line 10
+            # Selection cost = predicted finish + membership risk; the
+            # penalty biases the argmin only, never the recorded estimate
+            # (planned_ft / ft_map feed Eq. 3, prefetch expected-starts,
+            # and Alg. 2 hysteresis, which must stay time-shaped).
+            costs = [fts[w] + live_cost[w] for w in workers]
+            best_w = min(workers, key=lambda w: costs[w])     # line 10
             best_w = self._herd_sticky_choice(
-                task.model_id, best_w, fts, bitmap, intent, fresh, workers
+                task.model_id, best_w, costs, bitmap, intent, fresh, workers
             )
             best_ft = fts[best_w]
             adfg[tid] = best_w                                # line 11
@@ -247,7 +277,7 @@ class NavigatorScheduler(Scheduler):
         self,
         model_id: Optional[int],
         best_w: int,
-        fts: Sequence[float],
+        costs: Sequence[float],
         bitmap: Sequence[int],
         intent: Sequence[int],
         fresh: Sequence[bool],
@@ -255,7 +285,9 @@ class NavigatorScheduler(Scheduler):
     ) -> int:
         """Anti-herd hysteresis: if the argmin worker neither holds nor
         intends the task's model but some worker does, move to the best
-        such worker unless the argmin wins by more than the margin."""
+        such worker unless the argmin wins by more than the margin.
+        Operates on selection *costs* (finish estimate + membership
+        risk), like the argmin itself."""
         margin = self.config.intent_herd_margin
         if (
             model_id is None
@@ -271,11 +303,15 @@ class NavigatorScheduler(Scheduler):
 
         if holds(best_w):
             return best_w
-        holders = [w for w in workers if holds(w)]
+        # Infinite-cost holders (infeasible GPU, or DEAD in this view —
+        # a frozen row can still advertise the model) are no alternative.
+        holders = [
+            w for w in workers if holds(w) and costs[w] != float("inf")
+        ]
         if not holders:
             return best_w
-        alt = min(holders, key=lambda w: fts[w])
-        if fts[alt] <= fts[best_w] * (1.0 + margin):
+        alt = min(holders, key=lambda w: costs[w])
+        if costs[alt] <= costs[best_w] * (1.0 + margin):
             return alt
         return best_w
 
@@ -335,6 +371,9 @@ class NavigatorScheduler(Scheduler):
             if not self.profiles.model_fits(task.model_id, w):
                 return float("inf")
             row = sst[w]
+            live = self._liveness_cost(row, self.config.suspect_penalty_s)
+            if live == float("inf"):
+                return live  # DEAD in this view: never a move target
             ft = (
                 ft_map[w]
                 + self._td_model(
@@ -347,6 +386,7 @@ class NavigatorScheduler(Scheduler):
                     <= self.config.intent_fresh_s,
                 )
                 + self.profiles.runtime(task, w)
+                + live
             )
             if w != current_worker:                             # lines 10-11
                 ft += td_in
@@ -417,6 +457,8 @@ class JITScheduler(Scheduler):
         for w in range(len(ft_map)):
             if not self.profiles.model_fits(task.model_id, w):
                 continue  # GPU can never host the model
+            if sst[w].liveness == DEAD and w != self_worker:
+                continue  # lease expired in this reader's view
             # Inputs that are not already on w must be transferred.
             td_in = 0.0
             for src, loc in input_locations.items():
@@ -430,7 +472,12 @@ class JITScheduler(Scheduler):
                 sst[w].cache_bitmap, task.model_id
             ):
                 td_model = self.profiles.td_model(task.model_id)
-            ft = max(ft_map[w], now + td_in) + td_model + self.profiles.runtime(task, w)
+            ft = (
+                max(ft_map[w], now + td_in)
+                + td_model
+                + self.profiles.runtime(task, w)
+                + self._liveness_cost(sst[w], self.suspect_penalty_s)
+            )
             if ft < best_ft:
                 best_w, best_ft = w, ft
         return best_w

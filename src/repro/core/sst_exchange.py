@@ -21,16 +21,18 @@ Two transports live here:
    axis of a JAX mesh.  Like the RDMA original, a push moves one cache
    line per peer.
 
-Row layout (uint32 lanes — exact bit transport; 8 lanes = 32 bytes, half a
-cache line, keeping the wire format faithful to Fig. 5):
+Row layout (uint32 lanes — exact bit transport; 10 lanes = 40 bytes, still
+under one 64-byte cache line, keeping the wire format faithful to Fig. 5):
   [0] ft_estimate_s   (f32 bit pattern)
   [1] cache_bitmap lo 32 bits
   [2] cache_bitmap hi 32 bits
   [3] free cache KiB
   [4] queue_len
-  [5] row version (monotonic per owner; merge is newest-wins)
+  [5] row version (monotonic per owner; merge is newest-(epoch, version))
   [6] intent_bitmap lo 32 bits (prefetch plane: resident ∪ in-flight ∪ queued)
   [7] intent_bitmap hi 32 bits
+  [8] heartbeat_s     (f32 bit pattern — membership lease lane)
+  [9] epoch (31 bits) | draining flag (bit 31)
 """
 
 from __future__ import annotations
@@ -42,12 +44,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.state import SSTRow
+from repro.core.state import ALIVE, DEAD, LeaseConfig, SSTRow, SUSPECT
 
 # jax is imported lazily inside make_sst_allgather so the gossip plane
 # (pure Python) stays importable on hosts without an accelerator stack.
 
-ROW_WIDTH = 8
+ROW_WIDTH = 10
 
 
 def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
@@ -60,6 +62,8 @@ def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
     out[5] = np.uint32(row.version & 0xFFFFFFFF)
     out[6] = np.uint32(row.intent_bitmap & 0xFFFFFFFF)
     out[7] = np.uint32((row.intent_bitmap >> 32) & 0xFFFFFFFF)
+    out[8] = np.float32(row.heartbeat_s).view(np.uint32)
+    out[9] = np.uint32((row.epoch & 0x7FFFFFFF) | (int(row.draining) << 31))
     return out
 
 
@@ -75,6 +79,9 @@ def unpack_rows(table: np.ndarray) -> List[SSTRow]:
                 free_cache_bytes=float(r[3]) * 1024.0,
                 version=int(r[5]),
                 intent_bitmap=intent,
+                heartbeat_s=float(r[8:9].view(np.float32)[0]),
+                epoch=int(r[9]) & 0x7FFFFFFF,
+                draining=bool(int(r[9]) >> 31),
             )
         )
     return rows
@@ -121,7 +128,7 @@ class GossipConfig:
     ``drop_prob``  — per-message loss probability.  Lost rows are *not*
                      retransmitted point-to-point; they reach the peer via
                      relay through third parties, as in rumor mongering.
-    ``wire_row_bytes`` — bytes per row update on the wire (the 8-lane
+    ``wire_row_bytes`` — bytes per row update on the wire (the 10-lane
                      packed row above plus an owner header).
     ``seed``       — peer-selection / drop-sampling RNG seed (combined
                      with the driving engine's seed for determinism).
@@ -130,7 +137,7 @@ class GossipConfig:
     period_s: float = 0.2
     fanout: int = 2
     drop_prob: float = 0.0
-    wire_row_bytes: float = 40.0
+    wire_row_bytes: float = 48.0  # 10 packed lanes + owner header
     seed: int = 0
 
 
@@ -169,9 +176,13 @@ class GossipPlane:
         n_workers: int,
         config: Optional[GossipConfig] = None,
         seed: int = 0,
+        lease: Optional[LeaseConfig] = None,
     ) -> None:
         self.n_workers = n_workers
         self.config = config or GossipConfig()
+        # Membership lane (None = static fleet: every row reads ALIVE and
+        # staleness aggregation is unchanged).
+        self.lease = lease
         # Stable int mix of config seed + engine seed (tuple seeding is
         # hash-based, hence process-dependent and deprecated).
         self.rng = random.Random(self.config.seed * 1_000_003 + seed * 7_919 + 17)
@@ -254,6 +265,69 @@ class GossipPlane:
         mutation (diff-shipped, epidemically relayed)."""
         self.local[worker].intent_bitmap = intent_bitmap
         self._bump(worker, now)
+
+    # -- membership (heartbeat/lease lane) ----------------------------------
+    def heartbeat(self, worker: int, now: float) -> None:
+        """Owner self-stamp; rides the ordinary diff machinery, so a
+        reader's lease age includes gossip dissemination lag."""
+        row = self.local[worker]
+        row.heartbeat_s = max(row.heartbeat_s, now)
+        self._bump(worker, now)
+
+    def set_draining(self, worker: int, draining: bool, now: float = 0.0) -> None:
+        """Graceful-departure advertisement: peers treat a draining row as
+        DEAD for placement the moment they learn of it (no lease wait)."""
+        self.local[worker].draining = draining
+        self._bump(worker, now)
+
+    def join(self, worker: int, now: float) -> None:
+        """A worker (re)joins the fleet with a fresh incarnation.
+
+        The crashed process lost its replicas, change log, and cursors, so
+        they reset; only the epoch counter survives (one integer on stable
+        storage), bumped so pre-crash rows of this worker can never
+        overwrite post-rejoin state (``SSTRow.merge_key``).  The join
+        announcement rewinds every peer's cursor toward the joiner below
+        its log base, so the next gossip contact ships an anti-entropy
+        **full sync** — the joiner rebuilds its SST view through the same
+        repair path that serves truncated-history laggards."""
+        old_epoch = self.local[worker].epoch
+        self.local[worker] = SSTRow(
+            heartbeat_s=now, pushed_at=now, epoch=old_epoch + 1
+        )
+        self.views[worker] = [SSTRow() for _ in range(self.n_workers)]
+        self.versions[worker] = [0] * self.n_workers
+        self._log[worker] = []
+        self._log_base[worker] = 0
+        self._cursor[worker] = [0] * self.n_workers
+        self._compact_at[worker] = 4 * self.n_workers
+        self._bump(worker, now)
+        for q in range(self.n_workers):
+            if q != worker:
+                self._cursor[q][worker] = self._log_base[q] - 1
+
+    def _classify_row(self, row: SSTRow, is_self: bool, now: float) -> str:
+        """Single source of truth for the membership verdict a reader
+        derives from one replica row.  A peer the reader has *never heard
+        from* (fresh joiner before its first full sync) is SUSPECT, not
+        DEAD: absence of evidence only costs a penalty, or a rejoined
+        worker would dump every job on itself until the anti-entropy sync
+        lands."""
+        if row.draining:
+            return DEAD
+        if is_self:
+            return ALIVE  # self-evidence is never stale
+        if row.version == 0:
+            return SUSPECT
+        return self.lease.classify(max(0.0, now - row.heartbeat_s))
+
+    def liveness(self, reader: int, peer: int, now: float) -> str:
+        """Membership state ``reader`` assigns ``peer`` from its own
+        (possibly stale) replica — no oracle."""
+        if self.lease is None:
+            return ALIVE
+        row = self.local[reader] if peer == reader else self.views[reader][peer]
+        return self._classify_row(row, peer == reader, now)
 
     # -- exchange ------------------------------------------------------------
     def _full_peer_list(self, worker: int) -> List[int]:
@@ -349,7 +423,11 @@ class GossipPlane:
         for owner, version, row in updates:
             if owner == worker:
                 continue  # own row is authoritative, never overwritten
-            if version > self.versions[worker][owner]:
+            held = self.views[worker][owner]
+            # Newest-(epoch, version) wins: a rejoined owner's fresh row
+            # (higher epoch, version restarted) beats any pre-crash echo
+            # still circulating — DEAD rows are never resurrected.
+            if (row.epoch, version) > (held.epoch, self.versions[worker][owner]):
                 self.versions[worker][owner] = version
                 self.views[worker][owner] = row.copy()
                 self._log[worker].append(owner)
@@ -391,13 +469,14 @@ class GossipPlane:
         ``exchange``).  Mirrors ``SharedStateTable.push``."""
         if self.local[worker].version == 0:
             self._bump(worker, now)
-        ver = self.local[worker].version
+        row = self.local[worker]
         for q in range(self.n_workers):
             if q == worker:
                 continue
-            if ver > self.versions[q][worker]:
-                self.versions[q][worker] = ver
-                self.views[q][worker] = self.local[worker].copy()
+            held = self.views[q][worker]
+            if row.merge_key() > (held.epoch, self.versions[q][worker]):
+                self.versions[q][worker] = row.version
+                self.views[q][worker] = row.copy()
 
     @property
     def messages_delivered(self) -> int:
@@ -408,20 +487,37 @@ class GossipPlane:
         return self.messages_sent
 
     # -- reads ----------------------------------------------------------------
-    def view(self, reader_worker: Optional[int] = None) -> List[SSTRow]:
+    def view(
+        self,
+        reader_worker: Optional[int] = None,
+        now: Optional[float] = None,
+    ) -> List[SSTRow]:
         """The table as the scheduler on ``reader_worker`` sees it: its own
         row fresh from ground truth, peer rows from its gossip replicas.
         ``reader_worker=None`` returns ground truth for every row (an
-        omniscient observer, used by diagnostics)."""
+        omniscient observer, used by diagnostics).  With a lease configured
+        and ``now`` given, rows carry the reader's membership verdict
+        (``liveness``): planners price SUSPECT rows up and DEAD rows out."""
         if reader_worker is None:
-            return [r.copy() for r in self.local]
-        rows = [r.copy() for r in self.views[reader_worker]]
-        rows[reader_worker] = self.local[reader_worker].copy()
+            rows = [r.copy() for r in self.local]
+        else:
+            rows = [r.copy() for r in self.views[reader_worker]]
+            rows[reader_worker] = self.local[reader_worker].copy()
+        if self.lease is not None and now is not None:
+            for w, row in enumerate(rows):
+                row.liveness = self._classify_row(
+                    row, w == reader_worker, now
+                )
         return rows
 
     def staleness(self, now: float, reader_worker: Optional[int] = None) -> float:
         """Max age (seconds) of any remote row in the reader's view;
-        aggregated over all readers when ``reader_worker`` is None."""
+        aggregated over all readers when ``reader_worker`` is None.
+
+        Rows of peers the reader has marked DEAD (lease expired or
+        draining) are excluded: a departed worker's frozen row would
+        otherwise inflate reported staleness forever, even though no
+        scheduler consumes it."""
         readers = (
             range(self.n_workers) if reader_worker is None else [reader_worker]
         )
@@ -429,6 +525,8 @@ class GossipPlane:
         for r in readers:
             for p in range(self.n_workers):
                 if p == r:
+                    continue
+                if self.lease is not None and self.liveness(r, p, now) == DEAD:
                     continue
                 worst = max(worst, now - self.views[r][p].pushed_at)
         return worst

@@ -21,6 +21,52 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+# Membership states a *reader* assigns to a peer's row from its own view.
+# There is no oracle: two workers can (and under partitions/drops do)
+# disagree about whether a third is alive.
+ALIVE = "alive"
+SUSPECT = "suspect"
+DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseConfig:
+    """Heartbeat/lease tunables for the membership lane.
+
+    Each worker stamps its own row with a heartbeat (``heartbeat_s``)
+    every ``heartbeat_period_s``; the stamp disseminates like any other
+    row mutation.  A reader classifies a peer from the *replicated* stamp
+    age — ALIVE below ``suspect_after_s``, SUSPECT up to ``dead_after_s``,
+    DEAD beyond — so detection latency includes dissemination lag, and
+    every worker decides from its own, possibly stale, evidence.
+
+    Defaults assume the paper's 200 ms gossip cadence: a lease survives a
+    few dropped rounds (no flapping) but a crash is declared dead within
+    ~4 s, well under typical re-execution costs.
+    """
+
+    heartbeat_period_s: float = 0.25
+    suspect_after_s: float = 1.5
+    dead_after_s: float = 4.0
+    # RPC/connection timeout a dispatcher pays before concluding that a
+    # worker it shipped work to is unreachable and failing over — the
+    # per-contact price of acting on a stale ALIVE verdict.
+    dead_letter_timeout_s: float = 1.0
+
+    @property
+    def detection_delay_s(self) -> float:
+        """Time from a silent crash to the moment a peer's replicated
+        heartbeat age crosses ``dead_after_s``: the lease bound plus the
+        dissemination lag of the last heartbeat it did send."""
+        return self.dead_after_s + 2.0 * self.heartbeat_period_s
+
+    def classify(self, heartbeat_age_s: float) -> str:
+        if heartbeat_age_s > self.dead_after_s:
+            return DEAD
+        if heartbeat_age_s > self.suspect_after_s:
+            return SUSPECT
+        return ALIVE
+
 
 @dataclasses.dataclass
 class SSTRow:
@@ -40,6 +86,17 @@ class SSTRow:
     # models (core/prefetch.py).  Superset of ``cache_bitmap`` when the
     # plane is enabled; 0 (inert) otherwise.
     intent_bitmap: int = 0
+    # Membership lane: the owner's last self-stamped heartbeat time, its
+    # incarnation (bumped on every rejoin so pre-crash rows can never
+    # overwrite post-rejoin state), and a graceful-departure flag.
+    heartbeat_s: float = 0.0
+    epoch: int = 0
+    draining: bool = False
+    # Reader-side annotation (NOT wire state): the membership state the
+    # reader that produced this view assigns the row.  Filled by
+    # ``view(..., now=...)`` when a lease is configured; planners cost
+    # SUSPECT rows with a penalty and DEAD rows at infinity.
+    liveness: str = ALIVE
 
     def copy(self) -> "SSTRow":
         return SSTRow(
@@ -49,7 +106,17 @@ class SSTRow:
             self.pushed_at,
             self.version,
             self.intent_bitmap,
+            self.heartbeat_s,
+            self.epoch,
+            self.draining,
+            self.liveness,
         )
+
+    def merge_key(self) -> "tuple[int, int]":
+        """Newest-wins merge order across crash boundaries: a rejoined
+        worker restarts version at 1 but bumps epoch, so (epoch, version)
+        keeps post-rejoin rows strictly newer than any pre-crash replica."""
+        return (self.epoch, self.version)
 
 
 class SharedStateTable:
@@ -67,12 +134,15 @@ class SharedStateTable:
         n_workers: int,
         push_interval_s: float = 0.2,
         cache_push_interval_s: Optional[float] = None,
+        lease: Optional[LeaseConfig] = None,
     ) -> None:
         self.n_workers = n_workers
         self.push_interval_s = push_interval_s
         self.cache_push_interval_s = (
             push_interval_s if cache_push_interval_s is None else cache_push_interval_s
         )
+        # Membership lane (None = static fleet, rows always ALIVE).
+        self.lease = lease
         self.local: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
         self.published: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
         self._pushes = 0
@@ -110,9 +180,35 @@ class SharedStateTable:
         row.intent_bitmap = intent_bitmap
         row.pushed_at = max(row.pushed_at, now)
 
+    # -- membership (heartbeat/lease lane) -----------------------------------
+    def heartbeat(self, worker: int, now: float) -> None:
+        """Owner self-stamp; reaches peers on the next push (so lease age
+        as observed includes publication lag, same as the gossip plane)."""
+        row = self.local[worker]
+        row.heartbeat_s = max(row.heartbeat_s, now)
+        row.pushed_at = max(row.pushed_at, now)
+
+    def set_draining(self, worker: int, draining: bool, now: float = 0.0) -> None:
+        row = self.local[worker]
+        row.draining = draining
+        row.pushed_at = max(row.pushed_at, now)
+
+    def join(self, worker: int, now: float) -> None:
+        """A (re)joining worker: new incarnation, empty row.  The single
+        published snapshot makes bootstrap trivial here; the gossip plane
+        models the real anti-entropy full-sync path."""
+        old = self.local[worker]
+        fresh = SSTRow(heartbeat_s=now, pushed_at=now, epoch=old.epoch + 1)
+        self.local[worker] = fresh
+        self.published[worker] = fresh.copy()
+
     # -- publication --------------------------------------------------------
     def push_load(self, worker: int, now: float) -> None:
         self.published[worker].ft_estimate_s = self.local[worker].ft_estimate_s
+        # The liveness lane rides every publication.
+        self.published[worker].heartbeat_s = self.local[worker].heartbeat_s
+        self.published[worker].draining = self.local[worker].draining
+        self.published[worker].epoch = self.local[worker].epoch
         self.published[worker].pushed_at = now
         self._pushes += 1
 
@@ -120,6 +216,9 @@ class SharedStateTable:
         self.published[worker].cache_bitmap = self.local[worker].cache_bitmap
         self.published[worker].free_cache_bytes = self.local[worker].free_cache_bytes
         self.published[worker].intent_bitmap = self.local[worker].intent_bitmap
+        self.published[worker].heartbeat_s = self.local[worker].heartbeat_s
+        self.published[worker].draining = self.local[worker].draining
+        self.published[worker].epoch = self.local[worker].epoch
         self.published[worker].pushed_at = now
         self._pushes += 1
 
@@ -132,12 +231,28 @@ class SharedStateTable:
         return self._pushes
 
     # -- reads ---------------------------------------------------------------
-    def view(self, reader_worker: Optional[int] = None) -> List[SSTRow]:
+    def view(
+        self,
+        reader_worker: Optional[int] = None,
+        now: Optional[float] = None,
+    ) -> List[SSTRow]:
         """Snapshot as a scheduler on ``reader_worker`` sees it: its own row
         is always fresh (local), remote rows are the last published values.
         ``reader_worker=None`` returns the pure published view (used by a
-        hypothetical external observer)."""
+        hypothetical external observer).  With a lease configured and
+        ``now`` given, each row is annotated with the membership state the
+        reader derives from the replicated heartbeat age."""
         rows = [r.copy() for r in self.published]
         if reader_worker is not None:
             rows[reader_worker] = self.local[reader_worker].copy()
+        if self.lease is not None and now is not None:
+            for w, row in enumerate(rows):
+                if row.draining:
+                    row.liveness = DEAD  # graceful departure: no new work
+                elif w == reader_worker:
+                    row.liveness = ALIVE  # self-evidence is never stale
+                else:
+                    row.liveness = self.lease.classify(
+                        max(0.0, now - row.heartbeat_s)
+                    )
         return rows

@@ -1,3 +1,4 @@
+from repro.sim.churn import ChurnEvent, churn_schedule, validate_schedule
 from repro.sim.engine import JobRecord, SimResult, Simulation
 from repro.sim.workload import (
     arrival_rate_timeline,
@@ -8,12 +9,15 @@ from repro.sim.workload import (
 )
 
 __all__ = [
+    "ChurnEvent",
     "JobRecord",
     "SimResult",
     "Simulation",
     "arrival_rate_timeline",
     "bursty_trace_workload",
+    "churn_schedule",
     "fleet_scaled_rate",
     "fleet_workload",
     "poisson_workload",
+    "validate_schedule",
 ]

@@ -1,0 +1,113 @@
+"""Fleet-churn schedules for the simulator.
+
+A churn schedule is a seeded, replayable list of :class:`ChurnEvent`
+records (crash / join / drain at scripted times) the simulator executes
+alongside the workload — the chaos-test harness (``tests/chaos.py``)
+replays the same schedule across schedulers and asserts invariants, and
+``benchmarks/bench_churn.py`` sweeps MTBF × policy × fleet with it.
+
+Semantics (enforced by ``sim/engine.py``):
+
+* ``crash``  — the worker vanishes instantly: its GPU task, queue,
+  in-flight fetch, gossip replica, and cache contents are lost.  Peers
+  only learn of the death when its heartbeat lease expires in their own
+  SST views.
+* ``drain``  — graceful departure: the worker advertises ``draining``
+  (peers stop placing work as soon as they see the flag), re-routes its
+  queued tasks, aborts its in-flight fetch, finishes its running task,
+  then leaves.
+* ``join``   — the worker (re)enters with a cold cache, a fresh gossip
+  incarnation (epoch + 1), and an empty SST view rebuilt by anti-entropy
+  full-sync from the first peers to contact it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional, Sequence
+
+CRASH = "crash"
+JOIN = "join"
+DRAIN = "drain"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    time: float
+    kind: str  # CRASH | JOIN | DRAIN
+    worker: int
+
+    def __post_init__(self) -> None:
+        if self.kind not in (CRASH, JOIN, DRAIN):
+            raise ValueError(f"unknown churn event kind {self.kind!r}")
+
+
+def churn_schedule(
+    n_workers: int,
+    duration_s: float,
+    mtbf_s: float,
+    repair_s: float = 20.0,
+    seed: int = 0,
+    drain_fraction: float = 0.25,
+    min_live: int = 1,
+    start_after_s: float = 5.0,
+) -> List[ChurnEvent]:
+    """Seeded Poisson churn: each failure hits a uniformly chosen live
+    worker (exponential fleet inter-failure gap ``mtbf_s / n_workers``),
+    is a graceful drain with probability ``drain_fraction``, and repairs
+    (rejoins) after ``repair_s`` ± 25 % jitter.  At least ``min_live``
+    workers stay up at all times (failures that would violate the floor
+    are skipped, as a real orchestrator's disruption budget would).
+    ``start_after_s`` keeps the bootstrap window quiet so the first
+    heartbeats propagate before the first lease can expire.
+    """
+    if n_workers < 1 or mtbf_s <= 0:
+        return []
+    rng = random.Random(seed)
+    events: List[ChurnEvent] = []
+    up = set(range(n_workers))
+    rejoin_at = {}  # worker -> scheduled join time
+    t = start_after_s
+    while True:
+        t += rng.expovariate(n_workers / mtbf_s)
+        if t >= duration_s:
+            break
+        # Apply any repairs that completed before this failure.
+        for w, rt in sorted(rejoin_at.items()):
+            if rt <= t:
+                up.add(w)
+                del rejoin_at[w]
+        if len(up) <= min_live:
+            continue  # disruption budget exhausted; skip this failure
+        victim = rng.choice(sorted(up))
+        kind = DRAIN if rng.random() < drain_fraction else CRASH
+        events.append(ChurnEvent(time=t, kind=kind, worker=victim))
+        up.discard(victim)
+        back = t + repair_s * (0.75 + 0.5 * rng.random())
+        if back < duration_s:
+            events.append(ChurnEvent(time=back, kind=JOIN, worker=victim))
+            rejoin_at[victim] = back
+    return sorted(events, key=lambda e: (e.time, e.worker))
+
+
+def validate_schedule(
+    events: Sequence[ChurnEvent], n_workers: int, min_live: int = 1
+) -> None:
+    """Sanity-check a (possibly hand-written) schedule: workers in range,
+    no failure of an already-down worker, no join of an up worker, and the
+    live floor respected.  Raises ``ValueError`` on the first violation."""
+    up = set(range(n_workers))
+    for ev in sorted(events, key=lambda e: (e.time, e.worker)):
+        if not 0 <= ev.worker < n_workers:
+            raise ValueError(f"worker {ev.worker} out of range in {ev}")
+        if ev.kind == JOIN:
+            if ev.worker in up:
+                raise ValueError(f"join of live worker in {ev}")
+            up.add(ev.worker)
+        else:
+            if ev.worker not in up:
+                raise ValueError(f"{ev.kind} of down worker in {ev}")
+            up.discard(ev.worker)
+            if len(up) < min_live:
+                raise ValueError(f"live floor {min_live} violated at {ev}")

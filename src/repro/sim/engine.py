@@ -33,6 +33,7 @@ from repro.core.netmodel import ClusterSpec
 from repro.core.prefetch import (
     INTENT_WIRE_BYTES,
     PrefetchConfig,
+    PrefetchIntent,
     PrefetchPlane,
     PrefetchStats,
 )
@@ -43,8 +44,9 @@ from repro.core.scheduler import (
     make_scheduler,
 )
 from repro.core.sst_exchange import GossipConfig, GossipPlane
-from repro.core.state import SharedStateTable
+from repro.core.state import DEAD, LeaseConfig, SharedStateTable
 from repro.core.types import ADFG, Job, MLModel
+from repro.sim.churn import CRASH, DRAIN, JOIN, ChurnEvent
 
 
 # --------------------------------------------------------------------------
@@ -62,6 +64,15 @@ class _TaskRun:
     started: Optional[float] = None
     finished: Optional[float] = None
     worker: Optional[int] = None
+    # Attempt counter: every re-route/re-execution (bounce, worker crash,
+    # drain) bumps it, and in-flight events tagged with an older value are
+    # void on delivery — the mechanism that keeps gossip-declared death
+    # racing in-flight fetches/inputs/completions safe.
+    generation: int = 0
+    # Worker incarnation at completion time: the task's output survives
+    # only while its worker is up in the SAME incarnation (a crash wipes
+    # outputs even if the worker rejoins before anyone re-reads them).
+    session: int = 0
 
 
 class _JobState:
@@ -123,6 +134,29 @@ class SimResult:
     prefetch_unused_resident_bytes: float = 0.0
     prefetch_useful: int = 0
     prefetch_stats: Optional[PrefetchStats] = None
+    # Fleet churn / fault tolerance (zeros on a static fleet).
+    churn_crashes: int = 0
+    churn_joins: int = 0
+    churn_drains: int = 0
+    bounces: int = 0              # capacity bounces executed (§3.2 dispatcher)
+    tasks_rescued: int = 0        # in-flight/queued work re-routed off a dead worker
+    outputs_recovered: int = 0    # finished producers re-run (outputs died)
+    churn_wasted_bytes: float = 0.0  # PCIe bytes thrown away by churn
+    # Accounting-balance inputs for the chaos invariant checker:
+    # hits + misses == model_exec_starts + lost_miss_attempts
+    #                  + demand_refetches.
+    model_exec_starts: int = 0
+    lost_miss_attempts: int = 0
+    # A waiting task's fetched model was evicted before it could start
+    # (another task's execution displaced it): the dispatcher fetches
+    # again, charging a second miss against the same eventual start.
+    demand_refetches: int = 0
+    # (job_id, task_id) -> accepted completion count; every task completes
+    # >= 1 time, and sum == n_tasks + outputs_recovered.
+    task_completions: Optional[Dict[Tuple[int, str], int]] = None
+    # (time, kind) per processed event when ``record_events=True`` — the
+    # determinism regression tests compare two runs' logs verbatim.
+    event_log: Optional[List[Tuple[float, str]]] = None
 
     # -- aggregates ------------------------------------------------------------
     @property
@@ -187,6 +221,9 @@ class Simulation:
         cache_push_interval_s: Optional[float] = None,
         gossip: Optional[GossipConfig] = None,
         prefetch: Optional[PrefetchConfig] = None,
+        lease: Optional[LeaseConfig] = None,
+        churn: Optional[Sequence[ChurnEvent]] = None,
+        record_events: bool = False,
         runtime_noise_sigma: float = 0.25,
         seed: int = 0,
     ) -> None:
@@ -199,12 +236,24 @@ class Simulation:
         # Metadata plane: ``gossip`` selects the decentralized per-worker
         # view subsystem (each worker plans from its own, possibly stale,
         # replica); default is the single-published-snapshot table.
+        # ``lease`` enables the membership lane on either plane: workers
+        # heartbeat their own row and every reader classifies peers
+        # ALIVE/SUSPECT/DEAD from its own replica's heartbeat age.
         self.gossip = gossip
+        self.lease = lease
+        if churn and lease is None:
+            # Churn without a membership lane would leave informed
+            # schedulers placing onto corpses forever; default the lease.
+            lease = self.lease = LeaseConfig()
+        self.churn = list(churn or [])
         if gossip is not None:
-            self.sst = GossipPlane(cluster.n_workers, gossip, seed=seed)
+            self.sst = GossipPlane(
+                cluster.n_workers, gossip, seed=seed, lease=lease
+            )
         else:
             self.sst = SharedStateTable(
-                cluster.n_workers, push_interval_s, cache_push_interval_s
+                cluster.n_workers, push_interval_s, cache_push_interval_s,
+                lease=lease,
             )
         self.memories = [
             GpuMemoryManager(
@@ -257,8 +306,33 @@ class Simulation:
         self._jobs_open = 0
         self._workers_used: Set[int] = set()
         self._adjustments = 0
+        # Fleet membership ground truth (what the world is, not what any
+        # worker's view says) plus per-worker incarnation sessions that
+        # void stale periodic events (gossip/heartbeat/publication chains)
+        # across down/up transitions.
+        self._up: List[bool] = [True for _ in cluster.workers()]
+        self._draining: List[bool] = [False for _ in cluster.workers()]
+        self._session: List[int] = [0 for _ in cluster.workers()]
+        self._open_jobs: List[_JobState] = []
+        self._orphaned_intents: Dict[Tuple[int, str], PrefetchIntent] = {}
+        self._completions: Dict[Tuple[int, str], int] = {}
+        self._bounces = 0
+        self._tasks_rescued = 0
+        self._outputs_recovered = 0
+        self._model_exec_starts = 0
+        self._lost_miss_attempts = 0
+        self._demand_refetches = 0
+        self._churn_crashes = 0
+        self._churn_joins = 0
+        self._churn_drains = 0
+        # Replayable event log (determinism regression tests).
+        self.event_log: Optional[List[Tuple[float, str]]] = (
+            [] if record_events else None
+        )
         for w in cluster.workers():
             self.sst.update_cache(w, 0, cluster.gpu_capacity(w), 0.0)
+            if self.lease is not None:
+                self.sst.heartbeat(w, 0.0)
             self.sst.push(w, 0.0)
 
     # -- event plumbing ----------------------------------------------------------
@@ -275,41 +349,51 @@ class Simulation:
         origin = itertools.cycle(self.cluster.workers())
         for job in sorted(jobs, key=lambda j: j.arrival_time):
             self._post(job.arrival_time, "arrival", job, next(origin))
+        for ev in self.churn:
+            self._post(ev.time, "churn", ev)
         # SST dissemination schedule (staggered per worker).
         if self.gossip is not None:
             for w in self.cluster.workers():
                 offset = (w + 1) * self.gossip.period_s / max(
                     1, self.cluster.n_workers
                 )
-                self._post(offset, "gossip", w)
+                self._post(offset, "gossip", w, 0)
         else:
             for w in self.cluster.workers():
                 offset = (w + 1) * self.sst.push_interval_s / max(
                     1, self.cluster.n_workers
                 )
-                self._post(offset, "sst_load", w)
+                self._post(offset, "sst_load", w, 0)
                 offset_c = (w + 1) * self.sst.cache_push_interval_s / max(
                     1, self.cluster.n_workers
                 )
-                self._post(offset_c, "sst_cache", w)
+                self._post(offset_c, "sst_cache", w, 0)
+        if self.lease is not None:
+            for w in self.cluster.workers():
+                offset = (w + 1) * self.lease.heartbeat_period_s / max(
+                    1, self.cluster.n_workers
+                )
+                self._post(offset, "heartbeat", w, 0)
         self._jobs_open = len(jobs)
 
         while self._heap and self._jobs_open > 0:
             t, _, ev = heapq.heappop(self._heap)
             self._now = t
             kind = ev[0]
+            if self.event_log is not None:
+                self.event_log.append((round(t, 9), kind))
             if kind == "arrival":
                 self._on_arrival(ev[1], ev[2])
             elif kind == "enqueue":
                 self._on_enqueue(ev[1], ev[2], ev[3])
             elif kind == "input":
-                self._on_input(ev[1], ev[2], ev[3], ev[4])
+                self._on_input(ev[1], ev[2], ev[3], ev[4], ev[5])
             elif kind == "fetch_done":
                 self._on_fetch_done(ev[1], ev[2])
             elif kind == "task_done":
-                self._on_task_done(ev[1], ev[2], ev[3])
+                self._on_task_done(ev[1], ev[2], ev[3], ev[4])
             elif kind == "task_fetch_bookkeep":
-                self._on_fetch_bookkeep(ev[1], ev[2], ev[3])
+                self._on_fetch_bookkeep(ev[1], ev[2], ev[3], ev[4])
             elif kind == "intent":
                 self._on_intent(ev[1], ev[2])
             elif kind == "intent_cancel":
@@ -317,19 +401,35 @@ class Simulation:
             elif kind == "prefetch_poke":
                 self._on_prefetch_poke(ev[1], t)
             elif kind == "bounce":
-                self._on_bounce(ev[1], ev[2], ev[3])
+                self._on_bounce(ev[1], ev[2], ev[3], ev[4])
+            elif kind == "churn":
+                self._on_churn(ev[1])
+            elif kind == "recover":
+                self._on_recover(ev[1])
+            elif kind == "dead_letter":
+                self._on_dead_letter(ev[1], ev[2], ev[3], ev[4])
+            elif kind == "reroute_retry":
+                self._on_reroute_retry(ev[1], ev[2], ev[3])
+            elif kind == "heartbeat":
+                self._on_heartbeat(ev[1], ev[2])
             elif kind == "sst_load":
-                self.sst.push_load(ev[1], t)
-                self._post(t + self.sst.push_interval_s, "sst_load", ev[1])
+                if ev[2] == self._session[ev[1]] and self._up[ev[1]]:
+                    self.sst.push_load(ev[1], t)
+                    self._post(
+                        t + self.sst.push_interval_s, "sst_load", ev[1], ev[2]
+                    )
             elif kind == "sst_cache":
-                self.sst.push_cache(ev[1], t)
-                self._post(
-                    t + self.sst.cache_push_interval_s, "sst_cache", ev[1]
-                )
+                if ev[2] == self._session[ev[1]] and self._up[ev[1]]:
+                    self.sst.push_cache(ev[1], t)
+                    self._post(
+                        t + self.sst.cache_push_interval_s,
+                        "sst_cache", ev[1], ev[2],
+                    )
             elif kind == "gossip":
-                self._on_gossip(ev[1])
+                self._on_gossip(ev[1], ev[2])
             elif kind == "gossip_rx":
-                self.sst.deliver(ev[1], ev[2], t)
+                if self._up[ev[1]]:
+                    self.sst.deliver(ev[1], ev[2], t)
             else:  # pragma: no cover
                 raise AssertionError(f"unknown event {kind}")
 
@@ -360,12 +460,55 @@ class Simulation:
                 if self.prefetch_plane is not None
                 else None
             ),
+            churn_crashes=self._churn_crashes,
+            churn_joins=self._churn_joins,
+            churn_drains=self._churn_drains,
+            bounces=self._bounces,
+            tasks_rescued=self._tasks_rescued,
+            outputs_recovered=self._outputs_recovered,
+            churn_wasted_bytes=sum(m.stats.churn_wasted_bytes for m in mems),
+            model_exec_starts=self._model_exec_starts,
+            lost_miss_attempts=self._lost_miss_attempts,
+            demand_refetches=self._demand_refetches,
+            task_completions=dict(self._completions),
+            event_log=self.event_log,
         )
 
     # -- event handlers --------------------------------------------------------------
+    def _serving(self, worker: int) -> bool:
+        """Ground truth: the worker is up and accepting new work."""
+        return self._up[worker] and not self._draining[worker]
+
+    def _live_workers(self) -> List[int]:
+        return [w for w in self.cluster.workers() if self._serving(w)]
+
+    def _live_origin(self, preferred: int) -> Optional[int]:
+        """Clients connect to a live front-end: the preferred origin if it
+        serves, else the next serving worker by id (deterministic)."""
+        n = self.cluster.n_workers
+        for d in range(n):
+            w = (preferred + d) % n
+            if self._serving(w):
+                return w
+        return None
+
     def _on_arrival(self, job: Job, origin: int) -> None:
+        live = self._live_origin(origin)
+        if live is None:
+            if not self._fleet_can_serve(None):
+                raise ValueError(
+                    "whole fleet is down with no scheduled joins; "
+                    "arrivals can never be served"
+                )
+            # Whole fleet down/draining: the client retries shortly.
+            self._post(self._now + 1.0, "arrival", job, origin)
+            return
+        origin = live
         js = _JobState(job, origin)
-        adfg = self.scheduler.plan(job, self._now, origin, self.sst.view(origin))
+        self._open_jobs.append(js)
+        adfg = self.scheduler.plan(
+            job, self._now, origin, self.sst.view(origin, self._now)
+        )
         js.adfg = adfg
         if adfg is None:
             # JIT: entry tasks become ready immediately; pick workers now.
@@ -393,7 +536,10 @@ class Simulation:
                 delay = 0.0
                 if w != origin:
                     delay = self.profiles.td_input(job.dfg.tasks[tid])
-                self._post(self._now + delay, "input", js, tid, "", w)
+                self._post(
+                    self._now + delay, "input", js, tid, "", w,
+                    js.tasks[tid].generation,
+                )
 
     def _jit_assign(
         self,
@@ -409,11 +555,17 @@ class Simulation:
             input_locations, key=lambda s: input_sizes.get(s, 0.0)
         )
         reader = input_locations[reader_src]
+        if not self._up[reader]:
+            # The largest input's holder died: read from any live worker
+            # (the JIT decision has to be made somewhere).
+            live = self._live_origin(reader)
+            if live is not None:
+                reader = live
         w = self.scheduler.select_worker_at_ready(
             js.job,
             task_id,
             self._now,
-            self.sst.view(reader),
+            self.sst.view(reader, self._now),
             input_locations,
             input_sizes,
             self_worker=reader,
@@ -428,14 +580,38 @@ class Simulation:
                     delay,
                     self.cluster.network.transfer_time(input_sizes[src]),
                 )
+        gen = js.tasks[task_id].generation
         for src in input_locations:
-            self._post(self._now + delay, "input", js, task_id, src, w)
+            self._post(self._now + delay, "input", js, task_id, src, w, gen)
 
     def _on_input(
-        self, js: _JobState, task_id: str, src: str, worker: int
+        self, js: _JobState, task_id: str, src: str, worker: int, gen: int
     ) -> None:
-        js.inputs_arrived[task_id].add(src)
         run = js.tasks[task_id]
+        if gen != run.generation or run.finished is not None:
+            return  # superseded by a re-route / re-execution
+        if not self._serving(worker):
+            if self._up[worker]:
+                # Draining: the worker is alive and politely refuses, so
+                # failover is immediate.
+                self._reroute(js, task_id)
+            else:
+                # Dead: the sender only discovers the silence after the
+                # connection timeout — the per-contact price every
+                # membership-blind placement keeps paying all through the
+                # outage, and an informed planner pays at most once per
+                # lease window.
+                timeout = (
+                    self.lease.dead_letter_timeout_s
+                    if self.lease is not None
+                    else 0.0
+                )
+                self._post(
+                    self._now + timeout, "dead_letter", js, task_id, src,
+                    gen,
+                )
+            return
+        js.inputs_arrived[task_id].add(src)
         if not run.enqueued:
             run.enqueued = True
             run.worker = worker
@@ -459,9 +635,16 @@ class Simulation:
         self._publish_cache(worker)  # also refreshes the intent bitmap
         self._dispatch(worker)
 
-    def _on_task_done(self, js: _JobState, task_id: str, worker: int) -> None:
+    def _on_task_done(
+        self, js: _JobState, task_id: str, worker: int, gen: int
+    ) -> None:
         run = js.tasks[task_id]
+        if gen != run.generation:
+            return  # the worker died mid-run; the attempt is void
         run.finished = self._now
+        run.session = self._session[worker]
+        key = (js.job.job_id, task_id)
+        self._completions[key] = self._completions.get(key, 0) + 1
         task = js.job.dfg.tasks[task_id]
         if task.model_id is not None:
             self.memories[worker].end_execution(task.model_id)
@@ -470,7 +653,7 @@ class Simulation:
         self._gpu_busy[worker] = None
         self._update_load(worker)
         self._route_successors(js, task_id, worker)
-        if js.done():
+        if js.done() and js.finish_time is None:
             js.finish_time = self._now
             self._records.append(
                 JobRecord(
@@ -482,6 +665,13 @@ class Simulation:
                 )
             )
             self._jobs_open -= 1
+        if (
+            self._draining[worker]
+            and self._gpu_busy[worker] is None
+            and not self._fetch_busy[worker]
+        ):
+            self._complete_drain(worker)
+            return
         self._dispatch(worker)
 
     # -- successor routing ---------------------------------------------------------
@@ -491,6 +681,11 @@ class Simulation:
         adfg = js.adfg
         assert adfg is not None
         for succ in dfg.succs[task_id]:
+            run_s = js.tasks[succ]
+            if run_s.finished is not None or run_s.started is not None:
+                # Already (re-)satisfied: a re-executed producer must not
+                # disturb successors that consumed its original output.
+                continue
             if self.scheduler.plans_at_arrival:
                 if (
                     self.scheduler.needs_adjustment
@@ -501,7 +696,7 @@ class Simulation:
                         adfg,
                         succ,
                         self._now,
-                        self.sst.view(worker),
+                        self.sst.view(worker, self._now),
                         worker,
                         task.output_bytes,
                     )
@@ -516,17 +711,37 @@ class Simulation:
                     if w == worker
                     else self.cluster.network.transfer_time(task.output_bytes)
                 )
-                self._post(self._now + delay, "input", js, succ, task_id, w)
+                self._post(
+                    self._now + delay, "input", js, succ, task_id, w,
+                    run_s.generation,
+                )
             else:
-                # JIT: assign when ALL predecessors have completed.
+                # JIT: assign when ALL predecessors have completed (and the
+                # task was not already assigned by an earlier completion —
+                # re-executed producers complete more than once).
                 preds = dfg.preds[succ]
-                if all(js.tasks[p].finished is not None for p in preds):
+                if succ not in adfg.assignment and all(
+                    js.tasks[p].finished is not None for p in preds
+                ):
+                    dead = [
+                        p
+                        for p in preds
+                        if not self._output_alive(js.tasks[p])
+                    ]
+                    if dead:
+                        # A producer's output departed with its worker:
+                        # re-run it; its re-completion re-enters here.
+                        for p in dead:
+                            self._reexec_producer(js, p)
+                        continue
                     locs = {p: js.tasks[p].worker for p in preds}
                     sizes = {p: dfg.tasks[p].output_bytes for p in preds}
                     self._jit_assign(js, succ, locs, sizes)  # type: ignore[arg-type]
 
     # -- dispatcher (§3.2) ------------------------------------------------------------
     def _dispatch(self, worker: int) -> None:
+        if not self._serving(worker):
+            return
         if self._gpu_busy[worker] is not None:
             # Still try to start a model fetch for a queued task.
             self._maybe_prefetch(worker)
@@ -556,6 +771,7 @@ class Simulation:
             run = js.tasks[tid]
             run.started = self._now
             if task.model_id is not None:
+                self._model_exec_starts += 1
                 if not run.was_miss:
                     mem.stats.hits += 1  # model was already resident
                 upcoming = [
@@ -570,7 +786,9 @@ class Simulation:
             self._gpu_busy[worker] = (js, tid)
             self._workers_used.add(worker)
             rt = self._noisy(self.profiles.runtime(task, worker))
-            self._post(self._now + rt, "task_done", js, tid, worker)
+            self._post(
+                self._now + rt, "task_done", js, tid, worker, run.generation
+            )
             self._update_load(worker)
             break
         self._maybe_prefetch(worker)
@@ -579,6 +797,8 @@ class Simulation:
         """Keep the fetch pipe busy: demand fetches for queued tasks first;
         with the prefetch plane enabled, speculative fetches from the
         intent queue fill the idle pipe (demand preempts prefetch)."""
+        if not self._serving(worker):
+            return
         if not self._fetch_busy[worker] or self._fetch_preemptible[worker]:
             for js, tid in self._queues[worker]:
                 task = js.job.dfg.tasks[tid]
@@ -623,7 +843,10 @@ class Simulation:
             # re-routes it (handled as an event so the queue is not
             # mutated mid-scan).
             js.tasks[tid].bouncing = True
-            self._post(self._now, "bounce", js, tid, worker)
+            self._post(
+                self._now, "bounce", js, tid, worker,
+                js.tasks[tid].generation,
+            )
             return
         upcoming = [
             js2.job.dfg.tasks[t2].model_id for js2, t2 in self._queues[worker]
@@ -637,6 +860,10 @@ class Simulation:
         # event at fetch completion (execution re-pins at start).
         mem.pin(task.model_id)
         js.tasks[tid].fetching = True
+        if js.tasks[tid].was_miss:
+            # The earlier fetch's model was evicted before the task could
+            # start: a second demand miss against the same start.
+            self._demand_refetches += 1
         js.tasks[tid].was_miss = True
         self._fetch_busy[worker] = True
         self._fetch_model[worker] = task.model_id
@@ -649,7 +876,10 @@ class Simulation:
             # still queued) is spent.
             self.prefetch_plane.consume(worker, js.job.job_id, tid)
         self._publish_cache(worker)  # also refreshes the intent bitmap
-        self._post(self._now + fetch_s, "task_fetch_bookkeep", js, tid, worker)
+        self._post(
+            self._now + fetch_s, "task_fetch_bookkeep", js, tid, worker,
+            js.tasks[tid].generation,
+        )
         self._post(
             self._now + fetch_s, "fetch_done", worker,
             self._fetch_token[worker],
@@ -663,8 +893,11 @@ class Simulation:
             return
         mem = self.memories[worker]
         peer_bits = 0
-        for w2, row in enumerate(self.sst.view(worker)):
-            if w2 != worker:
+        for w2, row in enumerate(self.sst.view(worker, self._now)):
+            # A peer this worker's view marks DEAD is no anti-herd
+            # evidence: its frozen row may still advertise the model, but
+            # nobody can be routed there.
+            if w2 != worker and row.liveness != DEAD:
                 peer_bits |= row.cache_bitmap | row.intent_bitmap
         intent, retry_at = plane.next_intent(
             worker, self._now, mem.has, peer_bits
@@ -741,12 +974,16 @@ class Simulation:
 
     def _on_intent(self, worker: int, intents) -> None:
         assert self.prefetch_plane is not None
+        if not self._serving(worker):
+            return  # control message reached a corpse; dropped on the floor
         self.prefetch_plane.admit(worker, intents, self._now)
         self._publish_intent(worker)
         self._maybe_prefetch(worker)
 
     def _on_intent_cancel(self, worker: int, js: _JobState, task_id: str) -> None:
         assert self.prefetch_plane is not None
+        if not self._up[worker]:
+            return  # the plane state for this worker was already dropped
         aborted = self.prefetch_plane.cancel(
             worker, js.job.job_id, task_id, migrated=True
         )
@@ -761,38 +998,53 @@ class Simulation:
         else:
             self._publish_intent(worker)
 
-    def _on_fetch_bookkeep(self, js: _JobState, tid: str, worker: int) -> None:
-        js.tasks[tid].fetching = False
+    def _on_fetch_bookkeep(
+        self, js: _JobState, tid: str, worker: int, gen: int
+    ) -> None:
+        run = js.tasks[tid]
+        if gen != run.generation:
+            return  # fetch torn down by churn; pin already released
+        run.fetching = False
         task = js.job.dfg.tasks[tid]
         if task.model_id is not None:
             self.memories[worker].unpin(task.model_id)
 
-    def _on_bounce(self, js: _JobState, tid: str, worker: int) -> None:
+    def _on_bounce(self, js: _JobState, tid: str, worker: int, gen: int) -> None:
         """Re-route a task whose assigned GPU can never host its model:
         ship it (and its already-arrived inputs) to the least-loaded
-        worker with enough memory."""
+        *serving* worker with enough memory."""
+        run = js.tasks[tid]
+        if gen != run.generation:
+            return  # superseded by churn recovery
         task = js.job.dfg.tasks[tid]
         assert task.model_id is not None
         feasible = [
             w
             for w in self.cluster.workers()
-            if self.memories[w].can_host(task.model_id)
+            if self._serving(w) and self.memories[w].can_host(task.model_id)
         ]
         if not feasible:
-            raise ValueError(
-                f"model {task.model_id} fits no worker in the fleet"
-            )
-        sst = self.sst.view(worker)
+            if not self._fleet_can_serve(task.model_id):
+                raise ValueError(
+                    f"model {task.model_id} fits no current or future "
+                    f"fleet member; the job can never finish"
+                )
+            # Capable workers exist (or will rejoin): hold the task and
+            # retry once capacity is restored.
+            self._post(self._now + 0.5, "bounce", js, tid, worker, gen)
+            return
+        self._bounces += 1
+        sst = self.sst.view(worker, self._now)
         target = min(
             feasible, key=lambda w: (max(self._now, sst[w].ft_estimate_s), w)
         )
-        run = js.tasks[tid]
         run.bouncing = False
         self._queues[worker] = [
             (j, t) for j, t in self._queues[worker] if (j, t) != (js, tid)
         ]
         run.enqueued = False
         run.worker = None
+        run.generation += 1
         assert js.adfg is not None
         js.adfg[tid] = target
         dfg = js.job.dfg
@@ -805,7 +1057,10 @@ class Simulation:
             delay = max(delay, self.cluster.network.transfer_time(nbytes))
         js.inputs_arrived[tid] = set()
         for src in srcs:
-            self._post(self._now + delay, "input", js, tid, src, target)
+            self._post(
+                self._now + delay, "input", js, tid, src, target,
+                run.generation,
+            )
         self._update_load(worker)
         self._dispatch(worker)
 
@@ -824,20 +1079,520 @@ class Simulation:
         if intent is not None:
             self._post(self._now + ctrl, "intent", new_w, [intent])
 
+    # -- fleet churn: crash / drain / join (membership plane) ----------------------
+    def _on_churn(self, ev: ChurnEvent) -> None:
+        if ev.kind == CRASH:
+            self._do_crash(ev.worker)
+        elif ev.kind == JOIN:
+            self._do_join(ev.worker)
+        elif ev.kind == DRAIN:
+            self._do_drain(ev.worker)
+
+    def _do_crash(self, w: int) -> None:
+        """The worker vanishes: running task, queue, in-flight fetch, cache
+        contents, and gossip replica are all lost.  Nothing is announced —
+        peers only find out when the heartbeat lease expires in their own
+        views, so the work it held is only *recovered* after the detection
+        delay (no oracle); until then peers may keep routing work here,
+        which the dead-letter path in ``_on_input`` fails over after the
+        connection timeout."""
+        if not self._up[w]:
+            return
+        self._churn_crashes += 1
+        self._up[w] = False
+        self._draining[w] = False
+        self._session[w] += 1  # voids the gossip/heartbeat/publish chains
+        self._abort_worker_fetch(w, churn=True)
+        if self.prefetch_plane is not None:
+            for intent in self.prefetch_plane.drop_worker(w):
+                self._orphaned_intents[intent.key()] = intent
+        self.memories[w].reset(graceful=False)
+        self._poke_at[w] = None
+        self._gpu_busy[w] = None
+        self._queues[w] = []
+        # The attempts physically ON the worker die with it *now*: their
+        # generations bump immediately so the already-posted task_done /
+        # bookkeep / bounce events are void (no ghost completions from a
+        # corpse).  Re-placement still waits for detection; work whose
+        # inputs are merely en route stays un-reset so the sender's
+        # (faster) dead-letter timeout can fail it over first.
+        snapshot = self._strand_snapshot(w)
+        delay = (
+            self.lease.detection_delay_s if self.lease is not None else 0.0
+        )
+        self._post(self._now + delay, "recover", (w, snapshot))
+
+    def _do_drain(self, w: int) -> None:
+        """Graceful departure: advertise ``draining`` (peers stop placing
+        work the moment the flag reaches their view), re-route queued
+        tasks, abort the in-flight fetch, finish the running task, then
+        leave."""
+        if not self._serving(w):
+            return
+        self._churn_drains += 1
+        self._draining[w] = True
+        self.sst.set_draining(w, True, self._now)
+        self._abort_worker_fetch(w, churn=True)
+        if self.prefetch_plane is not None:
+            for intent in self.prefetch_plane.drop_worker(w):
+                self._orphaned_intents[intent.key()] = intent
+            self._publish_intent(w)
+        queued = list(self._queues[w])
+        self._queues[w] = []
+        for js, tid in queued:
+            self._reroute(js, tid)
+        self._update_load(w)
+        if self._gpu_busy[w] is None and not self._fetch_busy[w]:
+            self._complete_drain(w)
+
+    def _complete_drain(self, w: int) -> None:
+        """The drained worker's running task finished: flush still-needed
+        task outputs to an heir (graceful departure has the time to
+        upload its state — that is the point of draining over crashing),
+        then leave the fleet."""
+        heir = self._live_origin((w + 1) % self.cluster.n_workers)
+        if heir is not None:
+            self._open_jobs = [
+                js for js in self._open_jobs if js.finish_time is None
+            ]
+            for js in self._open_jobs:
+                for tid, run in js.tasks.items():
+                    if (
+                        run.finished is not None
+                        and run.worker == w
+                        and any(
+                            js.tasks[s].finished is None
+                            for s in js.job.dfg.succs[tid]
+                        )
+                    ):
+                        run.worker = heir
+                        run.session = self._session[heir]
+        self._up[w] = False
+        self._session[w] += 1
+        self.memories[w].reset(graceful=True)
+        self._poke_at[w] = None
+
+    def _do_join(self, w: int) -> None:
+        """The worker (re)enters with a cold cache and a fresh gossip
+        incarnation; its SST view is rebuilt by anti-entropy full-sync
+        from the first peers to contact it (``GossipPlane.join``).  A
+        join that lands while a drain is still finishing its running task
+        cancels the drain (the worker never actually left) instead of
+        being dropped — a drop would remove the worker forever."""
+        if self._up[w]:
+            if self._draining[w]:
+                self._draining[w] = False
+                self.sst.set_draining(w, False, self._now)
+                self._churn_joins += 1
+                self._dispatch(w)
+            return
+        self._churn_joins += 1
+        self._up[w] = True
+        self._draining[w] = False
+        self._session[w] += 1
+        s = self._session[w]
+        self.sst.join(w, self._now)
+        self.sst.update_cache(w, 0, self.cluster.gpu_capacity(w), self._now)
+        if self.lease is not None:
+            self.sst.heartbeat(w, self._now)
+            self._post(
+                self._now + self.lease.heartbeat_period_s, "heartbeat", w, s
+            )
+        self._update_load(w)
+        if self.gossip is not None:
+            self._post(self._now + self.gossip.period_s, "gossip", w, s)
+        else:
+            self._post(self._now + self.sst.push_interval_s, "sst_load", w, s)
+            self._post(
+                self._now + self.sst.cache_push_interval_s, "sst_cache", w, s
+            )
+
+    def _abort_worker_fetch(self, w: int, churn: bool = False) -> None:
+        """Tear down whatever is on the fetch pipe: speculative transfers
+        go through the wasted-prefetch ledger, demand transfers release
+        the owning (now dead/re-routed) task's fetch-pin and charge the
+        partial bytes as churn waste."""
+        if not self._fetch_busy[w]:
+            return
+        mid = self._fetch_model[w]
+        assert mid is not None
+        dur = self._fetch_ends[w] - self._fetch_started[w]
+        frac = (
+            0.0
+            if dur <= 0
+            else min(1.0, (self._now - self._fetch_started[w]) / dur)
+        )
+        mem = self.memories[w]
+        if self._fetch_spec[w]:
+            mem.abort_prefetch(mid, frac)
+            if churn:
+                mem.stats.churn_wasted_bytes += mem.cached_size(mid) * frac
+        else:
+            mem.abort_fetch(mid, frac)
+        self._fetch_token[w] += 1  # invalidate the posted completion
+        self._fetch_busy[w] = False
+        self._fetch_model[w] = None
+        self._fetch_spec[w] = False
+        self._fetch_preemptible[w] = False
+
+    # -- task recovery --------------------------------------------------------------
+    def _strand_snapshot(
+        self, w: int
+    ) -> List[Tuple[_JobState, str, int, bool]]:
+        """Everything the crashing worker strands, as (job, task,
+        generation, needs_reset) tuples.
+
+        Attempts physically on the worker (enqueued / fetching / running)
+        are **reset here and now** — the crash voids them, so a pending
+        ``task_done`` can never complete a task on a corpse — and only
+        their re-placement waits for detection (``needs_reset=False``).
+        Floating tasks whose inputs are en route, and finished producers
+        whose outputs lived here, are left untouched until detection
+        (``needs_reset=True``): the former so the sender's faster
+        dead-letter timeout can fail them over first, the latter because
+        whether a dead output is still *needed* is best judged at
+        detection time.  Any pair whose generation moved on in between is
+        skipped by the recovery event."""
+        self._open_jobs = [
+            js for js in self._open_jobs if js.finish_time is None
+        ]
+        snap: List[Tuple[_JobState, str, int, bool]] = []
+        for js in self._open_jobs:
+            assign = js.adfg.assignment if js.adfg is not None else {}
+            for tid, run in js.tasks.items():
+                if run.worker == w and run.finished is None:
+                    self._reset_task(js, tid)
+                    snap.append((js, tid, run.generation, False))
+                elif run.worker == w or (
+                    run.finished is None
+                    and run.worker is None
+                    and assign.get(tid) == w
+                ):
+                    snap.append((js, tid, run.generation, True))
+        return snap
+
+    def _on_recover(
+        self, payload: Tuple[int, List[Tuple[_JobState, str, int]]]
+    ) -> None:
+        """Detection-time recovery: re-route the stranded unfinished work
+        and re-run finished producers whose outputs died and are *still*
+        needed (transitively: a producer is needed if some successor is
+        unfinished and missing its output, or is itself being
+        recovered)."""
+        w, snapshot = payload
+        by_job: Dict[int, Tuple[_JobState, List[Tuple[str, int, bool]]]] = {}
+        for js, tid, gen, needs_reset in snapshot:
+            by_job.setdefault(js.job.job_id, (js, []))[1].append(
+                (tid, gen, needs_reset)
+            )
+        for js, pairs in by_job.values():
+            if js.finish_time is not None:
+                continue
+            assign = js.adfg.assignment if js.adfg is not None else {}
+            lost: List[str] = []          # crash-reset at crash time
+            floating: List[str] = []      # still stranded, reset here
+            dead_outputs = set()
+            for tid, gen, needs_reset in pairs:
+                run = js.tasks[tid]
+                if run.generation != gen:
+                    continue  # something already failed this attempt over
+                if not needs_reset:
+                    if (
+                        run.enqueued
+                        or run.started is not None
+                        or run.finished is not None
+                    ):
+                        # Alg. 2 already re-staged the crash-voided
+                        # attempt (same generation) on a live worker
+                        # during the detection window; re-shipping would
+                        # split its inputs across two targets.
+                        continue
+                    lost.append(tid)
+                elif run.finished is not None:
+                    dead_outputs.add(tid)
+                elif run.worker == w or (
+                    run.worker is None and assign.get(tid) == w
+                ):
+                    floating.append(tid)
+                # else: Alg. 2 adjusted the still-floating task off the
+                # corpse in the meantime; it is no longer stranded.
+            dfg = js.job.dfg
+            needed = set(lost) | set(floating)
+            reexec: List[str] = []
+            for tid in reversed(dfg.topo_order):
+                if tid not in dead_outputs:
+                    continue
+                for s in dfg.succs[tid]:
+                    rs = js.tasks[s]
+                    if s in needed or (
+                        rs.finished is None
+                        and tid not in js.inputs_arrived[s]
+                    ):
+                        reexec.append(tid)
+                        needed.add(tid)
+                        break
+            # Reset what was not already voided at crash time (generation
+            # bumps void in-flight events), then ship producers before
+            # consumers.
+            for tid in reexec + floating:
+                self._reset_task(js, tid)
+            order = {t: i for i, t in enumerate(dfg.topo_order)}
+            for tid in sorted(
+                reexec + floating + lost, key=lambda t: order[t]
+            ):
+                self._ship_inputs(js, tid)
+
+    def _on_dead_letter(
+        self, js: _JobState, tid: str, src: str, gen: int
+    ) -> None:
+        """The connection timeout on one input shipment to a dead worker
+        fired.  Three same-generation outcomes exist, because
+        detection-time recovery re-stages crash-voided attempts without a
+        fresh generation while stale-assignment shipments may still be in
+        flight:
+
+        * the attempt has started (or this input already landed via a
+          duplicate shipment) — the timed-out copy is moot;
+        * the attempt is enqueued on a (necessarily serving) worker but
+          this input is genuinely missing — re-ship just this input
+          there, or the task waits forever;
+        * the attempt is still unstaged — full dead-letter failover."""
+        run = js.tasks[tid]
+        if gen != run.generation or run.finished is not None:
+            return
+        if run.started is not None or src in js.inputs_arrived[tid]:
+            return  # inputs complete / duplicate shipment
+        if run.enqueued and run.worker is not None:
+            task = js.job.dfg.tasks[tid]
+            nbytes = (
+                task.input_bytes
+                if src == ""
+                else js.job.dfg.tasks[src].output_bytes
+            )
+            delay = self.cluster.network.transfer_time(nbytes)
+            self._post(
+                self._now + delay, "input", js, tid, src, run.worker, gen
+            )
+            return
+        self._reroute(js, tid)
+
+    def _reset_task(self, js: _JobState, tid: str) -> None:
+        run = js.tasks[tid]
+        if run.enqueued and run.worker is not None:
+            # Pull the attempt out of its queue: a stale entry would wake
+            # up when the *new* attempt's inputs refill inputs_arrived and
+            # start the task twice.
+            self._queues[run.worker] = [
+                (j, t)
+                for j, t in self._queues[run.worker]
+                if (j, t) != (js, tid)
+            ]
+        if run.finished is not None:
+            self._outputs_recovered += 1
+        else:
+            self._tasks_rescued += 1
+            if run.was_miss and run.started is None:
+                # The fetch's demand miss was charged but the attempt
+                # never started: the chaos checker's hit/miss balance
+                # needs the orphaned charge on the books.
+                self._lost_miss_attempts += 1
+            if run.started is not None and run.worker is not None:
+                # GPU cycles the lost attempt burned still happened.
+                self._busy_time[run.worker] += self._now - run.started
+        run.generation += 1
+        run.finished = None
+        run.started = None
+        run.enqueued = False
+        run.fetching = False
+        run.bouncing = False
+        run.was_miss = False
+        run.worker = None
+        js.inputs_arrived[tid] = set()
+        if not self.scheduler.plans_at_arrival and js.adfg is not None:
+            # JIT re-assigns when the last producer (re-)completes.
+            js.adfg.assignment.pop(tid, None)
+
+    def _reroute(self, js: _JobState, tid: str) -> None:
+        """Dead-letter recovery for one task: void the old attempt and
+        re-stage its inputs on a serving worker."""
+        self._reset_task(js, tid)
+        self._ship_inputs(js, tid)
+
+    def _output_alive(self, run: _TaskRun) -> bool:
+        """Whether a finished task's output can still be read: its worker
+        must be up *in the incarnation that produced it* — a crash wipes
+        outputs even when the worker rejoins before anyone re-reads."""
+        return (
+            run.worker is not None
+            and self._up[run.worker]
+            and run.session == self._session[run.worker]
+        )
+
+    def _reexec_producer(self, js: _JobState, tid: str) -> None:
+        run = js.tasks[tid]
+        if run.finished is None:
+            return  # already being recovered; its completion will ship
+        self._reset_task(js, tid)
+        self._ship_inputs(js, tid)
+
+    def _fleet_can_serve(self, model_id: Optional[int]) -> bool:
+        """Whether a worker able to host ``model_id`` is serving now or
+        will ever (re)join per the churn schedule.  Retry loops consult
+        this so a permanently lost capability raises a diagnosable error
+        instead of re-posting retries forever (``run()`` would never
+        return: the stuck job keeps the periodic chains alive)."""
+        for w in self.cluster.workers():
+            if model_id is not None and not self.memories[w].can_host(
+                model_id
+            ):
+                continue
+            if self._serving(w):
+                return True
+        for ev in self.churn:
+            if ev.kind == JOIN and ev.time >= self._now:
+                if model_id is None or self.memories[ev.worker].can_host(
+                    model_id
+                ):
+                    return True
+        return False
+
+    def _recovery_target(self, js: _JobState, tid: str) -> Optional[int]:
+        """Earliest-start serving worker that can host the task's model,
+        pricing the model fetch from the (live) origin replica's published
+        cache bitmaps — the dispatcher-level recovery rule.  Cache
+        awareness matters under churn: a crash of a cache-hot worker
+        would otherwise dump its whole working set onto whichever heir
+        happened to be least loaded, serializing a refetch storm on one
+        PCIe pipe."""
+        task = js.job.dfg.tasks[tid]
+        mid = task.model_id
+        cands = [
+            w
+            for w in self._live_workers()
+            if mid is None or self.memories[w].can_host(mid)
+        ]
+        if not cands:
+            return None
+        reader = self._live_origin(js.origin)
+        assert reader is not None  # cands nonempty => a serving worker exists
+        sstv = self.sst.view(reader, self._now)
+
+        def est(w: int) -> Tuple[float, int]:
+            start = max(self._now, sstv[w].ft_estimate_s)
+            if mid is not None and not (sstv[w].cache_bitmap >> mid) & 1:
+                start += self.profiles.td_model(mid)
+            return (start, w)
+
+        return min(cands, key=est)
+
+    def _ship_inputs(self, js: _JobState, tid: str) -> None:
+        """(Re-)stage a recovered task: re-run producers whose outputs
+        died, pick a serving target, re-home its prefetch intent, and ship
+        whatever inputs are already available; the rest arrive as their
+        producers (re-)complete."""
+        run = js.tasks[tid]
+        dfg = js.job.dfg
+        preds = list(dfg.preds[tid])
+        for p in preds:
+            rp = js.tasks[p]
+            if rp.finished is not None and not self._output_alive(rp):
+                self._reexec_producer(js, p)
+        if (
+            not self.scheduler.plans_at_arrival
+            and preds
+            and not all(js.tasks[p].finished is not None for p in preds)
+        ):
+            return  # JIT re-assigns when the last producer (re-)completes
+        target = self._recovery_target(js, tid)
+        if target is None:
+            mid = dfg.tasks[tid].model_id
+            if not self._fleet_can_serve(mid):
+                raise ValueError(
+                    f"task {tid!r} (model {mid}) fits no current or "
+                    f"future fleet member; the job can never finish"
+                )
+            # A capable worker will (re)join; retry then.
+            self._post(
+                self._now + 0.5, "reroute_retry", js, tid, run.generation
+            )
+            return
+        assert js.adfg is not None
+        js.adfg[tid] = target
+        task = dfg.tasks[tid]
+        if self.prefetch_plane is not None and task.model_id is not None:
+            ctrl = self.cluster.network.transfer_time(INTENT_WIRE_BYTES)
+            orphan = self._orphaned_intents.pop((js.job.job_id, tid), None)
+            if orphan is not None:
+                intent = self.prefetch_plane.rehome(orphan, target, self._now)
+            else:
+                intent = self.prefetch_plane.make_intent(
+                    js.job, tid, target, self._now
+                )
+            if intent is not None:
+                self._post(self._now + ctrl, "intent", target, [intent])
+        if not preds:
+            origin = self._live_origin(js.origin)
+            if origin is None:
+                origin = target  # whole fleet gone except the target
+            delay = 0.0 if target == origin else self.profiles.td_input(task)
+            self._post(
+                self._now + delay, "input", js, tid, "", target,
+                run.generation,
+            )
+            return
+        ready = [p for p in preds if js.tasks[p].finished is not None]
+        if not ready:
+            return  # everything arrives via _route_successors later
+        delay = 0.0
+        for p in ready:
+            if js.tasks[p].worker != target:
+                delay = max(
+                    delay,
+                    self.cluster.network.transfer_time(
+                        dfg.tasks[p].output_bytes
+                    ),
+                )
+        for p in ready:
+            self._post(
+                self._now + delay, "input", js, tid, p, target,
+                run.generation,
+            )
+
+    def _on_reroute_retry(self, js: _JobState, tid: str, gen: int) -> None:
+        run = js.tasks[tid]
+        if gen != run.generation or run.finished is not None:
+            return
+        self._ship_inputs(js, tid)
+
     # -- gossip plane (decentralized SST, §5.2) ------------------------------------
-    def _on_gossip(self, worker: int) -> None:
+    def _on_gossip(self, worker: int, session: int) -> None:
         """One gossip round: the plane computes the diff messages (drops
         already sampled); delivery is delayed by the network model, so a
-        reader's view lags by period + wire time."""
+        reader's view lags by period + wire time.  A dead worker's chain
+        dies with it (stale session); a join starts a fresh chain."""
         assert self.gossip is not None and isinstance(self.sst, GossipPlane)
+        if session != self._session[worker] or not self._up[worker]:
+            return
         for peer, updates, nbytes in self.sst.exchange(worker, self._now):
             delay = self.cluster.network.transfer_time(nbytes)
             self._post(self._now + delay, "gossip_rx", peer, updates)
-        self._post(self._now + self.gossip.period_s, "gossip", worker)
+        self._post(self._now + self.gossip.period_s, "gossip", worker, session)
+
+    def _on_heartbeat(self, worker: int, session: int) -> None:
+        if session != self._session[worker] or not self._up[worker]:
+            return
+        assert self.lease is not None
+        self.sst.heartbeat(worker, self._now)
+        self._post(
+            self._now + self.lease.heartbeat_period_s, "heartbeat",
+            worker, session,
+        )
 
     # -- state publication ---------------------------------------------------------
     def _update_load(self, worker: int) -> None:
         """Recompute FT(w) = now + remaining work on the queue (§4.1)."""
+        if not self._up[worker]:
+            return  # a corpse publishes nothing; its row freezes
         ft = self._now
         busy = self._gpu_busy[worker]
         if busy is not None:
@@ -851,6 +1606,8 @@ class Simulation:
         self.sst.update_load(worker, ft, self._now)
 
     def _publish_cache(self, worker: int) -> None:
+        if not self._up[worker]:
+            return
         mem = self.memories[worker]
         if self.prefetch_plane is None:
             self.sst.update_cache(worker, mem.bitmap, mem.free_bytes, self._now)
@@ -872,7 +1629,7 @@ class Simulation:
         )
 
     def _publish_intent(self, worker: int) -> None:
-        if self.prefetch_plane is None:
+        if self.prefetch_plane is None or not self._up[worker]:
             return
         mem = self.memories[worker]
         self.sst.update_intent(

@@ -1,0 +1,194 @@
+"""Chaos-test harness: seeded, replayable churn schedules driven through
+the simulator, with a post-run invariant checker.
+
+The checker asserts the properties that must survive *any* crash/join/
+drain schedule, for every scheduler:
+
+1. **No job lost** — every submitted job terminates with exactly one
+   JobRecord, and finish >= arrival.
+2. **No task lost or double-completed** — every task of every job has at
+   least one accepted completion, and the total completion count equals
+   task count + re-executed producers (each surviving attempt completes
+   exactly once; void attempts are invalidated by generation tags).
+3. **Accounting balances** — cache hits + misses equals model-bearing
+   execution starts + fetch attempts orphaned by churn + refetches after
+   eviction; wasted-byte ledgers are non-negative and bounded.
+4. **Counters are sane** — churn events applied never exceed the
+   schedule, bounces/rescues are non-negative.
+
+Run as a script for the CI chaos-smoke job (30 s seeded scenario across
+all schedulers, exits non-zero on any violation)::
+
+    PYTHONPATH=src python tests/chaos.py
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import (
+    GossipConfig,
+    LeaseConfig,
+    PrefetchConfig,
+    ProfileRepository,
+    fleet,
+)
+from repro.sim import (
+    ChurnEvent,
+    SimResult,
+    Simulation,
+    churn_schedule,
+    fleet_scaled_rate,
+    poisson_workload,
+    validate_schedule,
+)
+from repro.workflows import MODELS, paper_dfgs
+
+#: The scripted crash+join+drain scenario the acceptance criteria name:
+#: one crash with repair, one graceful drain with later rejoin, and one
+#: crash that never rejoins — all inside a 60 s window.
+SCRIPTED_SCHEDULE: Tuple[ChurnEvent, ...] = (
+    ChurnEvent(time=8.0, kind="crash", worker=1),
+    ChurnEvent(time=14.0, kind="drain", worker=3),
+    ChurnEvent(time=24.0, kind="join", worker=1),
+    ChurnEvent(time=30.0, kind="crash", worker=2),
+    ChurnEvent(time=38.0, kind="join", worker=3),
+    ChurnEvent(time=46.0, kind="join", worker=2),
+)
+
+
+def run_churn_sim(
+    scheduler: str = "navigator",
+    fleet_name: str = "uniform",
+    schedule: Optional[Sequence[ChurnEvent]] = None,
+    rate: float = 1.5,
+    duration: float = 60.0,
+    seed: int = 3,
+    sim_seed: int = 1,
+    gossip: Optional[GossipConfig] = GossipConfig(period_s=0.2, fanout=2),
+    lease: Optional[LeaseConfig] = LeaseConfig(),
+    prefetch: Optional[PrefetchConfig] = None,
+    record_events: bool = False,
+):
+    """Build and run one churn scenario; returns (result, jobs, schedule)."""
+    cluster = fleet(fleet_name)
+    profiles = ProfileRepository(cluster, MODELS)
+    dfgs = paper_dfgs()
+    for d in dfgs:
+        profiles.register(d)
+    jobs = poisson_workload(
+        dfgs, fleet_scaled_rate(cluster, rate), duration, seed=seed
+    )
+    schedule = list(
+        SCRIPTED_SCHEDULE if schedule is None else schedule
+    )
+    validate_schedule(schedule, cluster.n_workers)
+    sim = Simulation(
+        cluster,
+        profiles,
+        MODELS,
+        scheduler=scheduler,
+        gossip=gossip,
+        lease=lease,
+        churn=schedule,
+        prefetch=prefetch,
+        record_events=record_events,
+        seed=sim_seed,
+    )
+    res = sim.run(jobs)
+    return res, jobs, schedule
+
+
+def check_invariants(
+    res: SimResult, jobs, schedule: Sequence[ChurnEvent] = ()
+) -> None:
+    """Assert the churn-safety invariants on a finished run."""
+    # 1. Every job terminates exactly once.
+    assert len(res.records) == len(jobs), (
+        f"jobs lost: {len(res.records)}/{len(jobs)} records"
+    )
+    ids = [r.job_id for r in res.records]
+    assert len(ids) == len(set(ids)), "job completed more than once"
+    for r in res.records:
+        assert r.finish >= r.arrival, f"job {r.job_id} finished before arrival"
+
+    # 2. Every task completes; completions balance against re-execution.
+    assert res.task_completions is not None
+    all_tasks = {
+        (job.job_id, tid) for job in jobs for tid in job.dfg.tasks
+    }
+    missing = all_tasks - set(res.task_completions)
+    assert not missing, f"tasks never completed: {sorted(missing)[:5]}"
+    extra = set(res.task_completions) - all_tasks
+    assert not extra, f"completions for unknown tasks: {sorted(extra)[:5]}"
+    assert all(c >= 1 for c in res.task_completions.values())
+    total = sum(res.task_completions.values())
+    assert total == len(all_tasks) + res.outputs_recovered, (
+        f"completion ledger off: {total} != "
+        f"{len(all_tasks)} tasks + {res.outputs_recovered} re-executions"
+    )
+
+    # 3. Cache accounting balances.
+    assert 0.0 <= res.cache_hit_rate <= 1.0
+    lhs = res.cache_hits + res.cache_misses
+    rhs = (
+        res.model_exec_starts
+        + res.lost_miss_attempts
+        + res.demand_refetches
+    )
+    assert lhs == rhs, f"hit/miss ledger off: {lhs} != {rhs}"
+    assert res.bytes_fetched >= 0.0
+    assert res.churn_wasted_bytes >= 0.0
+    assert res.prefetch_wasted_bytes >= 0.0
+
+    # 4. Counter sanity.
+    assert res.bounces >= 0 and res.tasks_rescued >= 0
+    assert res.outputs_recovered >= 0
+    applied = res.churn_crashes + res.churn_joins + res.churn_drains
+    assert applied <= len(schedule), "more churn applied than scheduled"
+    kinds = [e.kind for e in schedule if e.time <= res.horizon]
+    assert res.churn_crashes <= kinds.count("crash")
+    assert res.churn_joins <= kinds.count("join")
+    assert res.churn_drains <= kinds.count("drain")
+
+
+def main() -> int:
+    """CI chaos-smoke: a 30 s seeded generated schedule plus the scripted
+    scenario, across every scheduler, on the heterogeneous fleet."""
+    duration = 30.0
+    failures = 0
+    generated = churn_schedule(
+        5, duration, mtbf_s=40.0, repair_s=8.0, seed=11, drain_fraction=0.3
+    )
+    scenarios = [
+        ("scripted", [e for e in SCRIPTED_SCHEDULE if e.time < duration]),
+        ("generated", generated),
+    ]
+    for policy in ("navigator", "hash", "heft", "jit"):
+        for label, schedule in scenarios:
+            for fleet_name in ("uniform", "mixed"):
+                res, jobs, schedule = run_churn_sim(
+                    scheduler=policy,
+                    fleet_name=fleet_name,
+                    schedule=schedule,
+                    duration=duration,
+                    prefetch=PrefetchConfig(),
+                )
+                try:
+                    check_invariants(res, jobs, schedule)
+                    verdict = "ok"
+                except AssertionError as exc:
+                    failures += 1
+                    verdict = f"FAIL: {exc}"
+                print(
+                    f"chaos-smoke {policy:10s} {label:9s} {fleet_name:8s} "
+                    f"jobs={len(res.records)}/{len(jobs)} "
+                    f"rescued={res.tasks_rescued} "
+                    f"reexec={res.outputs_recovered} "
+                    f"bounces={res.bounces} {verdict}"
+                )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

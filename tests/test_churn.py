@@ -1,0 +1,582 @@
+"""Worker churn & fault tolerance: chaos invariants across schedulers and
+fleets, determinism regression, membership-aware planning, and the
+crash/drain/join recovery paths (PR 3 tentpole)."""
+
+import pytest
+
+from chaos import (
+    SCRIPTED_SCHEDULE,
+    check_invariants,
+    run_churn_sim,
+)
+from repro.core import (
+    ALIVE,
+    ClusterSpec,
+    DEAD,
+    GB,
+    GossipConfig,
+    Job,
+    LeaseConfig,
+    NavigatorConfig,
+    NavigatorScheduler,
+    PrefetchConfig,
+    PrefetchPlane,
+    ProfileRepository,
+    SharedStateTable,
+    SSTRow,
+    SUSPECT,
+)
+from repro.core import bitmaps
+from repro.core.memory import GpuMemoryManager
+from repro.core.netmodel import AcceleratorLink
+from repro.core.prefetch import PrefetchIntent
+from repro.sim import (
+    ChurnEvent,
+    Simulation,
+    churn_schedule,
+    poisson_workload,
+    validate_schedule,
+)
+from repro.workflows import MODELS, paper_dfgs, translation_dfg
+
+
+# --------------------------------------------------------------------------
+# Chaos invariants: every policy × fleet under the scripted
+# crash+join+drain schedule (acceptance criterion)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["navigator", "hash", "heft", "jit"])
+@pytest.mark.parametrize("fleet_name", ["uniform", "mixed"])
+def test_invariants_scripted_schedule(policy, fleet_name):
+    res, jobs, schedule = run_churn_sim(
+        scheduler=policy, fleet_name=fleet_name, duration=60.0
+    )
+    check_invariants(res, jobs, schedule)
+    assert res.churn_crashes >= 1 and res.churn_drains >= 1
+    assert res.churn_joins >= 1
+
+
+@pytest.mark.parametrize("policy", ["navigator", "hash", "heft"])
+def test_invariants_generated_schedule_heterogeneous(policy):
+    """MTBF-generated churn on the heterogeneous fleet, prefetch plane on
+    (the configuration with the most cross-layer interaction)."""
+    schedule = churn_schedule(
+        5, 60.0, mtbf_s=60.0, repair_s=10.0, seed=7, drain_fraction=0.3
+    )
+    res, jobs, schedule = run_churn_sim(
+        scheduler=policy,
+        fleet_name="mixed",
+        schedule=schedule,
+        duration=60.0,
+        prefetch=PrefetchConfig(),
+    )
+    check_invariants(res, jobs, schedule)
+    assert res.tasks_rescued > 0
+
+
+def test_invariants_shared_state_table_plane():
+    """Churn must also be safe on the centralized-snapshot metadata plane
+    (lease ages derive from publication lag instead of gossip lag)."""
+    res, jobs, schedule = run_churn_sim(
+        scheduler="navigator", gossip=None, duration=60.0
+    )
+    check_invariants(res, jobs, schedule)
+    assert res.churn_crashes >= 1
+
+
+def test_navigator_rescues_fewer_tasks_than_blind_hash():
+    """Membership-aware placement routes around workers its view marks
+    DEAD; hash keeps throwing tasks at corpses, every one of which needs
+    a dead-letter rescue."""
+    schedule = churn_schedule(
+        5, 60.0, mtbf_s=50.0, repair_s=12.0, seed=5, drain_fraction=0.0
+    )
+    nav, jobs, schedule = run_churn_sim(
+        scheduler="navigator", schedule=schedule, duration=60.0
+    )
+    hsh, _, _ = run_churn_sim(
+        scheduler="hash", schedule=schedule, duration=60.0
+    )
+    assert nav.tasks_rescued < hsh.tasks_rescued
+
+
+# --------------------------------------------------------------------------
+# Determinism regression (guards PR 2/3 event-loop additions)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("gossip", [GossipConfig(period_s=0.2, fanout=2), None])
+def test_churn_trace_is_deterministic(gossip):
+    """The same seeded churn trace run twice yields identical event logs
+    and final metrics — any nondeterministic dict/set iteration in the
+    recovery paths would diverge here."""
+    kw = dict(
+        scheduler="navigator",
+        fleet_name="mixed",
+        gossip=gossip,
+        duration=45.0,
+        prefetch=PrefetchConfig(),
+        record_events=True,
+    )
+    a, jobs_a, _ = run_churn_sim(**kw)
+    b, jobs_b, _ = run_churn_sim(**kw)
+    assert a.event_log == b.event_log  # same events, same order, same times
+    assert a.mean_latency == b.mean_latency
+    assert a.cache_hits == b.cache_hits
+    assert a.tasks_rescued == b.tasks_rescued
+    assert a.outputs_recovered == b.outputs_recovered
+    assert a.task_completions == b.task_completions
+    assert a.churn_wasted_bytes == b.churn_wasted_bytes
+
+
+# --------------------------------------------------------------------------
+# Engine recovery semantics
+# --------------------------------------------------------------------------
+def tiny_sim(n_workers=2, scheduler="navigator", churn=(), **kw):
+    cluster = ClusterSpec(n_workers=n_workers)
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        profiles.register(d)
+    return Simulation(
+        cluster,
+        profiles,
+        MODELS,
+        scheduler=scheduler,
+        gossip=GossipConfig(period_s=0.1, fanout=n_workers - 1),
+        lease=LeaseConfig(),
+        churn=list(churn),
+        runtime_noise_sigma=0.0,
+        seed=0,
+        **kw,
+    )
+
+
+def test_no_ghost_completion_inside_detection_window():
+    """A task whose runtime ends after the crash but before detection
+    must NOT complete on the corpse: the crash voids the attempt
+    immediately even though re-placement waits for the lease."""
+    from repro.core import DFG, TaskSpec
+
+    dfg = DFG(
+        "one", tasks=[TaskSpec("t", 0.5, output_bytes=1e4)], edges=[]
+    )
+    cluster = ClusterSpec(n_workers=2)
+    profiles = ProfileRepository(cluster, MODELS)
+    profiles.register(dfg)
+    job = Job(0, dfg, arrival_time=0.0)
+    lease = LeaseConfig()
+    crash_t = 0.2
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator",
+        gossip=GossipConfig(period_s=0.1, fanout=1),
+        lease=lease,
+        churn=[
+            ChurnEvent(time=crash_t, kind="crash", worker=0),
+            ChurnEvent(time=10.0, kind="join", worker=0),
+        ],
+        runtime_noise_sigma=0.0, seed=0,
+    )
+    res = sim.run([job])
+    assert len(res.records) == 1
+    # Origin is worker 0 and the cluster is idle, so the task ran there;
+    # the ghost completion would have landed at t = 0.5 < detection.
+    # With the fix the job only finishes after detection-time recovery.
+    assert res.records[0].finish > crash_t + lease.detection_delay_s
+    assert res.tasks_rescued >= 1
+    check_invariants(res, [job], sim.churn)
+
+
+def test_crash_drops_running_task_and_reexecutes():
+    """A worker crash mid-execution voids the attempt; the task re-runs
+    elsewhere and the job still completes (completions ledger shows the
+    retry)."""
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    # Crash both the origin and its neighbour early: whichever worker got
+    # the entry task loses it.
+    sim = tiny_sim(
+        n_workers=3,
+        churn=[
+            ChurnEvent(time=0.3, kind="crash", worker=0),
+            ChurnEvent(time=5.0, kind="join", worker=0),
+        ],
+    )
+    res = sim.run([job])
+    assert len(res.records) == 1
+    check_invariants(res, [job], sim.churn)
+    assert res.tasks_rescued + res.outputs_recovered >= 1
+
+
+def test_drain_finishes_running_task_then_departs():
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    sim = tiny_sim(
+        n_workers=3,
+        churn=[ChurnEvent(time=0.3, kind="drain", worker=0)],
+    )
+    res = sim.run([job])
+    assert len(res.records) == 1
+    assert res.churn_drains == 1
+    # A drain never voids a completion: nothing was double-completed.
+    check_invariants(res, [job], sim.churn)
+
+
+def test_join_triggers_anti_entropy_full_sync_in_sim():
+    schedule = [
+        ChurnEvent(time=5.0, kind="crash", worker=1),
+        ChurnEvent(time=12.0, kind="join", worker=1),
+    ]
+    jobs = poisson_workload(paper_dfgs(), 1.0, 30.0, seed=2)
+    sim = tiny_sim(n_workers=4, churn=schedule)
+    res = sim.run(jobs)
+    assert len(res.records) == len(jobs)
+    assert sim.sst.full_syncs > 0  # the joiner was rebuilt by full sync
+
+
+def test_rejoined_worker_executes_new_work():
+    """After rejoin the worker is schedulable again (fresh epoch row
+    disseminates and the planner sees it ALIVE)."""
+    schedule = [
+        ChurnEvent(time=2.0, kind="crash", worker=1),
+        ChurnEvent(time=6.0, kind="join", worker=1),
+    ]
+    jobs = poisson_workload(paper_dfgs(), 2.0, 40.0, seed=4)
+    sim = tiny_sim(n_workers=2, churn=schedule)
+    res = sim.run(jobs)
+    assert len(res.records) == len(jobs)
+    post_join = [
+        r for r in res.records if r.arrival > 10.0
+    ]
+    assert post_join  # workload extends past the rejoin
+    assert 1 in res.workers_used
+
+
+def test_churn_wasted_bytes_accounted_under_prefetch():
+    schedule = churn_schedule(
+        5, 60.0, mtbf_s=40.0, repair_s=8.0, seed=3, drain_fraction=0.2
+    )
+    res, jobs, schedule = run_churn_sim(
+        scheduler="navigator",
+        schedule=schedule,
+        duration=60.0,
+        prefetch=PrefetchConfig(),
+    )
+    check_invariants(res, jobs, schedule)
+    # Crashes wiped caches: the lost residency shows up in the ledger.
+    assert res.churn_wasted_bytes > 0.0
+
+
+def test_orphaned_intents_are_rehomed():
+    schedule = churn_schedule(
+        5, 60.0, mtbf_s=30.0, repair_s=8.0, seed=3, drain_fraction=0.0
+    )
+    res, jobs, schedule = run_churn_sim(
+        scheduler="navigator",
+        schedule=schedule,
+        duration=60.0,
+        prefetch=PrefetchConfig(lookahead_depth=8),
+    )
+    check_invariants(res, jobs, schedule)
+    assert res.prefetch_stats is not None
+    assert res.prefetch_stats.intents_orphaned > 0
+    # Orphans whose tasks were re-routed were re-issued on the heirs.
+    assert res.prefetch_stats.intents_rehomed > 0
+
+
+def test_permanent_capability_loss_raises_instead_of_hanging():
+    """If the only worker able to host a model leaves forever, the sim
+    must fail loudly, not spin retry events for eternity."""
+    from repro.core import fleet as make_fleet
+    from repro.core import GB, ProfileRepository as PR
+
+    cluster = make_fleet("edge_heavy")  # big models fit only worker 0
+    profiles = PR(cluster, MODELS)
+    for d in paper_dfgs():
+        profiles.register(d)
+    jobs = poisson_workload(paper_dfgs(), 1.0, 20.0, seed=2)
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator",
+        gossip=GossipConfig(period_s=0.2, fanout=2), lease=LeaseConfig(),
+        churn=[ChurnEvent(time=3.0, kind="crash", worker=0)],  # no rejoin
+        seed=1,
+    )
+    with pytest.raises(ValueError, match="future fleet member"):
+        sim.run(jobs)
+
+
+def test_join_during_drain_cancels_the_drain():
+    """A join landing while a drain is still finishing its running task
+    un-drains the worker instead of being silently dropped (a drop would
+    remove the worker from the fleet forever)."""
+    jobs = poisson_workload(paper_dfgs(), 2.0, 30.0, seed=4)
+    sim = tiny_sim(
+        n_workers=2,
+        churn=[
+            # Drain under load: worker 0 almost certainly has a running
+            # task at t=5, so the drain lingers; the join lands mid-drain.
+            ChurnEvent(time=5.0, kind="drain", worker=0),
+            ChurnEvent(time=5.05, kind="join", worker=0),
+        ],
+    )
+    res = sim.run(jobs)
+    assert len(res.records) == len(jobs)
+    assert sim._up[0] and not sim._draining[0]  # still a fleet member
+
+
+def test_drain_flushes_outputs_no_pointless_reexecution():
+    """Graceful drain waited for its running task; the output it produced
+    must survive the departure (flushed to an heir), so JIT's deferred
+    input shipping does not force a re-execution of work a drain
+    deliberately completed."""
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    sim = tiny_sim(
+        n_workers=3,
+        scheduler="jit",
+        churn=[ChurnEvent(time=0.3, kind="drain", worker=0)],
+    )
+    res = sim.run([job])
+    assert len(res.records) == 1
+    check_invariants(res, [job], sim.churn)
+    assert res.outputs_recovered == 0  # nothing thrown away
+
+
+def test_capacity_bounces_counted_on_heterogeneous_fleet():
+    res, jobs, schedule = run_churn_sim(
+        scheduler="hash", fleet_name="mixed", duration=60.0
+    )
+    check_invariants(res, jobs, schedule)
+    assert res.bounces > 0  # 8 GB edge GPU rejects the big models
+
+
+# --------------------------------------------------------------------------
+# Membership-aware planning (unit level)
+# --------------------------------------------------------------------------
+@pytest.fixture
+def profiles():
+    cluster = ClusterSpec(n_workers=3)
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def rows(n=3):
+    return [SSTRow(free_cache_bytes=16 * GB) for _ in range(n)]
+
+
+def test_navigator_plan_excludes_dead_workers(profiles):
+    sched = NavigatorScheduler(profiles)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    sst = rows(3)
+    sst[1].liveness = DEAD
+    adfg = sched.plan(job, 0.0, 0, sst)
+    assert all(w != 1 for _, w in adfg.items())
+
+
+def test_navigator_plan_penalizes_suspect_workers(profiles):
+    """A SUSPECT worker with an attractive cache loses to a clean ALIVE
+    worker once the penalty exceeds the refetch saving."""
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    mids = [
+        t.model_id for t in job.dfg.tasks.values() if t.model_id is not None
+    ]
+    sst = rows(3)
+    sst[1].cache_bitmap = bitmaps.pack(mids)  # cache-attractive...
+    sst[1].liveness = SUSPECT                 # ...but lease is shaky
+    eager = NavigatorScheduler(
+        profiles, NavigatorConfig(suspect_penalty_s=0.0)
+    )
+    wary = NavigatorScheduler(
+        profiles, NavigatorConfig(suspect_penalty_s=1e6)
+    )
+    plan_eager = eager.plan(job, 0.0, 0, sst)
+    plan_wary = wary.plan(job, 0.0, 0, sst)
+    assert any(w == 1 for _, w in plan_eager.items())
+    assert all(w != 1 for _, w in plan_wary.items())
+
+
+def test_adjust_never_moves_to_dead_worker(profiles):
+    from repro.core import ADFG
+
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    tid = next(iter(job.dfg.tasks))
+    succs = job.dfg.succs[tid]
+    target = succs[0] if succs else tid
+    sst = rows(3)
+    sst[0].ft_estimate_s = 100.0  # planned worker is swamped...
+    sst[1].liveness = DEAD        # ...the idle-looking alternative is dead
+    sst[1].ft_estimate_s = 0.0
+    adfg = ADFG(job)
+    for t in job.dfg.tasks:
+        adfg[t] = 0
+        adfg.planned_ft[t] = 0.0
+    sched = NavigatorScheduler(profiles)
+    new_w = sched.adjust(job, adfg, target, 50.0, sst, 2, 1e5)
+    assert new_w != 1
+
+
+def test_jax_planner_matches_python_under_liveness(profiles):
+    jax_planner = pytest.importorskip("repro.core.jax_planner")
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    cfg = NavigatorConfig(eviction_penalty_s=1.5, suspect_penalty_s=3.0)
+    sst = rows(3)
+    sst[1].liveness = DEAD
+    sst[2].liveness = SUSPECT
+    py = NavigatorScheduler(profiles, cfg).plan(job, 0.0, 0, sst)
+    vec = jax_planner.JaxNavigatorPlanner(profiles, cfg).plan(
+        job, 0.0, 0, sst
+    )
+    for t in job.dfg.tasks:
+        assert py[t] == vec[t]
+        assert py.planned_ft[t] == pytest.approx(
+            vec.planned_ft[t], rel=1e-5
+        )
+    assert all(w != 1 for _, w in vec.items())
+
+
+def test_jit_skips_dead_workers(profiles):
+    from repro.core import JITScheduler
+
+    sched = JITScheduler(profiles)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    tid = next(iter(job.dfg.tasks))
+    sst = rows(3)
+    sst[0].liveness = DEAD
+    sst[1].liveness = DEAD
+    w = sched.select_worker_at_ready(
+        job, tid, 0.0, sst, {"": 2}, {"": 1e5}, self_worker=2
+    )
+    assert w == 2
+
+
+# --------------------------------------------------------------------------
+# SharedStateTable membership lane
+# --------------------------------------------------------------------------
+def test_shared_state_table_lease_classification():
+    sst = SharedStateTable(3, lease=LeaseConfig(
+        suspect_after_s=1.0, dead_after_s=3.0
+    ))
+    for w in range(3):
+        sst.heartbeat(w, 0.0)
+        sst.push(w, 0.0)
+    sst.heartbeat(0, 10.0)
+    sst.push(0, 10.0)
+    view = sst.view(0, now=10.0)
+    assert view[0].liveness == ALIVE  # self, fresh
+    assert view[1].liveness == DEAD   # heartbeat 10 s stale
+    sst.heartbeat(1, 9.5)
+    sst.push(1, 9.5)
+    assert sst.view(0, now=10.0)[1].liveness == ALIVE
+    assert sst.view(0, now=11.5)[1].liveness == SUSPECT
+
+
+def test_shared_state_table_join_bumps_epoch():
+    sst = SharedStateTable(2, lease=LeaseConfig())
+    sst.update_load(1, 5.0, now=1.0)
+    sst.push(1, 1.0)
+    old_epoch = sst.view(0)[1].epoch
+    sst.join(1, now=2.0)
+    assert sst.local[1].epoch == old_epoch + 1
+    assert sst.local[1].ft_estimate_s == 0.0  # fresh row
+
+
+# --------------------------------------------------------------------------
+# Memory-manager churn paths (unit level)
+# --------------------------------------------------------------------------
+def make_mem(capacity=16 * GB):
+    return GpuMemoryManager(capacity, MODELS, AcceleratorLink())
+
+
+def test_abort_fetch_releases_pin_and_accounts_partial_bytes():
+    mem = make_mem()
+    res = mem.ensure(0)
+    assert res is not None
+    mem.pin(0)  # the engine's fetch-pin
+    size = mem.cached_size(0)
+    fetched_before = mem.stats.bytes_fetched
+    mem.abort_fetch(0, fraction_done=0.5)
+    assert not mem.has(0)
+    assert 0 not in mem._pinned
+    assert mem.stats.churn_wasted_bytes == pytest.approx(0.5 * size)
+    # Un-transferred remainder never hit the pipe.
+    assert mem.stats.bytes_fetched == pytest.approx(
+        fetched_before - 0.5 * size
+    )
+
+
+def test_reset_counts_unused_prefetch_as_wasted():
+    mem = make_mem()
+    assert mem.begin_prefetch(0) is not None
+    mem.complete_prefetch(0)
+    assert mem.ensure(1) is not None  # demanded, not speculative
+    wasted_before = mem.stats.prefetch_wasted
+    lost = mem.reset(graceful=False)
+    assert lost > 0
+    assert mem.stats.prefetch_wasted == wasted_before + 1
+    assert mem.stats.churn_wasted_bytes >= mem.cached_size(0)
+    assert mem.resident_models() == [] and mem.free_bytes == mem.capacity_bytes
+    assert mem.stats.churn_resets == 1
+
+
+def test_graceful_reset_charges_only_unused_speculation():
+    mem = make_mem()
+    assert mem.ensure(1) is not None
+    assert mem.begin_prefetch(0) is not None
+    mem.complete_prefetch(0)
+    mem.reset(graceful=True)
+    # Only the unused speculative model is churn waste, not model 1.
+    assert mem.stats.churn_wasted_bytes == pytest.approx(mem.cached_size(0))
+
+
+# --------------------------------------------------------------------------
+# Prefetch-plane churn paths (unit level)
+# --------------------------------------------------------------------------
+def test_drop_worker_orphans_queue_and_inflight():
+    plane = PrefetchPlane(2)
+    intents = [
+        PrefetchIntent(0, "a", 0, 0, issued_at=0.0, expected_start_s=2.0),
+        PrefetchIntent(0, "b", 1, 0, issued_at=0.0, expected_start_s=1.0),
+    ]
+    plane.admit(0, intents, 0.0)
+    chosen, _ = plane.next_intent(0, 0.0, lambda mid: False)
+    assert chosen is not None  # "b" (earliest) went in-flight
+    orphans = plane.drop_worker(0)
+    assert {i.task_id for i in orphans} == {"a", "b"}
+    assert plane.queue_depth(0) == 0 and plane.inflight[0] is None
+    assert plane.stats.intents_orphaned == 2
+
+
+def test_rehome_restarts_ttl_and_counts():
+    plane = PrefetchPlane(2)
+    orphan = PrefetchIntent(0, "a", 0, 0, issued_at=0.0, expected_start_s=1.0)
+    heir = plane.rehome(orphan, worker=1, now=50.0)
+    assert heir.worker == 1 and heir.issued_at == 50.0
+    assert heir.expected_start_s == 50.0  # never in the past
+    assert plane.stats.intents_rehomed == 1
+
+
+# --------------------------------------------------------------------------
+# Schedule generator
+# --------------------------------------------------------------------------
+def test_churn_schedule_deterministic_and_valid():
+    a = churn_schedule(5, 300.0, mtbf_s=120.0, seed=42)
+    b = churn_schedule(5, 300.0, mtbf_s=120.0, seed=42)
+    assert a == b
+    assert a  # MTBF 120 s over 5 workers × 300 s produces events
+    validate_schedule(a, 5)
+
+
+def test_validate_schedule_rejects_bad_sequences():
+    with pytest.raises(ValueError):
+        validate_schedule(
+            [ChurnEvent(1.0, "crash", 7)], n_workers=5
+        )
+    with pytest.raises(ValueError):
+        validate_schedule(
+            [
+                ChurnEvent(1.0, "crash", 0),
+                ChurnEvent(2.0, "crash", 0),  # already down
+            ],
+            n_workers=5,
+        )
+    with pytest.raises(ValueError):
+        validate_schedule(
+            [ChurnEvent(1.0, "join", 0)], n_workers=5  # join of live worker
+        )
+    with pytest.raises(ValueError):
+        ChurnEvent(1.0, "explode", 0)

@@ -1,17 +1,24 @@
 """Decentralized SST gossip plane (§5.2): per-worker views, diff-based
-exchange, staleness bounds, and staleness-aware scheduling behaviour."""
+exchange, staleness bounds, staleness-aware scheduling behaviour, and the
+membership (heartbeat/lease) lane."""
 
 import pytest
 
+from hypothesis_compat import given, settings, st
+
 from repro.core import (
+    ALIVE,
     ClusterSpec,
+    DEAD,
     GB,
     GossipConfig,
     GossipPlane,
     Job,
+    LeaseConfig,
     NavigatorConfig,
     NavigatorScheduler,
     ProfileRepository,
+    SUSPECT,
     build_fleet,
     fleet,
 )
@@ -200,6 +207,225 @@ def test_mark_synced_empties_outbound_log():
     assert plane._log[0] == []
     assert plane.exchange(0, 2.0) == []  # nothing outstanding, no full sync
     assert plane.full_syncs == 0
+
+
+# -- membership lane (heartbeat/lease) ---------------------------------------
+def lease_plane(n, lease=None, **cfg):
+    cfg.setdefault("fanout", n - 1)
+    plane = GossipPlane(
+        n, GossipConfig(**cfg), lease=lease or LeaseConfig()
+    )
+    for w in range(n):
+        plane.heartbeat(w, 0.0)
+        plane.push(w, 0.0)
+    return plane
+
+
+def test_lease_state_machine_from_stale_view():
+    """ALIVE → SUSPECT → DEAD purely from replicated heartbeat age: no
+    oracle, the reader's own replica decides."""
+    lease = LeaseConfig(suspect_after_s=1.0, dead_after_s=3.0)
+    plane = lease_plane(3, lease=lease)
+    run_rounds(plane, 0.1)
+    # Worker 2 stops heartbeating (crashed); 0 and 1 keep going.
+    for r in range(1, 50):
+        t = 0.1 + 0.1 * r
+        for w in (0, 1):
+            plane.heartbeat(w, t)
+        for w in (0, 1):
+            for q, updates, _ in plane.exchange(w, t):
+                if q != 2:  # a corpse receives nothing
+                    plane.deliver(q, updates, t)
+    t_end = 0.1 + 0.1 * 49
+    assert plane.liveness(0, 1, t_end) == ALIVE
+    assert plane.liveness(0, 2, t_end) == DEAD
+    # The full trajectory: shortly after death it was merely SUSPECT.
+    assert plane.liveness(0, 2, 0.1 + lease.suspect_after_s + 0.2) == SUSPECT
+    # view() annotation matches the classification.
+    rows = plane.view(0, now=t_end)
+    assert rows[1].liveness == ALIVE and rows[2].liveness == DEAD
+
+
+def test_two_readers_can_disagree_about_liveness():
+    """Decentralized verdicts: a reader whose replica missed recent
+    heartbeats declares DEAD while a better-connected one says ALIVE."""
+    lease = LeaseConfig(suspect_after_s=1.0, dead_after_s=2.0)
+    plane = lease_plane(3, lease=lease, fanout=1)
+    # Worker 0 heartbeats; only worker 1 hears about it.
+    for r in range(1, 30):
+        t = 0.1 * r
+        plane.heartbeat(0, t)
+        msgs = plane.exchange(0, t)
+        for q, updates, _ in msgs:
+            if q == 1:
+                plane.deliver(1, updates, t)
+    t = 3.0
+    assert plane.liveness(1, 0, t) == ALIVE
+    assert plane.liveness(2, 0, t) == DEAD
+
+
+def test_draining_reads_dead_immediately():
+    plane = lease_plane(3)
+    plane.set_draining(1, True, now=0.5)
+    run_rounds(plane, 0.6)
+    assert plane.liveness(0, 1, 0.7) == DEAD
+    assert plane.view(0, now=0.7)[1].liveness == DEAD
+    # The drainer itself reports its own row as DEAD (no new work).
+    assert plane.liveness(1, 1, 0.7) == DEAD
+
+
+def test_staleness_excludes_dead_rows():
+    """Bugfix: a departed worker's frozen row must not inflate reported
+    staleness forever once the reader has marked it DEAD."""
+    lease = LeaseConfig(suspect_after_s=1.0, dead_after_s=3.0)
+    plane = lease_plane(3, lease=lease)
+    run_rounds(plane, 0.1)
+    # Worker 2 dies at t=0.1; 0 and 1 keep exchanging for 100 s.
+    for r in range(1, 101):
+        t = 0.1 + r
+        for w in (0, 1):
+            plane.heartbeat(w, t)
+        for w in (0, 1):
+            for q, updates, _ in plane.exchange(w, t):
+                if q != 2:
+                    plane.deliver(q, updates, t)
+    t_end = 100.1
+    # Without the fix this would be ~100 s (worker 2's frozen row).
+    assert plane.staleness(t_end, reader_worker=0) < 5.0
+    # A lease-less plane keeps the old (inflating) semantics.
+    bare = broadcast_plane(3)
+    bare.update_load(2, 1.0, now=0.0)
+    run_rounds(bare, 0.1)
+    assert bare.staleness(100.0) > 99.0
+
+
+def test_rejoin_bumps_epoch_and_blocks_resurrection():
+    """A pre-crash echo of the old incarnation (higher version, lower
+    epoch) must never overwrite the rejoined worker's fresh row."""
+    plane = lease_plane(3)
+    for i in range(5):
+        plane.update_load(2, float(i), now=0.1 * i)
+    run_rounds(plane, 1.0)
+    stale_row = plane.view(0)[2]          # old incarnation, version >= 5
+    old_version = plane.versions[0][2]
+    assert old_version >= 5
+    plane.join(2, now=10.0)               # crash + rejoin: epoch + 1
+    assert plane.local[2].epoch == stale_row.epoch + 1
+    run_rounds(plane, 10.1)               # new incarnation disseminates
+    assert plane.views[0][2].epoch == plane.local[2].epoch
+    # Replay the pre-crash echo: must be rejected by (epoch, version).
+    plane.deliver(0, [(2, old_version, stale_row)], 10.2)
+    assert plane.views[0][2].epoch == plane.local[2].epoch
+    assert plane.views[0][2].ft_estimate_s == plane.local[2].ft_estimate_s
+
+
+def test_join_rebuilds_view_via_full_sync():
+    """A joiner's empty replica is repaired by the anti-entropy full-sync
+    path on the first contact from each peer."""
+    plane = lease_plane(4)
+    for w in range(4):
+        plane.update_load(w, 10.0 + w, now=0.5)
+    run_rounds(plane, 1.0)
+    plane.join(3, now=5.0)
+    assert plane.view(3)[0].ft_estimate_s == 0.0  # replica wiped
+    before = plane.full_syncs
+    run_rounds(plane, 5.2)
+    assert plane.full_syncs > before
+    for owner in (0, 1, 2):
+        assert plane.view(3)[owner].ft_estimate_s == 10.0 + owner
+
+
+# -- property-based: convergence under arbitrary churn ------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    ops=st.lists(
+        st.tuples(
+            st.integers(0, 4),
+            st.sampled_from(["crash", "join", "update"]),
+        ),
+        max_size=25,
+    ),
+)
+def test_views_converge_after_arbitrary_churn_then_quiet(seed, ops):
+    """After any crash/join/update sequence followed by a quiet period of
+    gossip among the live workers, every live reader agrees with every
+    live owner's ground truth — same values, same (epoch, version) — and
+    no old-incarnation row survives anywhere among the live."""
+    n = 5
+    plane = GossipPlane(
+        n, GossipConfig(fanout=2, seed=seed), lease=LeaseConfig()
+    )
+    up = set(range(n))
+    for w in range(n):
+        plane.heartbeat(w, 0.0)
+        plane.push(w, 0.0)
+    t = 0.0
+    for step, (w, op) in enumerate(ops):
+        t = 0.1 * (step + 1)
+        if op == "crash":
+            if len(up) > 1:
+                up.discard(w)
+        elif op == "join":
+            if w not in up:
+                plane.join(w, t)
+                up.add(w)
+        else:
+            if w in up:
+                plane.update_load(w, float(step), now=t)
+        # One gossip round among the live (corpses receive nothing).
+        for src in sorted(up):
+            for q, updates, _ in plane.exchange(src, t):
+                if q in up:
+                    plane.deliver(q, updates, t)
+    # Quiet period: no more churn/updates, epidemic spread finishes.
+    for r in range(20):
+        t += 0.1
+        for src in sorted(up):
+            for q, updates, _ in plane.exchange(src, t):
+                if q in up:
+                    plane.deliver(q, updates, t)
+    for reader in up:
+        for owner in up:
+            truth = plane.local[owner]
+            held = plane.view(reader)[owner]
+            assert held.epoch == truth.epoch, (reader, owner)
+            assert held.ft_estimate_s == truth.ft_estimate_s, (reader, owner)
+            if owner != reader:
+                assert plane.versions[reader][owner] == truth.version
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    n_rejoin=st.integers(1, 4),
+)
+def test_no_dead_row_resurrection_property(seed, n_rejoin):
+    """Replaying any captured pre-crash row after any number of rejoins
+    never rolls a replica back to an older incarnation."""
+    n = 4
+    plane = GossipPlane(
+        n, GossipConfig(fanout=n - 1, seed=seed), lease=LeaseConfig()
+    )
+    for w in range(n):
+        plane.heartbeat(w, 0.0)
+        plane.push(w, 0.0)
+    captured = []
+    t = 0.0
+    for k in range(n_rejoin):
+        t += 1.0
+        plane.update_load(3, 100.0 + k, now=t)
+        run_rounds(plane, t)
+        captured.append((plane.versions[0][3], plane.view(0)[3]))
+        t += 1.0
+        plane.join(3, now=t)
+        run_rounds(plane, t)
+    final_epoch = plane.local[3].epoch
+    assert final_epoch == n_rejoin
+    for version, row in captured:
+        for reader in range(3):
+            plane.deliver(reader, [(3, version, row)], t + 1.0)
+            assert plane.views[reader][3].epoch == final_epoch
 
 
 # -- staleness-aware scheduling ----------------------------------------------

@@ -8,8 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.launch.mesh import make_debug_mesh
 from repro.models import ModelConfig, init_params, abstract_params
