@@ -20,6 +20,13 @@ crash.  On the *mixed* fleet the sign can flip: Navigator concentrates
 work (and cache) on the fast A10, so losing that one worker costs it
 more than hash's spread placement — see EXPERIMENTS.md §Churn.
 
+A second sweep replaces crashes with seeded network *partitions* on the
+2-rack fleets (cut the spine for ``outage_s``, heal, repeat): workers
+stay up, but cross-cut inputs dead-letter and cross-cut leases expire.
+Reported per cell: P99 JCT vs the uncut baseline, re-execution overhead,
+and cross-rack transfer counts (rack-aware Navigator rides cuts out
+locally; hash keeps shipping into them).
+
 ``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
 """
 
@@ -39,6 +46,7 @@ from repro.sim import (
     Simulation,
     churn_schedule,
     fleet_scaled_rate,
+    partition_schedule,
     poisson_workload,
 )
 from repro.workflows import MODELS, paper_dfgs
@@ -53,6 +61,12 @@ FLEETS = ["uniform"] if SMOKE else ["uniform", "mixed"]
 POLICIES = ["navigator", "hash"] if SMOKE else ["navigator", "hash", "heft"]
 MTBFS = [120.0] if SMOKE else [240.0, 120.0, 60.0]
 REPAIR_S = 20.0
+
+# Partition cells: seeded spine cuts (workers stay up, the network
+# splits) on the rack fleets, vs the same policy's uncut baseline.
+PARTITION_FLEETS = ["rack2"] if SMOKE else ["rack2", "rack2_mixed"]
+PARTITION_MTBPS = [60.0] if SMOKE else [120.0, 60.0]
+PARTITION_OUTAGE_S = 6.0  # past dead_after_s: leases expire across the cut
 
 
 def _one(cluster, profiles, policy, jobs, schedule):
@@ -141,6 +155,70 @@ def run() -> List[Tuple[str, float, float]]:
                     (f"churn/{key}/reexec_overhead", 0.0,
                      stats["reexec_overhead"])
                 )
+    # -- partition cells ----------------------------------------------------
+    for fleet_name in PARTITION_FLEETS:
+        cluster = fleet(fleet_name)
+        profiles = ProfileRepository(cluster, MODELS)
+        for d in dfgs:
+            profiles.register(d)
+        rate = fleet_scaled_rate(cluster, BASE_RATE)
+        workloads = {
+            seed: poisson_workload(dfgs, rate, DURATION_S, seed=seed)
+            for seed in SEEDS
+        }
+        for policy in POLICIES:
+            static_p99 = {
+                seed: _one(
+                    cluster, profiles, policy, workloads[seed], []
+                ).percentile_latency(0.99)
+                for seed in SEEDS
+            }
+            for mtbp in PARTITION_MTBPS:
+                deltas, p99s, overheads, xracks = [], [], [], []
+                for seed in SEEDS:
+                    for cseed in CHURN_SEEDS:
+                        schedule = partition_schedule(
+                            cluster.n_workers,
+                            DURATION_S,
+                            mtbp_s=mtbp,
+                            outage_s=PARTITION_OUTAGE_S,
+                            seed=cseed,
+                        )
+                        res = _one(
+                            cluster, profiles, policy, workloads[seed],
+                            schedule,
+                        )
+                        p99 = res.percentile_latency(0.99)
+                        p99s.append(p99)
+                        deltas.append(p99 - static_p99[seed])
+                        n_tasks = sum(
+                            len(j.dfg.tasks) for j in workloads[seed]
+                        )
+                        overheads.append(
+                            (res.tasks_rescued + res.outputs_recovered)
+                            / max(1, n_tasks)
+                        )
+                        xracks.append(res.net_cross_transfers)
+                n = len(deltas)
+                key = f"partition/{fleet_name}/mtbp{int(mtbp)}/{policy}"
+                stats = {
+                    "p99_jct_partition_s": sum(p99s) / n,
+                    "p99_jct_static_s": sum(static_p99.values())
+                    / len(static_p99),
+                    "p99_jct_degradation_s": sum(deltas) / n,
+                    "reexec_overhead": sum(overheads) / n,
+                    "cross_rack_transfers": sum(xracks) / n,
+                }
+                out[key] = stats
+                for metric in (
+                    "p99_jct_partition_s",
+                    "p99_jct_degradation_s",
+                    "reexec_overhead",
+                ):
+                    rows.append(
+                        (f"churn/{key}/{metric}", 0.0, stats[metric])
+                    )
+
     save_json("churn", out)
     return rows
 

@@ -30,7 +30,10 @@ from repro.core import GossipConfig, NavigatorConfig, fleet
 # Gossip sweep axes.
 PERIODS = [0.05, 0.2, 1.0, 4.0]        # seconds between gossip rounds
 RATES = [1.0, 2.0]                     # offered load (req/s at speed-1.0 fleet)
-FLEET_NAMES = ["uniform", "mixed"]     # worker heterogeneity presets
+# Worker heterogeneity presets plus the 2-rack oversubscribed topology
+# (staleness and the spine premium interact: a stale view ships across
+# racks it would have avoided with fresh state).
+FLEET_NAMES = ["uniform", "mixed", "rack2"]
 # (label, scheduler, navigator_config): the +margin variant turns on the
 # staleness-aware Alg. 2 hysteresis so the sweep measures whether it
 # helps where it is meant to — at long gossip periods.

@@ -1,0 +1,98 @@
+"""Topology sweep: flat fleet vs oversubscribed racks, per policy.
+
+The same seeded workloads run on an 8-worker flat fleet (all-pairs
+100 Gbps table) and on the 2-rack presets whose spine uplinks are 4x
+oversubscribed.  Reported per cell:
+
+* ``p99_jct_s`` / ``mean_jct_s``  — JCT under the topology
+* ``topology_tax_s``              — mean JCT increase over the same
+  policy on the flat fleet (what the oversubscribed spine costs)
+* ``cross_rack_frac``             — bulk transfers that crossed the
+  spine (the rack-locality signal: path-aware Navigator keeps this low,
+  hash placement does not)
+* ``contended_frac``              — cross-rack transfers admitted while
+  another flow held an uplink
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+from benchmarks.common import save_json
+from repro.core import ProfileRepository, build_fleet, fleet
+from repro.core.profiles import RACK_FLEETS
+from repro.sim import Simulation, fleet_scaled_rate, poisson_workload
+from repro.workflows import MODELS, paper_dfgs
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+DURATION_S = 60.0 if SMOKE else 240.0
+BASE_RATE = 1.6
+SEEDS = (3,) if SMOKE else (3, 7, 11)
+FLEETS = ["rack2"] if SMOKE else ["rack2", "rack2_mixed"]
+POLICIES = ["navigator", "hash"] if SMOKE else ["navigator", "hash", "heft"]
+
+
+def _one(cluster, policy, jobs):
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        profiles.register(d)
+    sim = Simulation(cluster, profiles, MODELS, scheduler=policy, seed=1)
+    return sim.run(jobs)
+
+
+def run() -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    out = {}
+    dfgs = paper_dfgs()
+    for policy in POLICIES:
+        for fleet_name in FLEETS:
+            cluster = fleet(fleet_name)
+            # Flat reference: the same workers with no racks — every pair
+            # on the full all-pairs table.  Same workload, so the tax is
+            # purely the oversubscribed spine.
+            flat = build_fleet(RACK_FLEETS[fleet_name][0])
+            rate = fleet_scaled_rate(flat, BASE_RATE)
+            workloads = {
+                seed: poisson_workload(dfgs, rate, DURATION_S, seed=seed)
+                for seed in SEEDS
+            }
+            flat_mean = sum(
+                _one(flat, policy, workloads[s]).mean_latency
+                for s in SEEDS
+            ) / len(SEEDS)
+            p99s, means, xfrac, cfrac = [], [], [], []
+            for seed in SEEDS:
+                res = _one(cluster, policy, workloads[seed])
+                p99s.append(res.percentile_latency(0.99))
+                means.append(res.mean_latency)
+                bulk = res.net_local_transfers + res.net_cross_transfers
+                xfrac.append(res.net_cross_transfers / max(1, bulk))
+                cfrac.append(
+                    res.net_contended_transfers
+                    / max(1, res.net_cross_transfers)
+                )
+            n = len(SEEDS)
+            key = f"{fleet_name}/{policy}"
+            stats = {
+                "p99_jct_s": sum(p99s) / n,
+                "mean_jct_s": sum(means) / n,
+                "topology_tax_s": sum(means) / n - flat_mean,
+                "cross_rack_frac": sum(xfrac) / n,
+                "contended_frac": sum(cfrac) / n,
+            }
+            out[key] = stats
+            for metric in ("p99_jct_s", "mean_jct_s", "cross_rack_frac"):
+                rows.append(
+                    (f"topology/{key}/{metric}", 0.0, stats[metric])
+                )
+    save_json("topology", out)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")

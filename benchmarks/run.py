@@ -23,6 +23,7 @@ SUITES = [
     "trace",           # Fig. 9
     "prefetch",        # predictive prefetch plane sweep
     "churn",           # worker churn / fault-tolerance sweep
+    "topology",        # rack topology / oversubscription sweep
     "scalability",     # Fig. 10
     "kernels",         # Pallas-kernel ref-path micro-benches
     "sst_microbench",  # gossip O(dirty-rows) + planner placement cost

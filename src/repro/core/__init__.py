@@ -10,7 +10,10 @@ from repro.core.memory import CacheStats, GpuMemoryManager
 from repro.core.netmodel import (
     AcceleratorLink,
     ClusterSpec,
+    LinkSpec,
     NetworkModel,
+    NetworkState,
+    Topology,
     TPU_V5E_CLUSTER,
 )
 from repro.core.prefetch import (
@@ -22,9 +25,11 @@ from repro.core.prefetch import (
 from repro.core.profiles import (
     FLEETS,
     ProfileRepository,
+    RACK_FLEETS,
     WorkerProfile,
     build_fleet,
     fleet,
+    rack_topology,
 )
 from repro.core.scheduler import (
     HEFTScheduler,
@@ -65,16 +70,19 @@ __all__ = [
     "JITScheduler",
     "Job",
     "LeaseConfig",
+    "LinkSpec",
     "MB",
     "MLModel",
     "NavigatorConfig",
     "NavigatorScheduler",
     "NetworkModel",
+    "NetworkState",
     "PrefetchConfig",
     "PrefetchIntent",
     "PrefetchPlane",
     "PrefetchStats",
     "ProfileRepository",
+    "RACK_FLEETS",
     "SCHEDULERS",
     "SSTRow",
     "SUSPECT",
@@ -82,8 +90,10 @@ __all__ = [
     "SharedStateTable",
     "TPU_V5E_CLUSTER",
     "TaskSpec",
+    "Topology",
     "WorkerProfile",
     "build_fleet",
     "fleet",
     "make_scheduler",
+    "rack_topology",
 ]

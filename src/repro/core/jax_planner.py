@@ -40,6 +40,8 @@ class StaticPlanInputs:
     full_sizes: np.ndarray                 # (T,) decompressed model bytes
     td_outputs: np.ndarray                 # (T,) TD_output(t)
     td_inputs: np.ndarray                  # (T,) TD_input(t) (entry tasks)
+    output_bytes: np.ndarray               # (T,) raw output sizes (topology)
+    input_bytes: np.ndarray                # (T,) raw input sizes (topology)
     preds: Tuple[Tuple[int, ...], ...]     # indices into `order`
     is_entry: np.ndarray                   # (T,) bool
 
@@ -74,6 +76,12 @@ def build_static_inputs(
         td_inputs=np.array(
             [profiles.td_input(t) for t in t_arr], np.float32
         ),
+        output_bytes=np.array(
+            [t.output_bytes for t in t_arr], np.float32
+        ),
+        input_bytes=np.array(
+            [t.input_bytes for t in t_arr], np.float32
+        ),
         preds=preds,
         is_entry=np.array([not p for p in preds], bool),
     )
@@ -98,6 +106,12 @@ def plan_vectorized(
     gpu_capacity: Optional[jax.Array] = None,  # (W,) bytes; None = unbounded
     liveness_cost: Optional[jax.Array] = None,  # (W,) s; membership lane:
     # 0 = ALIVE, suspect_penalty_s = SUSPECT, +inf = DEAD/draining
+    xfer_inv_bw: Optional[jax.Array] = None,   # (W, W) path 1/bandwidth;
+    # None = flat all-pairs table (static.td_inputs / td_outputs)
+    xfer_delta: Optional[jax.Array] = None,    # (W, W) path latency
+    fetch_model: Optional[jax.Array] = None,   # (W,) in-flight fetch model
+    # id per worker (−1 = none) — expected-completion intent lane
+    fetch_eta: Optional[jax.Array] = None,     # (W,) absolute fetch ETA
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (assignment (T,) int32, planned_ft (T,) float32)."""
     t_count = len(static.order)
@@ -121,6 +135,36 @@ def plan_vectorized(
     for ti in range(t_count):
         r_w = static.runtimes[ti] / speed                     # R(t, w)
         mid = int(static.model_ids[ti])
+        # AT_allInputs (Eq. 3-4).
+        if static.is_entry[ti]:
+            if xfer_inv_bw is None:
+                ship = static.td_inputs[ti]
+            else:
+                # Path cost of the client input: origin → each worker.
+                ship = (
+                    static.input_bytes[ti] * xfer_inv_bw[origin_worker]
+                    + xfer_delta[origin_worker]
+                )
+            at = now + jnp.where(
+                jnp.arange(n_workers) == origin_worker, 0.0, ship
+            )
+        else:
+            at = jnp.zeros((n_workers,), jnp.float32)
+            for pi in static.preds[ti]:
+                ft_p = task_ft[pi]
+                w_p = assign[pi]
+                if xfer_inv_bw is None:
+                    ship = static.td_outputs[pi]
+                else:
+                    ship = (
+                        static.output_bytes[pi] * xfer_inv_bw[w_p]
+                        + xfer_delta[w_p]
+                    )
+                arrival = ft_p + jnp.where(
+                    jnp.arange(n_workers) == w_p, 0.0, ship
+                )
+                at = jnp.maximum(at, arrival)
+        x = jnp.maximum(ft, at)                               # line 8
         hit = jnp.zeros((n_workers,), bool)
         intent_m = jnp.zeros((n_workers,), bool)
         if mid < 0 or not config.use_model_locality:
@@ -150,24 +194,18 @@ def plan_vectorized(
                     static.fetch_times[ti] * (1.0 - config.intent_confidence),
                     miss_cost,
                 )
+                if fetch_model is not None and fetch_eta is not None:
+                    # Expected-completion lane: when the advertised
+                    # *in-flight* fetch is this model, price the true
+                    # remaining overlap past the task's earliest start —
+                    # a nearly-done fetch costs ≈ 0, a just-started one
+                    # ≈ the full fetch (mirrors Scheduler._td_model).
+                    inflight = intent_m & (fetch_model == mid) & (fetch_eta > 0.0)
+                    remaining = jnp.clip(
+                        fetch_eta - x, 0.0, static.fetch_times[ti]
+                    )
+                    miss_cost = jnp.where(inflight, remaining, miss_cost)
             td_model = jnp.where(hit, 0.0, miss_cost)
-        # AT_allInputs (Eq. 3-4).
-        if static.is_entry[ti]:
-            at = now + jnp.where(
-                jnp.arange(n_workers) == origin_worker,
-                0.0,
-                static.td_inputs[ti],
-            )
-        else:
-            at = jnp.zeros((n_workers,), jnp.float32)
-            for pi in static.preds[ti]:
-                ft_p = task_ft[pi]
-                w_p = assign[pi]
-                arrival = ft_p + jnp.where(
-                    jnp.arange(n_workers) == w_p, 0.0, static.td_outputs[pi]
-                )
-                at = jnp.maximum(at, arrival)
-        x = jnp.maximum(ft, at)                               # line 8
         ftw = x + td_model + r_w                              # line 9
         if mid >= 0 and gpu_capacity is not None:
             # Static feasibility: cached + decompressed must fit the GPU
@@ -223,6 +261,14 @@ class JaxNavigatorPlanner:
         self.profiles = profiles
         self.config = config or NavigatorConfig()
         self._static: Dict[str, StaticPlanInputs] = {}
+        # Topology path-cost matrices (uncontended planner view); None on
+        # flat clusters so the kernel keeps the all-pairs-table code path.
+        topo = profiles.cluster.topology
+        self._xfer_inv_bw = self._xfer_delta = None
+        if topo is not None:
+            inv_bw, delta = topo.pair_matrices()
+            self._xfer_inv_bw = jnp.asarray(inv_bw, jnp.float32)
+            self._xfer_delta = jnp.asarray(delta, jnp.float32)
 
     def plan(self, job: Job, now: float, origin_worker: int, sst) -> ADFG:
         dfg = job.dfg
@@ -261,6 +307,14 @@ class JaxNavigatorPlanner:
                 jnp.float32,
             ),
             liveness_cost=jnp.asarray(live),
+            xfer_inv_bw=self._xfer_inv_bw,
+            xfer_delta=self._xfer_delta,
+            fetch_model=jnp.asarray(
+                [r.fetch_model_id for r in sst], jnp.int32
+            ),
+            fetch_eta=jnp.asarray(
+                [r.fetch_eta_s for r in sst], jnp.float32
+            ),
         )
         adfg = ADFG(job)
         for i, tid in enumerate(static.order):

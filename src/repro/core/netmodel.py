@@ -14,14 +14,15 @@ real serving engine (HBM 819 GB/s, ICI ~50 GB/s/link).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import heapq
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.types import GB
 
 
 @dataclasses.dataclass(frozen=True)
 class NetworkModel:
-    """Worker↔worker object transfer cost model."""
+    """Worker↔worker object transfer cost model (flat all-pairs table)."""
 
     bandwidth_bytes_per_s: float = 100e9 / 8.0  # 100 Gbps RDMA
     delta_s: float = 1e-3  # constant latency term (delta_network)
@@ -30,6 +31,182 @@ class NetworkModel:
         if nbytes <= 0:
             return 0.0
         return nbytes / self.bandwidth_bytes_per_s + self.delta_s
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One physical link class: capacity plus a constant per-hop latency."""
+
+    bandwidth_bytes_per_s: float
+    delta_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Two-tier rack topology: workers sit on non-blocking rack-local
+    links; each rack reaches the spine through one shared (and typically
+    oversubscribed) uplink.
+
+    Path model:
+
+    * same worker          — zero cost.
+    * same rack            — ``rack_link`` bandwidth + one hop latency
+                             (the ToR is non-blocking, so rack-local
+                             transfers never contend).
+    * cross rack           — bottleneck of the rack link and *both* rack
+                             uplinks, plus one rack hop and one spine
+                             hop of latency.  Concurrent transfers that
+                             share an uplink divide its capacity
+                             (fair-share contention, see
+                             :class:`NetworkState`).
+    """
+
+    rack_of: Tuple[int, ...]
+    rack_link: LinkSpec = LinkSpec(100e9 / 8.0, 1e-3)
+    uplink: LinkSpec = LinkSpec(100e9 / 8.0 / 4.0, 1e-3)
+
+    def __post_init__(self) -> None:
+        if not self.rack_of:
+            raise ValueError("topology needs at least one worker")
+        racks = set(self.rack_of)
+        if racks != set(range(len(racks))):
+            raise ValueError(
+                f"rack ids must be contiguous from 0, got {sorted(racks)}"
+            )
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.rack_of)
+
+    @property
+    def n_racks(self) -> int:
+        return max(self.rack_of) + 1
+
+    def rack(self, worker: int) -> int:
+        return self.rack_of[worker]
+
+    def path_uplinks(self, src: int, dst: int) -> Tuple[int, ...]:
+        """Rack uplinks a ``src → dst`` transfer crosses (the contended
+        resources); empty for worker- or rack-local paths."""
+        rs, rd = self.rack_of[src], self.rack_of[dst]
+        if rs == rd:
+            return ()
+        return (rs, rd)
+
+    def transfer_time(
+        self,
+        nbytes: float,
+        src: int,
+        dst: int,
+        uplink_shares: Optional[Tuple[float, ...]] = None,
+    ) -> float:
+        """Effective transfer time along the ``src → dst`` path.
+
+        ``uplink_shares`` optionally scales each crossed uplink's
+        capacity (fair-share fraction in ``(0, 1]``); omitted means the
+        uncontended path cost the planners price with.
+        """
+        if nbytes <= 0 or src == dst:
+            return 0.0
+        rs, rd = self.rack_of[src], self.rack_of[dst]
+        if rs == rd:
+            return (
+                nbytes / self.rack_link.bandwidth_bytes_per_s
+                + self.rack_link.delta_s
+            )
+        bw = self.rack_link.bandwidth_bytes_per_s
+        ups = (1.0, 1.0) if uplink_shares is None else uplink_shares
+        for share in ups:
+            bw = min(bw, self.uplink.bandwidth_bytes_per_s * share)
+        return nbytes / bw + self.rack_link.delta_s + self.uplink.delta_s
+
+    def pair_matrices(self) -> Tuple[List[List[float]], List[List[float]]]:
+        """(inverse-bandwidth, latency) matrices over worker pairs for the
+        vectorized planner: ``time(src→dst) = nbytes * inv_bw[src][dst]
+        + delta[src][dst]`` (uncontended; diagonal is zero)."""
+        n = self.n_workers
+        inv_bw = [[0.0] * n for _ in range(n)]
+        delta = [[0.0] * n for _ in range(n)]
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                if self.rack_of[s] == self.rack_of[d]:
+                    inv_bw[s][d] = 1.0 / self.rack_link.bandwidth_bytes_per_s
+                    delta[s][d] = self.rack_link.delta_s
+                else:
+                    bw = min(
+                        self.rack_link.bandwidth_bytes_per_s,
+                        self.uplink.bandwidth_bytes_per_s,
+                    )
+                    inv_bw[s][d] = 1.0 / bw
+                    delta[s][d] = self.rack_link.delta_s + self.uplink.delta_s
+        return inv_bw, delta
+
+    def mean_path_factors(self) -> Tuple[float, float]:
+        """Mean (inverse bandwidth, latency) over distinct worker pairs —
+        the topology analogue of the flat table for static ranks (Eq. 1),
+        which price a representative transfer before placement is known."""
+        inv_bw, delta = self.pair_matrices()
+        n = self.n_workers
+        if n < 2:
+            return 1.0 / self.rack_link.bandwidth_bytes_per_s, \
+                self.rack_link.delta_s
+        pairs = [(s, d) for s in range(n) for d in range(n) if s != d]
+        return (
+            sum(inv_bw[s][d] for s, d in pairs) / len(pairs),
+            sum(delta[s][d] for s, d in pairs) / len(pairs),
+        )
+
+
+class NetworkState:
+    """Mutable fair-share contention tracker over a :class:`Topology`.
+
+    Each rack uplink carries a lazily-expired heap of in-flight transfer
+    end times.  A new bulk transfer sees each crossed uplink's capacity
+    divided by ``active flows + 1`` (itself); in-flight transfers are
+    never re-timed, so admitting a new flow can only slow the *new*
+    transfer — contention is monotone by construction, and the whole
+    tracker is deterministic under a fixed event order.
+    """
+
+    def __init__(self, topology: Topology) -> None:
+        self.topology = topology
+        self._flows: List[List[float]] = [[] for _ in range(topology.n_racks)]
+        self.bulk_transfers = 0
+        self.contended_transfers = 0
+
+    def active_flows(self, rack: int, now: float) -> int:
+        heap = self._flows[rack]
+        while heap and heap[0] <= now:
+            heapq.heappop(heap)
+        return len(heap)
+
+    def transfer_time(self, nbytes: float, src: int, dst: int,
+                      now: float) -> float:
+        """Contention-aware path time if a transfer started at ``now``
+        (does not register the flow)."""
+        uplinks = self.topology.path_uplinks(src, dst)
+        if not uplinks:
+            return self.topology.transfer_time(nbytes, src, dst)
+        shares = tuple(
+            1.0 / (self.active_flows(r, now) + 1) for r in uplinks
+        )
+        return self.topology.transfer_time(nbytes, src, dst, shares)
+
+    def start_transfer(self, nbytes: float, src: int, dst: int,
+                       now: float) -> float:
+        """Register a bulk transfer starting at ``now`` on every uplink
+        along its path; returns its (contended) duration."""
+        dur = self.transfer_time(nbytes, src, dst, now)
+        uplinks = self.topology.path_uplinks(src, dst)
+        if uplinks and nbytes > 0:
+            self.bulk_transfers += 1
+            if any(self.active_flows(r, now) for r in uplinks):
+                self.contended_transfers += 1
+            for r in uplinks:
+                heapq.heappush(self._flows[r], now + dur)
+        return dur
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +256,19 @@ class ClusterSpec:
     # Energy proxy (Table 1): active vs idle GPU power draw.
     gpu_power_active_w: float = 70.0  # T4 TDP
     gpu_power_idle_w: float = 10.0
+    # Optional rack topology.  ``None`` (the default) preserves the flat
+    # all-pairs table exactly: every path cost delegates to ``network``.
+    topology: Optional[Topology] = None
+
+    def __post_init__(self) -> None:
+        if (
+            self.topology is not None
+            and self.topology.n_workers != self.n_workers
+        ):
+            raise ValueError(
+                f"topology covers {self.topology.n_workers} workers, "
+                f"cluster has {self.n_workers}"
+            )
 
     def speed(self, worker: int) -> float:
         if self.worker_speed is None:
@@ -104,6 +294,14 @@ class ClusterSpec:
 
     def workers(self) -> range:
         return range(self.n_workers)
+
+    def path_transfer_time(self, nbytes: float, src: int, dst: int) -> float:
+        """Uncontended ``src → dst`` transfer time: the flat table when no
+        topology is configured (bit-exact with the pre-topology model),
+        the path cost otherwise."""
+        if self.topology is None:
+            return self.network.transfer_time(nbytes)
+        return self.topology.transfer_time(nbytes, src, dst)
 
 
 TPU_V5E_CLUSTER = ClusterSpec(

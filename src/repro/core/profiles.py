@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.netmodel import ClusterSpec
+from repro.core.netmodel import ClusterSpec, LinkSpec, Topology
 from repro.core.types import DFG, GB, MLModel, TaskSpec
 
 
@@ -55,6 +55,47 @@ FLEETS: Dict[str, Tuple[WorkerProfile, ...]] = {
 }
 
 
+def rack_topology(
+    rack_sizes: Sequence[int],
+    oversubscription: float = 4.0,
+    rack_link: LinkSpec = LinkSpec(100e9 / 8.0, 1e-3),
+    uplink_delta_s: float = 1e-3,
+) -> Topology:
+    """Two-tier topology over ``rack_sizes`` racks: rack-local links at
+    ``rack_link`` capacity, each rack's shared spine uplink oversubscribed
+    by ``oversubscription`` (uplink bw = rack bw / factor)."""
+    if oversubscription <= 0:
+        raise ValueError("oversubscription must be positive")
+    rack_of: List[int] = []
+    for rack, size in enumerate(rack_sizes):
+        rack_of.extend([rack] * size)
+    return Topology(
+        rack_of=tuple(rack_of),
+        rack_link=rack_link,
+        uplink=LinkSpec(
+            rack_link.bandwidth_bytes_per_s / oversubscription,
+            uplink_delta_s,
+        ),
+    )
+
+
+#: Rack-aware fleet presets: (worker profiles, topology).  ``rack2`` is
+#: the paper's T4 class spread across two racks of four behind 4×
+#: oversubscribed uplinks; ``rack2_mixed`` skews the fast GPUs into rack
+#: 0 so rack-local placement and heterogeneity pull in different
+#: directions.
+RACK_FLEETS: Dict[str, Tuple[Tuple[WorkerProfile, ...], Topology]] = {
+    "rack2": (
+        (T4,) * 8,
+        rack_topology((4, 4), oversubscription=4.0),
+    ),
+    "rack2_mixed": (
+        (A10, A10, L4, T4, T4, T4, EDGE, EDGE),
+        rack_topology((4, 4), oversubscription=4.0),
+    ),
+}
+
+
 def build_fleet(
     profiles: Sequence[WorkerProfile], **cluster_kwargs
 ) -> ClusterSpec:
@@ -74,12 +115,17 @@ def build_fleet(
 
 
 def fleet(name: str, **cluster_kwargs) -> ClusterSpec:
-    """Named preset → ``ClusterSpec`` (see ``FLEETS``)."""
+    """Named preset → ``ClusterSpec`` (see ``FLEETS`` / ``RACK_FLEETS``)."""
+    if name in RACK_FLEETS:
+        profiles, topo = RACK_FLEETS[name]
+        cluster_kwargs.setdefault("topology", topo)
+        return build_fleet(profiles, **cluster_kwargs)
     try:
         return build_fleet(FLEETS[name], **cluster_kwargs)
     except KeyError:
         raise ValueError(
-            f"unknown fleet {name!r}; have {sorted(FLEETS)}"
+            f"unknown fleet {name!r}; have "
+            f"{sorted(FLEETS) + sorted(RACK_FLEETS)}"
         ) from None
 
 
@@ -89,6 +135,7 @@ class ProfileRepository:
         self.models: Dict[int, MLModel] = dict(models)
         self._dfgs: Dict[str, DFG] = {}
         self._ranks: Dict[str, Dict[str, float]] = {}
+        self._mean_factors: Optional[Tuple[float, float]] = None
 
     # -- registration ---------------------------------------------------------
     def register(self, dfg: DFG) -> None:
@@ -117,13 +164,37 @@ class ProfileRepository:
         speeds = [self.cluster.speed(w) for w in self.cluster.workers()]
         return task.runtime_s * sum(1.0 / s for s in speeds) / len(speeds)
 
+    def _mean_transfer(self, nbytes: float) -> float:
+        """Representative (placement-free) transfer time: the flat table
+        when no topology is configured, the mean over distinct worker
+        pairs otherwise — used by static ranks, which price transfers
+        before placement is known."""
+        topo = self.cluster.topology
+        if topo is None:
+            return self.cluster.network.transfer_time(nbytes)
+        if nbytes <= 0:
+            return 0.0
+        if self._mean_factors is None:
+            self._mean_factors = topo.mean_path_factors()
+        inv_bw, delta = self._mean_factors
+        return nbytes * inv_bw + delta
+
     def td_output(self, task: TaskSpec) -> float:
-        """TD_output(t): time to move the task's output between workers."""
-        return self.cluster.network.transfer_time(task.output_bytes)
+        """TD_output(t): time to move the task's output between workers
+        (representative cost; see ``td_output_to`` for a concrete path)."""
+        return self._mean_transfer(task.output_bytes)
 
     def td_input(self, task: TaskSpec) -> float:
         """TD_input(t): time to move the task's (external) input."""
-        return self.cluster.network.transfer_time(task.input_bytes)
+        return self._mean_transfer(task.input_bytes)
+
+    def td_output_to(self, task: TaskSpec, src: int, dst: int) -> float:
+        """TD_output(t) along the concrete ``src → dst`` path."""
+        return self.cluster.path_transfer_time(task.output_bytes, src, dst)
+
+    def td_input_to(self, task: TaskSpec, src: int, dst: int) -> float:
+        """TD_input(t) along the concrete ``src → dst`` path."""
+        return self.cluster.path_transfer_time(task.input_bytes, src, dst)
 
     def td_model(self, model_id: Optional[int]) -> float:
         """TD_model(m, w) for a cache miss (uniform link assumed unless the

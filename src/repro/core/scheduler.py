@@ -140,6 +140,22 @@ class Scheduler:
     ) -> int:
         return adfg[task_id]
 
+    # Recovery targeting after churn (crash / drain / partition): pick a
+    # worker for a task whose assignment was lost.  ``None`` means "no
+    # opinion" — the dispatcher falls back to its greedy earliest-start
+    # rule.  Navigator prices the full placement cost instead.
+    def select_recovery_worker(
+        self,
+        job: Job,
+        task_id: str,
+        now: float,
+        sst: Sequence[SSTRow],
+        input_locations: Mapping[str, int],
+        input_sizes: Mapping[str, float],
+        candidates: Sequence[int],
+    ) -> Optional[int]:
+        return None
+
     # -- shared helpers -------------------------------------------------------
     def _ft_map(self, now: float, sst: Sequence[SSTRow]) -> List[float]:
         """worker_FT_map: published queue-drain times, clamped to now
@@ -177,6 +193,9 @@ class NavigatorScheduler(Scheduler):
         avc_bytes: float,
         intent_bitmap: int = 0,
         intent_fresh: bool = False,
+        fetch_model: int = -1,
+        fetch_eta_s: float = 0.0,
+        start_hint_s: float = 0.0,
     ) -> float:
         mid = task.model_id
         if mid is None:
@@ -194,8 +213,17 @@ class NavigatorScheduler(Scheduler):
             and bitmaps.contains(intent_bitmap, mid)
         ):
             # Prefetch plane: the worker advertises an in-flight/queued
-            # fetch for this model — by the time the task runs, (most of)
-            # the transfer has already overlapped queue wait.
+            # fetch for this model.  If the advertised *in-flight* fetch is
+            # this very model, its expected-completion timestamp prices the
+            # true remaining overlap: the task cannot start before
+            # ``start_hint_s``, so only the part of the fetch outlasting
+            # that moment is still on the critical path — a nearly-done
+            # fetch costs ≈ 0, a just-started one ≈ the full fetch.
+            if fetch_model == mid and fetch_eta_s > 0.0:
+                return min(fetch, max(0.0, fetch_eta_s - start_hint_s))
+            # Queued (not yet in-flight) intent: fall back to the constant
+            # confidence discount — the fetch will (probably) overlap
+            # queue wait on that worker.
             return fetch * (1.0 - self.config.intent_confidence)
         if self.profiles.cached_model_size(mid) <= avc_bytes:
             return fetch
@@ -228,6 +256,8 @@ class NavigatorScheduler(Scheduler):
             max(0.0, now - row.pushed_at) <= self.config.intent_fresh_s
             for row in sst
         ]
+        fetch_model = [row.fetch_model_id for row in sst]
+        fetch_eta = [row.fetch_eta_s for row in sst]
         adfg = ADFG(job)
 
         live_cost = [
@@ -246,7 +276,8 @@ class NavigatorScheduler(Scheduler):
                 fts.append(
                     x
                     + self._td_model(
-                        task, w, bitmap[w], avc[w], intent[w], fresh[w]
+                        task, w, bitmap[w], avc[w], intent[w], fresh[w],
+                        fetch_model[w], fetch_eta[w], x,
                     )
                     + self.profiles.runtime(task, w)
                 )                                             # line 9
@@ -328,9 +359,10 @@ class NavigatorScheduler(Scheduler):
         dfg = job.dfg
         preds = dfg.preds[task_id]
         if not preds:
-            # Entry task: the client input arrives at origin_worker.
-            td = 0.0 if worker == origin_worker else self.profiles.td_input(
-                dfg.tasks[task_id]
+            # Entry task: the client input arrives at origin_worker and
+            # ships along the origin → worker path.
+            td = 0.0 if worker == origin_worker else self.profiles.td_input_to(
+                dfg.tasks[task_id], origin_worker, worker
             )
             return now + td
         at = 0.0
@@ -338,7 +370,9 @@ class NavigatorScheduler(Scheduler):
             # Ranks order guarantees predecessors are already assigned.
             ft_p = adfg.planned_ft[p]
             if worker != adfg[p]:
-                ft_p += self.profiles.td_output(dfg.tasks[p])
+                ft_p += self.profiles.td_output_to(
+                    dfg.tasks[p], adfg[p], worker
+                )
             at = max(at, ft_p)
         return at
 
@@ -365,7 +399,6 @@ class NavigatorScheduler(Scheduler):
         if dfg.is_join(task_id) or not above:                   # lines 3-5
             return w_planned
         ft_map = self._ft_map(now, sst)                         # line 6
-        td_in = self.cluster.network.transfer_time(input_bytes)
 
         def est(w: int) -> float:
             if not self.profiles.model_fits(task.model_id, w):
@@ -384,12 +417,17 @@ class NavigatorScheduler(Scheduler):
                     row.intent_bitmap,
                     max(0.0, now - row.pushed_at)
                     <= self.config.intent_fresh_s,
+                    row.fetch_model_id,
+                    row.fetch_eta_s,
+                    ft_map[w],
                 )
                 + self.profiles.runtime(task, w)
                 + live
             )
             if w != current_worker:                             # lines 10-11
-                ft += td_in
+                ft += self.cluster.path_transfer_time(
+                    input_bytes, current_worker, w
+                )
             return ft
 
         best_w, best_ft = w_planned, est(w_planned)
@@ -416,6 +454,68 @@ class NavigatorScheduler(Scheduler):
         if best_w != w_planned and best_ft > planned_ft * (1.0 - margin):
             return w_planned
         return best_w                                           # lines 12-13
+
+    # -- recovery targeting ------------------------------------------------------
+    def select_recovery_worker(
+        self,
+        job: Job,
+        task_id: str,
+        now: float,
+        sst: Sequence[SSTRow],
+        input_locations: Mapping[str, int],
+        input_sizes: Mapping[str, float],
+        candidates: Sequence[int],
+    ) -> Optional[int]:
+        """Full Navigator placement cost for a task stranded by churn:
+        max(queue drain, input re-staging along the concrete paths) +
+        Eq. 2 model cost + R(t, w) + membership risk — instead of the
+        dispatcher's greedy earliest-start rule, which ignores worker
+        speed, input shipping, and liveness.
+
+        ``candidates`` is the dispatcher's ground-truth-feasible set
+        (serving, reachable, can host the model), so a row the *reader's
+        view* still marks DEAD is priced with the SUSPECT penalty rather
+        than excluded: the evidence is stale, not authoritative."""
+        task = job.dfg.tasks[task_id]
+        ft_map = self._ft_map(now, sst)
+        best_w: Optional[int] = None
+        best_cost = float("inf")
+        for w in candidates:
+            row = sst[w]
+            live = self._liveness_cost(row, self.config.suspect_penalty_s)
+            if live == float("inf"):
+                live = self.config.suspect_penalty_s
+            td_in = 0.0
+            for src, loc in input_locations.items():
+                if loc != w:
+                    td_in = max(
+                        td_in,
+                        self.cluster.path_transfer_time(
+                            input_sizes.get(src, 0.0), loc, w
+                        ),
+                    )
+            x = max(ft_map[w], now + td_in)
+            cost = (
+                x
+                + self._td_model(
+                    task,
+                    w,
+                    row.cache_bitmap,
+                    row.free_cache_bytes,
+                    row.intent_bitmap,
+                    max(0.0, now - row.pushed_at)
+                    <= self.config.intent_fresh_s,
+                    row.fetch_model_id,
+                    row.fetch_eta_s,
+                    x,
+                )
+                + self.profiles.runtime(task, w)
+                + live
+            )
+            if cost < best_cost or (cost == best_cost and best_w is not None
+                                    and w < best_w):
+                best_w, best_cost = w, cost
+        return best_w
 
 
 class JITScheduler(Scheduler):
@@ -459,13 +559,16 @@ class JITScheduler(Scheduler):
                 continue  # GPU can never host the model
             if sst[w].liveness == DEAD and w != self_worker:
                 continue  # lease expired in this reader's view
-            # Inputs that are not already on w must be transferred.
+            # Inputs that are not already on w must be transferred along
+            # their holder → w path.
             td_in = 0.0
             for src, loc in input_locations.items():
                 if loc != w:
                     td_in = max(
                         td_in,
-                        self.cluster.network.transfer_time(input_sizes[src]),
+                        self.cluster.path_transfer_time(
+                            input_sizes[src], loc, w
+                        ),
                     )
             td_model = 0.0
             if task.model_id is not None and not bitmaps.contains(
@@ -512,12 +615,16 @@ class HEFTScheduler(Scheduler):
                 preds = dfg.preds[tid]
                 if not preds:
                     if w != origin_worker:
-                        at = now + self.profiles.td_input(task)
+                        at = now + self.profiles.td_input_to(
+                            task, origin_worker, w
+                        )
                 else:
                     for p in preds:
                         ft_p = adfg.planned_ft[p]
                         if w != adfg[p]:
-                            ft_p += self.profiles.td_output(dfg.tasks[p])
+                            ft_p += self.profiles.td_output_to(
+                                dfg.tasks[p], adfg[p], w
+                            )
                         at = max(at, ft_p)
                 # Every task pays the average model fetch cost regardless of
                 # cache state: HEFT is model-locality-blind, but the fetch

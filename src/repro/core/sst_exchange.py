@@ -21,7 +21,7 @@ Two transports live here:
    axis of a JAX mesh.  Like the RDMA original, a push moves one cache
    line per peer.
 
-Row layout (uint32 lanes — exact bit transport; 10 lanes = 40 bytes, still
+Row layout (uint32 lanes — exact bit transport; 12 lanes = 48 bytes, still
 under one 64-byte cache line, keeping the wire format faithful to Fig. 5):
   [0] ft_estimate_s   (f32 bit pattern)
   [1] cache_bitmap lo 32 bits
@@ -33,6 +33,8 @@ under one 64-byte cache line, keeping the wire format faithful to Fig. 5):
   [7] intent_bitmap hi 32 bits
   [8] heartbeat_s     (f32 bit pattern — membership lease lane)
   [9] epoch (31 bits) | draining flag (bit 31)
+  [10] in-flight fetch model id + 1 (0 = no fetch in flight)
+  [11] fetch_eta_s    (f32 bit pattern — expected fetch completion)
 """
 
 from __future__ import annotations
@@ -49,7 +51,7 @@ from repro.core.state import ALIVE, DEAD, LeaseConfig, SSTRow, SUSPECT
 # jax is imported lazily inside make_sst_allgather so the gossip plane
 # (pure Python) stays importable on hosts without an accelerator stack.
 
-ROW_WIDTH = 10
+ROW_WIDTH = 12
 
 
 def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
@@ -64,6 +66,8 @@ def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
     out[7] = np.uint32((row.intent_bitmap >> 32) & 0xFFFFFFFF)
     out[8] = np.float32(row.heartbeat_s).view(np.uint32)
     out[9] = np.uint32((row.epoch & 0x7FFFFFFF) | (int(row.draining) << 31))
+    out[10] = np.uint32(row.fetch_model_id + 1)
+    out[11] = np.float32(row.fetch_eta_s).view(np.uint32)
     return out
 
 
@@ -82,6 +86,8 @@ def unpack_rows(table: np.ndarray) -> List[SSTRow]:
                 heartbeat_s=float(r[8:9].view(np.float32)[0]),
                 epoch=int(r[9]) & 0x7FFFFFFF,
                 draining=bool(int(r[9]) >> 31),
+                fetch_model_id=int(r[10]) - 1,
+                fetch_eta_s=float(r[11:12].view(np.float32)[0]),
             )
         )
     return rows
@@ -128,8 +134,9 @@ class GossipConfig:
     ``drop_prob``  — per-message loss probability.  Lost rows are *not*
                      retransmitted point-to-point; they reach the peer via
                      relay through third parties, as in rumor mongering.
-    ``wire_row_bytes`` — bytes per row update on the wire (the 10-lane
-                     packed row above plus an owner header).
+    ``wire_row_bytes`` — bytes per row update on the wire (the 12-lane
+                     packed row above; the owner header rides the same
+                     64-byte cache line).
     ``seed``       — peer-selection / drop-sampling RNG seed (combined
                      with the driving engine's seed for determinism).
     """
@@ -137,7 +144,7 @@ class GossipConfig:
     period_s: float = 0.2
     fanout: int = 2
     drop_prob: float = 0.0
-    wire_row_bytes: float = 48.0  # 10 packed lanes + owner header
+    wire_row_bytes: float = 48.0  # 12 packed lanes (owner header in-line)
     seed: int = 0
 
 
@@ -252,10 +259,14 @@ class GossipPlane:
         cache_bitmap: int,
         free_cache_bytes: float,
         now: float = 0.0,
+        fetch_model_id: int = -1,
+        fetch_eta_s: float = 0.0,
     ) -> None:
         row = self.local[worker]
         row.cache_bitmap = cache_bitmap
         row.free_cache_bytes = free_cache_bytes
+        row.fetch_model_id = fetch_model_id
+        row.fetch_eta_s = fetch_eta_s
         self._bump(worker, now)
 
     def update_intent(
@@ -279,6 +290,16 @@ class GossipPlane:
         DEAD for placement the moment they learn of it (no lease wait)."""
         self.local[worker].draining = draining
         self._bump(worker, now)
+
+    def set_partition(
+        self, group_of: Optional[List[int]], now: float = 0.0
+    ) -> None:
+        """Network-cut notification (same hook ``SharedStateTable`` has).
+        The gossip plane needs no internal state for it: the simulator
+        drops cross-cut deliveries, so each reader's replica of a
+        cross-cut row freezes and its lease ages out naturally — and
+        because rows travel as full state merged newest-(epoch, version)
+        wins, post-heal rounds reconverge without replaying anything."""
 
     def join(self, worker: int, now: float) -> None:
         """A worker (re)joins the fleet with a fresh incarnation.

@@ -92,6 +92,12 @@ class SSTRow:
     heartbeat_s: float = 0.0
     epoch: int = 0
     draining: bool = False
+    # Prefetch-plane expected-completion advertisement: the model id of
+    # the owner's *in-flight* fetch (−1 = none) and its absolute expected
+    # completion time.  Planners use the remaining transfer fraction to
+    # scale the intent discount (a nearly-done fetch is nearly free).
+    fetch_model_id: int = -1
+    fetch_eta_s: float = 0.0
     # Reader-side annotation (NOT wire state): the membership state the
     # reader that produced this view assigns the row.  Filled by
     # ``view(..., now=...)`` when a lease is configured; planners cost
@@ -109,6 +115,8 @@ class SSTRow:
             self.heartbeat_s,
             self.epoch,
             self.draining,
+            self.fetch_model_id,
+            self.fetch_eta_s,
             self.liveness,
         )
 
@@ -146,6 +154,9 @@ class SharedStateTable:
         self.local: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
         self.published: List[SSTRow] = [SSTRow() for _ in range(n_workers)]
         self._pushes = 0
+        # Open network partition: (worker -> group id, cut start time), or
+        # None when fully connected.  See ``set_partition``.
+        self._partition: Optional[tuple] = None
 
     # -- local updates (free, instantaneous) -------------------------------
     # ``now`` stamps the local row's modification time (the same signature
@@ -165,10 +176,14 @@ class SharedStateTable:
         cache_bitmap: int,
         free_cache_bytes: float,
         now: float = 0.0,
+        fetch_model_id: int = -1,
+        fetch_eta_s: float = 0.0,
     ) -> None:
         row = self.local[worker]
         row.cache_bitmap = cache_bitmap
         row.free_cache_bytes = free_cache_bytes
+        row.fetch_model_id = fetch_model_id
+        row.fetch_eta_s = fetch_eta_s
         row.pushed_at = max(row.pushed_at, now)
 
     def update_intent(
@@ -216,6 +231,8 @@ class SharedStateTable:
         self.published[worker].cache_bitmap = self.local[worker].cache_bitmap
         self.published[worker].free_cache_bytes = self.local[worker].free_cache_bytes
         self.published[worker].intent_bitmap = self.local[worker].intent_bitmap
+        self.published[worker].fetch_model_id = self.local[worker].fetch_model_id
+        self.published[worker].fetch_eta_s = self.local[worker].fetch_eta_s
         self.published[worker].heartbeat_s = self.local[worker].heartbeat_s
         self.published[worker].draining = self.local[worker].draining
         self.published[worker].epoch = self.local[worker].epoch
@@ -229,6 +246,21 @@ class SharedStateTable:
     @property
     def total_pushes(self) -> int:
         return self._pushes
+
+    # -- partitions ----------------------------------------------------------
+    def set_partition(
+        self, group_of: Optional[List[int]], now: float = 0.0
+    ) -> None:
+        """Install (or with ``None`` heal) a network cut, as a worker ->
+        group-id map.  The single published snapshot models a table
+        replicated on every side of the cut: writes keep landing on the
+        writer's own side, but a *reader* stops receiving heartbeats from
+        workers across the cut, so ``view`` classifies those rows from the
+        frozen pre-cut heartbeat — per-reader lease verdicts disagree
+        across the cut while every same-side verdict stays fresh, matching
+        the gossip plane's behaviour without per-reader row copies (the
+        planner ignores the payload of SUSPECT/DEAD rows anyway)."""
+        self._partition = None if group_of is None else (list(group_of), now)
 
     # -- reads ---------------------------------------------------------------
     def view(
@@ -252,7 +284,13 @@ class SharedStateTable:
                 elif w == reader_worker:
                     row.liveness = ALIVE  # self-evidence is never stale
                 else:
-                    row.liveness = self.lease.classify(
-                        max(0.0, now - row.heartbeat_s)
-                    )
+                    hb = row.heartbeat_s
+                    if self._partition is not None and reader_worker is not None:
+                        group_of, cut_start = self._partition
+                        if group_of[reader_worker] != group_of[w]:
+                            # The reader's last heartbeat from across the
+                            # cut is the fresher of the owner's pre-cut
+                            # stamp and the cut onset.
+                            hb = min(hb, cut_start)
+                    row.liveness = self.lease.classify(max(0.0, now - hb))
         return rows

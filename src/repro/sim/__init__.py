@@ -1,4 +1,9 @@
-from repro.sim.churn import ChurnEvent, churn_schedule, validate_schedule
+from repro.sim.churn import (
+    ChurnEvent,
+    churn_schedule,
+    partition_schedule,
+    validate_schedule,
+)
 from repro.sim.engine import JobRecord, SimResult, Simulation
 from repro.sim.workload import (
     arrival_rate_timeline,
@@ -18,6 +23,7 @@ __all__ = [
     "churn_schedule",
     "fleet_scaled_rate",
     "fleet_workload",
+    "partition_schedule",
     "poisson_workload",
     "validate_schedule",
 ]

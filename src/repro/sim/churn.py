@@ -19,28 +19,50 @@ Semantics (enforced by ``sim/engine.py``):
 * ``join``   — the worker (re)enters with a cold cache, a fresh gossip
   incarnation (epoch + 1), and an empty SST view rebuilt by anti-entropy
   full-sync from the first peers to contact it.
+* ``partition`` — the interconnect splits into the event's ``groups``:
+  every worker stays up and keeps executing, but messages (inputs,
+  outputs, gossip, intents) between groups are lost.  Cross-cut readers
+  watch each other's heartbeats age to SUSPECT and then DEAD while
+  same-side readers still see ALIVE — the asymmetric-reachability regime
+  fail-stop churn never generates.  Workers do NOT bump their epoch (no
+  process died), so healed rows win replica merges on version alone.
+* ``heal``  — the cut closes; reachability is global again.  Schedules
+  must heal every partition (``validate_schedule`` enforces it) so that
+  work stranded behind a cut can always make progress eventually.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 CRASH = "crash"
 JOIN = "join"
 DRAIN = "drain"
+PARTITION = "partition"
+HEAL = "heal"
 
 
 @dataclasses.dataclass(frozen=True)
 class ChurnEvent:
     time: float
-    kind: str  # CRASH | JOIN | DRAIN
-    worker: int
+    kind: str  # CRASH | JOIN | DRAIN | PARTITION | HEAL
+    worker: int = -1  # unused (-1) for partition/heal
+    # PARTITION only: the connected components the fleet splits into.
+    # Workers not listed form singleton groups (fully isolated).
+    groups: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def __post_init__(self) -> None:
-        if self.kind not in (CRASH, JOIN, DRAIN):
+        if self.kind not in (CRASH, JOIN, DRAIN, PARTITION, HEAL):
             raise ValueError(f"unknown churn event kind {self.kind!r}")
+        if self.kind == PARTITION:
+            if not self.groups or len(self.groups) < 2:
+                raise ValueError(f"partition needs >= 2 groups in {self}")
+        elif self.groups is not None:
+            raise ValueError(f"groups only valid on partition events: {self}")
+        if self.kind in (CRASH, JOIN, DRAIN) and self.worker < 0:
+            raise ValueError(f"{self.kind} event needs a worker: {self}")
 
 
 def churn_schedule(
@@ -91,14 +113,73 @@ def churn_schedule(
     return sorted(events, key=lambda e: (e.time, e.worker))
 
 
+def partition_schedule(
+    n_workers: int,
+    duration_s: float,
+    mtbp_s: float,
+    outage_s: float = 6.0,
+    seed: int = 0,
+    groups: Optional[Tuple[Tuple[int, ...], ...]] = None,
+    start_after_s: float = 5.0,
+) -> List[ChurnEvent]:
+    """Seeded partition churn: cuts arrive with exponential gaps of mean
+    ``mtbp_s`` and heal after ``outage_s`` ± 25 % jitter; cuts never
+    overlap (one partition at a time, matching the engine's model).  Each
+    cut uses ``groups`` when given (e.g. the rack split of a topology
+    preset) or a seeded random bipartition otherwise.  Every cut is healed
+    — if necessary past ``duration_s`` — so stranded work can finish."""
+    if n_workers < 2 or mtbp_s <= 0:
+        return []
+    rng = random.Random(seed)
+    events: List[ChurnEvent] = []
+    t = start_after_s
+    while True:
+        t += rng.expovariate(1.0 / mtbp_s)
+        if t >= duration_s:
+            break
+        if groups is not None:
+            cut = groups
+        else:
+            members = list(range(n_workers))
+            rng.shuffle(members)
+            k = rng.randint(1, n_workers - 1)
+            cut = (tuple(sorted(members[:k])), tuple(sorted(members[k:])))
+        heal_at = t + outage_s * (0.75 + 0.5 * rng.random())
+        events.append(ChurnEvent(time=t, kind=PARTITION, groups=cut))
+        events.append(ChurnEvent(time=heal_at, kind=HEAL))
+        t = heal_at
+    return sorted(events, key=lambda e: (e.time, e.worker))
+
+
 def validate_schedule(
     events: Sequence[ChurnEvent], n_workers: int, min_live: int = 1
 ) -> None:
     """Sanity-check a (possibly hand-written) schedule: workers in range,
-    no failure of an already-down worker, no join of an up worker, and the
-    live floor respected.  Raises ``ValueError`` on the first violation."""
+    no failure of an already-down worker, no join of an up worker, the
+    live floor respected, partitions well-formed (disjoint in-range
+    groups, no overlapping cuts) and always healed.  Raises
+    ``ValueError`` on the first violation."""
     up = set(range(n_workers))
+    cut_open = False
     for ev in sorted(events, key=lambda e: (e.time, e.worker)):
+        if ev.kind == PARTITION:
+            if cut_open:
+                raise ValueError(f"overlapping partition in {ev}")
+            seen: set = set()
+            for group in ev.groups or ():
+                for w in group:
+                    if not 0 <= w < n_workers:
+                        raise ValueError(f"worker {w} out of range in {ev}")
+                    if w in seen:
+                        raise ValueError(f"worker {w} in two groups in {ev}")
+                    seen.add(w)
+            cut_open = True
+            continue
+        if ev.kind == HEAL:
+            if not cut_open:
+                raise ValueError(f"heal without open partition in {ev}")
+            cut_open = False
+            continue
         if not 0 <= ev.worker < n_workers:
             raise ValueError(f"worker {ev.worker} out of range in {ev}")
         if ev.kind == JOIN:
@@ -111,3 +192,5 @@ def validate_schedule(
             up.discard(ev.worker)
             if len(up) < min_live:
                 raise ValueError(f"live floor {min_live} violated at {ev}")
+    if cut_open:
+        raise ValueError("schedule ends with an unhealed partition")

@@ -29,7 +29,7 @@ import random
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from repro.core.memory import GpuMemoryManager
-from repro.core.netmodel import ClusterSpec
+from repro.core.netmodel import ClusterSpec, NetworkState
 from repro.core.prefetch import (
     INTENT_WIRE_BYTES,
     PrefetchConfig,
@@ -46,7 +46,7 @@ from repro.core.scheduler import (
 from repro.core.sst_exchange import GossipConfig, GossipPlane
 from repro.core.state import DEAD, LeaseConfig, SharedStateTable
 from repro.core.types import ADFG, Job, MLModel
-from repro.sim.churn import CRASH, DRAIN, JOIN, ChurnEvent
+from repro.sim.churn import CRASH, DRAIN, HEAL, JOIN, PARTITION, ChurnEvent
 
 
 # --------------------------------------------------------------------------
@@ -138,6 +138,15 @@ class SimResult:
     churn_crashes: int = 0
     churn_joins: int = 0
     churn_drains: int = 0
+    churn_partitions: int = 0     # network cuts applied
+    churn_heals: int = 0          # cuts closed
+    # Topology plane (zeros on a flat cluster): bulk transfers that stayed
+    # inside one rack vs. crossed the (oversubscribable) spine, and how
+    # many of the crossing ones shared an uplink with another in-flight
+    # transfer (fair-share slowdown actually applied).
+    net_local_transfers: int = 0
+    net_cross_transfers: int = 0
+    net_contended_transfers: int = 0
     bounces: int = 0              # capacity bounces executed (§3.2 dispatcher)
     tasks_rescued: int = 0        # in-flight/queued work re-routed off a dead worker
     outputs_recovered: int = 0    # finished producers re-run (outputs died)
@@ -325,6 +334,20 @@ class Simulation:
         self._churn_crashes = 0
         self._churn_joins = 0
         self._churn_drains = 0
+        self._churn_partitions = 0
+        self._churn_heals = 0
+        # Topology plane: contention tracker over the cluster's rack graph
+        # (None on a flat cluster — every wire cost then takes the exact
+        # pre-topology all-pairs code path) and the open partition, as
+        # worker -> group id (None = fully connected).
+        self._net: Optional[NetworkState] = (
+            NetworkState(cluster.topology)
+            if cluster.topology is not None
+            else None
+        )
+        self._partition: Optional[List[int]] = None
+        self._net_local = 0
+        self._net_cross = 0
         # Replayable event log (determinism regression tests).
         self.event_log: Optional[List[Tuple[float, str]]] = (
             [] if record_events else None
@@ -387,7 +410,7 @@ class Simulation:
             elif kind == "enqueue":
                 self._on_enqueue(ev[1], ev[2], ev[3])
             elif kind == "input":
-                self._on_input(ev[1], ev[2], ev[3], ev[4], ev[5])
+                self._on_input(ev[1], ev[2], ev[3], ev[4], ev[5], ev[6])
             elif kind == "fetch_done":
                 self._on_fetch_done(ev[1], ev[2])
             elif kind == "task_done":
@@ -407,9 +430,9 @@ class Simulation:
             elif kind == "recover":
                 self._on_recover(ev[1])
             elif kind == "dead_letter":
-                self._on_dead_letter(ev[1], ev[2], ev[3], ev[4])
+                self._on_dead_letter(ev[1], ev[2], ev[3], ev[4], ev[5])
             elif kind == "reroute_retry":
-                self._on_reroute_retry(ev[1], ev[2], ev[3])
+                self._on_reroute_retry(ev[1], ev[2], ev[3], ev[4])
             elif kind == "heartbeat":
                 self._on_heartbeat(ev[1], ev[2])
             elif kind == "sst_load":
@@ -428,7 +451,11 @@ class Simulation:
             elif kind == "gossip":
                 self._on_gossip(ev[1], ev[2])
             elif kind == "gossip_rx":
-                if self._up[ev[1]]:
+                # A cut drops cross-group gossip at delivery time: the
+                # message was in flight when the link went down.  Rows are
+                # full-state (newest version wins), so post-heal rounds
+                # reconverge without replaying the lost diffs.
+                if self._up[ev[1]] and self._reachable(ev[3], ev[1]):
                     self.sst.deliver(ev[1], ev[2], t)
             else:  # pragma: no cover
                 raise AssertionError(f"unknown event {kind}")
@@ -463,6 +490,13 @@ class Simulation:
             churn_crashes=self._churn_crashes,
             churn_joins=self._churn_joins,
             churn_drains=self._churn_drains,
+            churn_partitions=self._churn_partitions,
+            churn_heals=self._churn_heals,
+            net_local_transfers=self._net_local,
+            net_cross_transfers=self._net_cross,
+            net_contended_transfers=(
+                self._net.contended_transfers if self._net is not None else 0
+            ),
             bounces=self._bounces,
             tasks_rescued=self._tasks_rescued,
             outputs_recovered=self._outputs_recovered,
@@ -473,6 +507,44 @@ class Simulation:
             task_completions=dict(self._completions),
             event_log=self.event_log,
         )
+
+    # -- network plane -----------------------------------------------------------
+    def _xfer_time(
+        self,
+        nbytes: float,
+        src: Optional[int] = None,
+        dst: Optional[int] = None,
+        register: bool = False,
+    ) -> float:
+        """Wire time for one transfer.  Without a topology (or with an
+        unknown endpoint) this is the flat all-pairs table — the exact
+        pre-topology cost, including its quirk of charging a transfer even
+        when ``src == dst``.  With a topology it is the path cost, and
+        ``register`` (bulk data: inputs, outputs, re-shipments) enrolls
+        the flow on every crossed uplink so concurrent cross-rack
+        transfers fair-share the spine; control messages ride unregistered
+        and uncontended."""
+        if self._net is None or src is None or dst is None:
+            return self.cluster.network.transfer_time(nbytes)
+        if src == dst:
+            return 0.0
+        if register:
+            topo = self._net.topology
+            if topo.rack(src) == topo.rack(dst):
+                self._net_local += 1
+            else:
+                self._net_cross += 1
+            return self._net.start_transfer(nbytes, src, dst, self._now)
+        return self._net.transfer_time(nbytes, src, dst, self._now)
+
+    def _reachable(self, a: Optional[int], b: Optional[int]) -> bool:
+        """Whether a message between two workers crosses an open cut.
+        Unknown endpoints are assumed reachable (the flat pre-partition
+        behaviour); groups are equivalence classes, so reachability is
+        transitive among known endpoints."""
+        if self._partition is None or a is None or b is None or a == b:
+            return True
+        return self._partition[a] == self._partition[b]
 
     # -- event handlers --------------------------------------------------------------
     def _serving(self, worker: int) -> bool:
@@ -525,20 +597,25 @@ class Simulation:
                     job, adfg, self.profiles, self._now
                 )
                 for w, intents in per.items():
+                    if not self._reachable(origin, w):
+                        continue  # best-effort control traffic; lost in the cut
                     delay = 0.0
                     if w != origin:
-                        delay = self.cluster.network.transfer_time(
-                            INTENT_WIRE_BYTES * len(intents)
+                        delay = self._xfer_time(
+                            INTENT_WIRE_BYTES * len(intents), origin, w
                         )
                     self._post(self._now + delay, "intent", w, intents)
             for tid in job.dfg.entry_tasks:
                 w = adfg[tid]
                 delay = 0.0
                 if w != origin:
-                    delay = self.profiles.td_input(job.dfg.tasks[tid])
+                    delay = self._xfer_time(
+                        job.dfg.tasks[tid].input_bytes, origin, w,
+                        register=True,
+                    )
                 self._post(
                     self._now + delay, "input", js, tid, "", w,
-                    js.tasks[tid].generation,
+                    js.tasks[tid].generation, origin,
                 )
 
     def _jit_assign(
@@ -572,35 +649,46 @@ class Simulation:
         )
         assert js.adfg is not None
         js.adfg[task_id] = w
-        # Ship all inputs to w.
+        # Ship all inputs to w (they travel as one batch: the slowest
+        # path sets the arrival time).
         delay = 0.0
         for src, loc in input_locations.items():
             if loc != w:
                 delay = max(
                     delay,
-                    self.cluster.network.transfer_time(input_sizes[src]),
+                    self._xfer_time(input_sizes[src], loc, w, register=True),
                 )
         gen = js.tasks[task_id].generation
-        for src in input_locations:
-            self._post(self._now + delay, "input", js, task_id, src, w, gen)
+        for src, loc in input_locations.items():
+            self._post(
+                self._now + delay, "input", js, task_id, src, w, gen, loc
+            )
 
     def _on_input(
-        self, js: _JobState, task_id: str, src: str, worker: int, gen: int
+        self,
+        js: _JobState,
+        task_id: str,
+        src: str,
+        worker: int,
+        gen: int,
+        src_worker: Optional[int] = None,
     ) -> None:
         run = js.tasks[task_id]
         if gen != run.generation or run.finished is not None:
             return  # superseded by a re-route / re-execution
-        if not self._serving(worker):
-            if self._up[worker]:
+        reachable = self._reachable(src_worker, worker)
+        if not self._serving(worker) or not reachable:
+            if self._up[worker] and reachable:
                 # Draining: the worker is alive and politely refuses, so
                 # failover is immediate.
-                self._reroute(js, task_id)
+                self._reroute(js, task_id, from_worker=src_worker)
             else:
-                # Dead: the sender only discovers the silence after the
-                # connection timeout — the per-contact price every
-                # membership-blind placement keeps paying all through the
-                # outage, and an informed planner pays at most once per
-                # lease window.
+                # Dead — or alive but unreachable across a cut, which the
+                # sender cannot tell apart: it only discovers the silence
+                # after the connection timeout — the per-contact price
+                # every membership-blind placement keeps paying all
+                # through the outage, and an informed planner pays at
+                # most once per lease window.
                 timeout = (
                     self.lease.dead_letter_timeout_s
                     if self.lease is not None
@@ -608,7 +696,7 @@ class Simulation:
                 )
                 self._post(
                     self._now + timeout, "dead_letter", js, task_id, src,
-                    gen,
+                    gen, src_worker,
                 )
             return
         js.inputs_arrived[task_id].add(src)
@@ -703,17 +791,21 @@ class Simulation:
                     if new_w != adfg[succ]:
                         self._adjustments += 1
                         if self.prefetch_plane is not None:
-                            self._migrate_intent(js, succ, adfg[succ], new_w)
+                            self._migrate_intent(
+                                js, succ, adfg[succ], new_w, worker
+                            )
                         adfg[succ] = new_w
                 w = adfg[succ]
                 delay = (
                     0.0
                     if w == worker
-                    else self.cluster.network.transfer_time(task.output_bytes)
+                    else self._xfer_time(
+                        task.output_bytes, worker, w, register=True
+                    )
                 )
                 self._post(
                     self._now + delay, "input", js, succ, task_id, w,
-                    run_s.generation,
+                    run_s.generation, worker,
                 )
             else:
                 # JIT: assign when ALL predecessors have completed (and the
@@ -1054,29 +1146,41 @@ class Simulation:
             nbytes = (
                 task.input_bytes if src == "" else dfg.tasks[src].output_bytes
             )
-            delay = max(delay, self.cluster.network.transfer_time(nbytes))
+            delay = max(
+                delay, self._xfer_time(nbytes, worker, target, register=True)
+            )
         js.inputs_arrived[tid] = set()
         for src in srcs:
             self._post(
                 self._now + delay, "input", js, tid, src, target,
-                run.generation,
+                run.generation, worker,
             )
         self._update_load(worker)
         self._dispatch(worker)
 
     def _migrate_intent(
-        self, js: _JobState, task_id: str, old_w: int, new_w: int
+        self,
+        js: _JobState,
+        task_id: str,
+        old_w: int,
+        new_w: int,
+        sender: Optional[int] = None,
     ) -> None:
         """Alg. 2 moved a task: cancel the prefetch intent on the planned
         worker (a control message) and re-issue it on the new one (riding
-        the input transfer that is about to ship there)."""
+        the input transfer that is about to ship there).  Control traffic
+        crossing an open cut is lost."""
         assert self.prefetch_plane is not None
-        ctrl = self.cluster.network.transfer_time(INTENT_WIRE_BYTES)
-        self._post(self._now + ctrl, "intent_cancel", old_w, js, task_id)
+        if self._reachable(sender, old_w):
+            ctrl = self._xfer_time(INTENT_WIRE_BYTES, sender, old_w)
+            self._post(self._now + ctrl, "intent_cancel", old_w, js, task_id)
+        if not self._reachable(sender, new_w):
+            return
         intent = self.prefetch_plane.make_intent(
             js.job, task_id, new_w, self._now
         )
         if intent is not None:
+            ctrl = self._xfer_time(INTENT_WIRE_BYTES, sender, new_w)
             self._post(self._now + ctrl, "intent", new_w, [intent])
 
     # -- fleet churn: crash / drain / join (membership plane) ----------------------
@@ -1087,6 +1191,39 @@ class Simulation:
             self._do_join(ev.worker)
         elif ev.kind == DRAIN:
             self._do_drain(ev.worker)
+        elif ev.kind == PARTITION:
+            self._do_partition(ev)
+        elif ev.kind == HEAL:
+            self._do_heal()
+
+    def _do_partition(self, ev: ChurnEvent) -> None:
+        """The interconnect splits into ``ev.groups``: every worker stays
+        up and keeps executing, but bulk and control messages between
+        groups are lost (bulk ones fail over through the dead-letter
+        timeout, exactly like sends to a corpse — the sender cannot tell
+        silence from death).  Nobody's epoch bumps: no process died, so
+        healed rows must win replica merges on version alone.  Workers in
+        no listed group are fully isolated (unique singleton groups)."""
+        assert ev.groups is not None
+        self._churn_partitions += 1
+        # Negative ids for unlisted workers so they can never collide with
+        # a group index.
+        part = [-(w + 1) for w in range(self.cluster.n_workers)]
+        for gi, group in enumerate(ev.groups):
+            for w in group:
+                part[w] = gi
+        self._partition = part
+        self.sst.set_partition(part, self._now)
+
+    def _do_heal(self) -> None:
+        """The cut closes.  Nothing is replayed: gossip reconverges on its
+        own (full-row newest-version merges), and work stranded behind the
+        cut is re-driven by the retry/dead-letter machinery."""
+        if self._partition is None:
+            return
+        self._churn_heals += 1
+        self._partition = None
+        self.sst.set_partition(None, self._now)
 
     def _do_crash(self, w: int) -> None:
         """The worker vanishes: running task, queue, in-flight fetch, cache
@@ -1140,7 +1277,7 @@ class Simulation:
         queued = list(self._queues[w])
         self._queues[w] = []
         for js, tid in queued:
-            self._reroute(js, tid)
+            self._reroute(js, tid, from_worker=w)
         self._update_load(w)
         if self._gpu_busy[w] is None and not self._fetch_busy[w]:
             self._complete_drain(w)
@@ -1150,7 +1287,13 @@ class Simulation:
         task outputs to an heir (graceful departure has the time to
         upload its state — that is the point of draining over crashing),
         then leave the fleet."""
-        heir = self._live_origin((w + 1) % self.cluster.n_workers)
+        heir = None
+        n = self.cluster.n_workers
+        for d in range(n):
+            cand = (w + 1 + d) % n
+            if self._serving(cand) and self._reachable(w, cand):
+                heir = cand  # next serving worker the drainer can reach
+                break
         if heir is not None:
             self._open_jobs = [
                 js for js in self._open_jobs if js.finish_time is None
@@ -1343,38 +1486,52 @@ class Simulation:
                 self._ship_inputs(js, tid)
 
     def _on_dead_letter(
-        self, js: _JobState, tid: str, src: str, gen: int
+        self,
+        js: _JobState,
+        tid: str,
+        src: str,
+        gen: int,
+        src_worker: Optional[int] = None,
     ) -> None:
-        """The connection timeout on one input shipment to a dead worker
-        fired.  Three same-generation outcomes exist, because
-        detection-time recovery re-stages crash-voided attempts without a
-        fresh generation while stale-assignment shipments may still be in
-        flight:
+        """The connection timeout on one input shipment to a dead (or
+        unreachable) worker fired.  Three same-generation outcomes exist,
+        because detection-time recovery re-stages crash-voided attempts
+        without a fresh generation while stale-assignment shipments may
+        still be in flight:
 
         * the attempt has started (or this input already landed via a
           duplicate shipment) — the timed-out copy is moot;
-        * the attempt is enqueued on a (necessarily serving) worker but
-          this input is genuinely missing — re-ship just this input
-          there, or the task waits forever;
-        * the attempt is still unstaged — full dead-letter failover."""
+        * the attempt is enqueued on a (necessarily serving) worker the
+          sender can reach, but this input is genuinely missing — re-ship
+          just this input there, or the task waits forever;
+        * the attempt is still unstaged (or re-staged somewhere the
+          sender cannot reach) — full dead-letter failover on the
+          sender's side of the cut."""
         run = js.tasks[tid]
         if gen != run.generation or run.finished is not None:
             return
         if run.started is not None or src in js.inputs_arrived[tid]:
             return  # inputs complete / duplicate shipment
-        if run.enqueued and run.worker is not None:
+        if (
+            run.enqueued
+            and run.worker is not None
+            and self._reachable(src_worker, run.worker)
+        ):
             task = js.job.dfg.tasks[tid]
             nbytes = (
                 task.input_bytes
                 if src == ""
                 else js.job.dfg.tasks[src].output_bytes
             )
-            delay = self.cluster.network.transfer_time(nbytes)
+            delay = self._xfer_time(
+                nbytes, src_worker, run.worker, register=True
+            )
             self._post(
-                self._now + delay, "input", js, tid, src, run.worker, gen
+                self._now + delay, "input", js, tid, src, run.worker, gen,
+                src_worker,
             )
             return
-        self._reroute(js, tid)
+        self._reroute(js, tid, from_worker=src_worker)
 
     def _reset_task(self, js: _JobState, tid: str) -> None:
         run = js.tasks[tid]
@@ -1412,11 +1569,14 @@ class Simulation:
             # JIT re-assigns when the last producer (re-)completes.
             js.adfg.assignment.pop(tid, None)
 
-    def _reroute(self, js: _JobState, tid: str) -> None:
+    def _reroute(
+        self, js: _JobState, tid: str, from_worker: Optional[int] = None
+    ) -> None:
         """Dead-letter recovery for one task: void the old attempt and
-        re-stage its inputs on a serving worker."""
+        re-stage its inputs on a serving worker — on ``from_worker``'s
+        side of an open cut, when the failover is partition-driven."""
         self._reset_task(js, tid)
-        self._ship_inputs(js, tid)
+        self._ship_inputs(js, tid, from_worker=from_worker)
 
     def _output_alive(self, run: _TaskRun) -> bool:
         """Whether a finished task's output can still be read: its worker
@@ -1428,12 +1588,14 @@ class Simulation:
             and run.session == self._session[run.worker]
         )
 
-    def _reexec_producer(self, js: _JobState, tid: str) -> None:
+    def _reexec_producer(
+        self, js: _JobState, tid: str, from_worker: Optional[int] = None
+    ) -> None:
         run = js.tasks[tid]
         if run.finished is None:
             return  # already being recovered; its completion will ship
         self._reset_task(js, tid)
-        self._ship_inputs(js, tid)
+        self._ship_inputs(js, tid, from_worker=from_worker)
 
     def _fleet_can_serve(self, model_id: Optional[int]) -> bool:
         """Whether a worker able to host ``model_id`` is serving now or
@@ -1456,26 +1618,72 @@ class Simulation:
                     return True
         return False
 
-    def _recovery_target(self, js: _JobState, tid: str) -> Optional[int]:
-        """Earliest-start serving worker that can host the task's model,
-        pricing the model fetch from the (live) origin replica's published
-        cache bitmaps — the dispatcher-level recovery rule.  Cache
-        awareness matters under churn: a crash of a cache-hot worker
-        would otherwise dump its whole working set onto whichever heir
-        happened to be least loaded, serializing a refetch storm on one
-        PCIe pipe."""
+    def _recovery_inputs(
+        self, js: _JobState, tid: str
+    ) -> Tuple[Dict[str, int], Dict[str, float]]:
+        """Where the task's already-available inputs live (and their
+        sizes): surviving finished-producer outputs, or the job's entry
+        payload at a live origin.  Inputs whose producers are being
+        re-executed are omitted — their future location is unknown."""
+        dfg = js.job.dfg
+        locs: Dict[str, int] = {}
+        sizes: Dict[str, float] = {}
+        preds = dfg.preds[tid]
+        if not preds:
+            origin = self._live_origin(js.origin)
+            if origin is not None:
+                locs[""] = origin
+                sizes[""] = dfg.tasks[tid].input_bytes
+            return locs, sizes
+        for p in preds:
+            rp = js.tasks[p]
+            if (
+                rp.finished is not None
+                and rp.worker is not None
+                and self._output_alive(rp)
+            ):
+                locs[p] = rp.worker
+                sizes[p] = dfg.tasks[p].output_bytes
+        return locs, sizes
+
+    def _recovery_target(
+        self, js: _JobState, tid: str, from_worker: Optional[int] = None
+    ) -> Optional[int]:
+        """Serving worker to re-home a stranded task on, restricted to
+        ``from_worker``'s side of an open cut.  The scheduler's
+        ``select_recovery_worker`` hook prices candidates with the full
+        Navigator placement cost (queue drain, concrete input paths,
+        Eq. 2 model cost, runtime, membership risk); schedulers without
+        the hook fall back to the dispatcher-level greedy rule —
+        earliest start pricing the model fetch from the reader replica's
+        published cache bitmaps.  Cache awareness matters under churn: a
+        crash of a cache-hot worker would otherwise dump its whole
+        working set onto whichever heir happened to be least loaded,
+        serializing a refetch storm on one PCIe pipe."""
         task = js.job.dfg.tasks[tid]
         mid = task.model_id
         cands = [
             w
             for w in self._live_workers()
-            if mid is None or self.memories[w].can_host(mid)
+            if (mid is None or self.memories[w].can_host(mid))
+            and self._reachable(from_worker, w)
         ]
         if not cands:
             return None
-        reader = self._live_origin(js.origin)
-        assert reader is not None  # cands nonempty => a serving worker exists
+        reader = None
+        if from_worker is not None and self._serving(from_worker):
+            reader = from_worker  # the failing-over sender reads its own view
+        if reader is None:
+            reader = self._live_origin(js.origin)
+        if reader is None or not self._reachable(from_worker, reader):
+            reader = cands[0]
         sstv = self.sst.view(reader, self._now)
+        locs, sizes = self._recovery_inputs(js, tid)
+        choice = self.scheduler.select_recovery_worker(
+            js.job, tid, self._now, sstv, locs, sizes, cands
+        )
+        if choice is not None:
+            return choice
 
         def est(w: int) -> Tuple[float, int]:
             start = max(self._now, sstv[w].ft_estimate_s)
@@ -1485,25 +1693,34 @@ class Simulation:
 
         return min(cands, key=est)
 
-    def _ship_inputs(self, js: _JobState, tid: str) -> None:
+    def _ship_inputs(
+        self, js: _JobState, tid: str, from_worker: Optional[int] = None
+    ) -> None:
         """(Re-)stage a recovered task: re-run producers whose outputs
-        died, pick a serving target, re-home its prefetch intent, and ship
-        whatever inputs are already available; the rest arrive as their
-        producers (re-)complete."""
+        died (or sit across an open cut — the recovering side cannot tell
+        the difference), pick a serving target on ``from_worker``'s side,
+        re-home its prefetch intent, and ship whatever inputs are already
+        available; the rest arrive as their producers (re-)complete."""
         run = js.tasks[tid]
         dfg = js.job.dfg
         preds = list(dfg.preds[tid])
         for p in preds:
             rp = js.tasks[p]
-            if rp.finished is not None and not self._output_alive(rp):
-                self._reexec_producer(js, p)
+            if rp.finished is not None and (
+                not self._output_alive(rp)
+                or not self._reachable(from_worker, rp.worker)
+            ):
+                # Groups are equivalence classes, so an output reachable
+                # from ``from_worker`` is reachable from any target picked
+                # on the same side.
+                self._reexec_producer(js, p, from_worker=from_worker)
         if (
             not self.scheduler.plans_at_arrival
             and preds
             and not all(js.tasks[p].finished is not None for p in preds)
         ):
             return  # JIT re-assigns when the last producer (re-)completes
-        target = self._recovery_target(js, tid)
+        target = self._recovery_target(js, tid, from_worker=from_worker)
         if target is None:
             mid = dfg.tasks[tid].model_id
             if not self._fleet_can_serve(mid):
@@ -1511,16 +1728,20 @@ class Simulation:
                     f"task {tid!r} (model {mid}) fits no current or "
                     f"future fleet member; the job can never finish"
                 )
-            # A capable worker will (re)join; retry then.
+            # A capable worker will (re)join — or the cut will heal
+            # (validate_schedule guarantees every partition heals); retry
+            # then, without the cut-side restriction (by the retry the
+            # failing-over sender's identity no longer matters).
             self._post(
-                self._now + 0.5, "reroute_retry", js, tid, run.generation
+                self._now + 0.5, "reroute_retry", js, tid, run.generation,
+                from_worker,
             )
             return
         assert js.adfg is not None
         js.adfg[tid] = target
         task = dfg.tasks[tid]
         if self.prefetch_plane is not None and task.model_id is not None:
-            ctrl = self.cluster.network.transfer_time(INTENT_WIRE_BYTES)
+            ctrl = self._xfer_time(INTENT_WIRE_BYTES, from_worker, target)
             orphan = self._orphaned_intents.pop((js.job.job_id, tid), None)
             if orphan is not None:
                 intent = self.prefetch_plane.rehome(orphan, target, self._now)
@@ -1531,13 +1752,17 @@ class Simulation:
             if intent is not None:
                 self._post(self._now + ctrl, "intent", target, [intent])
         if not preds:
-            origin = self._live_origin(js.origin)
-            if origin is None:
-                origin = target  # whole fleet gone except the target
-            delay = 0.0 if target == origin else self.profiles.td_input(task)
+            origin = self._entry_origin(js, target)
+            delay = (
+                0.0
+                if target == origin
+                else self._xfer_time(
+                    task.input_bytes, origin, target, register=True
+                )
+            )
             self._post(
                 self._now + delay, "input", js, tid, "", target,
-                run.generation,
+                run.generation, origin,
             )
             return
         ready = [p for p in preds if js.tasks[p].finished is not None]
@@ -1548,21 +1773,42 @@ class Simulation:
             if js.tasks[p].worker != target:
                 delay = max(
                     delay,
-                    self.cluster.network.transfer_time(
-                        dfg.tasks[p].output_bytes
+                    self._xfer_time(
+                        dfg.tasks[p].output_bytes, js.tasks[p].worker,
+                        target, register=True,
                     ),
                 )
         for p in ready:
             self._post(
                 self._now + delay, "input", js, tid, p, target,
-                run.generation,
+                run.generation, js.tasks[p].worker,
             )
 
-    def _on_reroute_retry(self, js: _JobState, tid: str, gen: int) -> None:
+    def _entry_origin(self, js: _JobState, target: int) -> int:
+        """A live holder of the job's entry payload the ``target`` can
+        reach: the preferred origin when possible, else the nearest
+        serving same-side replica, else the target itself (whole side
+        gone except the target)."""
+        n = self.cluster.n_workers
+        for d in range(n):
+            w = (js.origin + d) % n
+            if self._serving(w) and self._reachable(target, w):
+                return w
+        return target
+
+    def _on_reroute_retry(
+        self,
+        js: _JobState,
+        tid: str,
+        gen: int,
+        from_worker: Optional[int] = None,
+    ) -> None:
         run = js.tasks[tid]
         if gen != run.generation or run.finished is not None:
             return
-        self._ship_inputs(js, tid)
+        # Re-resolve the cut side at fire time: a healed partition lifts
+        # the restriction because ``_reachable`` consults current state.
+        self._ship_inputs(js, tid, from_worker=from_worker)
 
     # -- gossip plane (decentralized SST, §5.2) ------------------------------------
     def _on_gossip(self, worker: int, session: int) -> None:
@@ -1574,8 +1820,10 @@ class Simulation:
         if session != self._session[worker] or not self._up[worker]:
             return
         for peer, updates, nbytes in self.sst.exchange(worker, self._now):
-            delay = self.cluster.network.transfer_time(nbytes)
-            self._post(self._now + delay, "gossip_rx", peer, updates)
+            delay = self._xfer_time(nbytes, worker, peer)
+            self._post(
+                self._now + delay, "gossip_rx", peer, updates, worker
+            )
         self._post(self._now + self.gossip.period_s, "gossip", worker, session)
 
     def _on_heartbeat(self, worker: int, session: int) -> None:
@@ -1609,8 +1857,19 @@ class Simulation:
         if not self._up[worker]:
             return
         mem = self.memories[worker]
+        # Expected-completion advertisement: the model on the pipe and its
+        # absolute ETA ride every cache publication, so remote planners can
+        # discount an in-flight fetch by its *remaining* fraction instead
+        # of a confidence constant.
+        fm, eta = -1, 0.0
+        if self._fetch_busy[worker] and self._fetch_model[worker] is not None:
+            fm = self._fetch_model[worker]
+            eta = self._fetch_ends[worker]
         if self.prefetch_plane is None:
-            self.sst.update_cache(worker, mem.bitmap, mem.free_bytes, self._now)
+            self.sst.update_cache(
+                worker, mem.bitmap, mem.free_bytes, self._now,
+                fetch_model_id=fm, fetch_eta_s=eta,
+            )
             return
         # Under the prefetch plane the advertisement is honest about the
         # pipe: a model still in flight is not usable residency (tasks
@@ -1619,9 +1878,12 @@ class Simulation:
         # remainder of the fetch.  AVC counts undemanded speculative
         # contents as available — they are the cheapest victims.
         bm = mem.bitmap
-        if self._fetch_busy[worker] and self._fetch_model[worker] is not None:
-            bm &= ~(1 << self._fetch_model[worker])
-        self.sst.update_cache(worker, bm, mem.available_bytes, self._now)
+        if fm >= 0:
+            bm &= ~(1 << fm)
+        self.sst.update_cache(
+            worker, bm, mem.available_bytes, self._now,
+            fetch_model_id=fm, fetch_eta_s=eta,
+        )
         self.sst.update_intent(
             worker,
             mem.bitmap | self.prefetch_plane.advertised_bits(worker),

@@ -16,6 +16,16 @@ drain schedule, for every scheduler:
 4. **Counters are sane** — churn events applied never exceed the
    schedule, bounces/rescues are non-negative.
 
+Partition schedules add the asymmetric-reachability family
+(``check_partition_invariants``):
+
+5. **Partitions are survivable** — no task commits twice across a heal
+   (the completion ledger of family 2, under cuts), no worker's row
+   resurrects with a stale epoch (a partitioned worker never bumped its
+   epoch, so post-heal merges win on version alone), and every
+   partitioned-then-healed worker reconverges to ALIVE in every live
+   reader's view within bounded gossip rounds of the final heal.
+
 Run as a script for the CI chaos-smoke job (30 s seeded scenario across
 all schedulers, exits non-zero on any violation)::
 
@@ -33,12 +43,14 @@ from repro.core import (
     ProfileRepository,
     fleet,
 )
+from repro.core.state import ALIVE
 from repro.sim import (
     ChurnEvent,
     SimResult,
     Simulation,
     churn_schedule,
     fleet_scaled_rate,
+    partition_schedule,
     poisson_workload,
     validate_schedule,
 )
@@ -57,6 +69,23 @@ SCRIPTED_SCHEDULE: Tuple[ChurnEvent, ...] = (
 )
 
 
+def scripted_partition_schedule(n_workers: int) -> List[ChurnEvent]:
+    """Two cuts with heals: an uneven split long enough for cross-cut
+    leases to expire (dead_after_s=4 < 6 s outage), then a short blip
+    that heals before anyone is declared dead — both sides of the
+    detection race.  The split is the rack boundary on even fleets
+    (front/back half), which matches the ``rack2`` preset's racks."""
+    half = n_workers // 2
+    a = tuple(range(half))
+    b = tuple(range(half, n_workers))
+    return [
+        ChurnEvent(time=8.0, kind="partition", groups=(a, b)),
+        ChurnEvent(time=14.0, kind="heal"),
+        ChurnEvent(time=22.0, kind="partition", groups=(a, b)),
+        ChurnEvent(time=24.0, kind="heal"),
+    ]
+
+
 def run_churn_sim(
     scheduler: str = "navigator",
     fleet_name: str = "uniform",
@@ -69,8 +98,11 @@ def run_churn_sim(
     lease: Optional[LeaseConfig] = LeaseConfig(),
     prefetch: Optional[PrefetchConfig] = None,
     record_events: bool = False,
+    return_sim: bool = False,
 ):
-    """Build and run one churn scenario; returns (result, jobs, schedule)."""
+    """Build and run one churn scenario; returns (result, jobs, schedule),
+    plus the finished ``Simulation`` when ``return_sim`` is set (the
+    partition checker inspects the metadata plane post-run)."""
     cluster = fleet(fleet_name)
     profiles = ProfileRepository(cluster, MODELS)
     dfgs = paper_dfgs()
@@ -96,6 +128,8 @@ def run_churn_sim(
         seed=sim_seed,
     )
     res = sim.run(jobs)
+    if return_sim:
+        return res, jobs, schedule, sim
     return res, jobs, schedule
 
 
@@ -144,17 +178,89 @@ def check_invariants(
     # 4. Counter sanity.
     assert res.bounces >= 0 and res.tasks_rescued >= 0
     assert res.outputs_recovered >= 0
-    applied = res.churn_crashes + res.churn_joins + res.churn_drains
+    applied = (
+        res.churn_crashes
+        + res.churn_joins
+        + res.churn_drains
+        + res.churn_partitions
+        + res.churn_heals
+    )
     assert applied <= len(schedule), "more churn applied than scheduled"
     kinds = [e.kind for e in schedule if e.time <= res.horizon]
     assert res.churn_crashes <= kinds.count("crash")
     assert res.churn_joins <= kinds.count("join")
     assert res.churn_drains <= kinds.count("drain")
+    assert res.churn_partitions <= kinds.count("partition")
+    assert res.churn_heals <= res.churn_partitions, (
+        "more heals than cuts applied"
+    )
+    assert res.net_local_transfers >= 0
+    assert res.net_cross_transfers >= res.net_contended_transfers >= 0
+
+
+def check_partition_invariants(
+    res: SimResult,
+    jobs,
+    schedule: Sequence[ChurnEvent],
+    sim: Simulation,
+    reconverge_s: float = 3.0,
+) -> None:
+    """Family 5: the asymmetric-reachability properties a partition
+    schedule must not break (run after ``check_invariants``)."""
+    # Every cut that fired before the run ended was healed by then too
+    # (a heal scheduled past the last job completion never processes, so
+    # only assert balance once the horizon covers the final heal).
+    heal_times = [e.time for e in schedule if e.kind == "heal"]
+    if heal_times and res.horizon >= max(heal_times):
+        assert res.churn_partitions == res.churn_heals, (
+            f"run ended with an open cut: {res.churn_partitions} cuts, "
+            f"{res.churn_heals} heals"
+        )
+
+    # No stale-epoch resurrection: a partitioned worker never died, so its
+    # epoch only moved through real crash/drain rejoins — and no reader's
+    # replica carries an epoch ahead of the owner's ground truth.
+    churned = {
+        e.worker for e in schedule if e.kind in ("crash", "drain", "join")
+    }
+    truth = sim.sst.view(None, res.horizon)
+    for w in range(res.n_workers):
+        if w not in churned:
+            assert truth[w].epoch == 0, (
+                f"worker {w} bumped its epoch to {truth[w].epoch} without "
+                f"ever crashing — partitions must not look like deaths"
+            )
+    for reader in range(res.n_workers):
+        if not sim._up[reader]:
+            continue
+        for w, row in enumerate(sim.sst.view(reader, res.horizon)):
+            assert row.epoch <= truth[w].epoch, (
+                f"reader {reader} holds epoch {row.epoch} for worker {w}, "
+                f"ahead of ground truth {truth[w].epoch}"
+            )
+
+    # Reconvergence: once the final heal is ``reconverge_s`` in the past
+    # (heartbeat relay across the healed cut needs a few gossip rounds),
+    # every live reader classifies every live worker ALIVE again.
+    last_heal = max(
+        (e.time for e in schedule if e.kind == "heal"), default=0.0
+    )
+    if res.horizon < last_heal + reconverge_s:
+        return  # run ended inside the convergence window; nothing to assert
+    live = [w for w in range(res.n_workers) if sim._up[w]]
+    for reader in live:
+        view = sim.sst.view(reader, res.horizon)
+        for w in live:
+            assert view[w].liveness == ALIVE, (
+                f"{reconverge_s} s after the last heal, reader {reader} "
+                f"still classifies worker {w} as {view[w].liveness}"
+            )
 
 
 def main() -> int:
     """CI chaos-smoke: a 30 s seeded generated schedule plus the scripted
-    scenario, across every scheduler, on the heterogeneous fleet."""
+    crash/drain and partition scenarios, across every scheduler, on the
+    heterogeneous and rack fleets."""
     duration = 30.0
     failures = 0
     generated = churn_schedule(
@@ -187,6 +293,35 @@ def main() -> int:
                     f"reexec={res.outputs_recovered} "
                     f"bounces={res.bounces} {verdict}"
                 )
+        # Partition scenario: scripted rack-boundary cuts on the flat
+        # uniform fleet and the 2-rack oversubscribed preset, with the
+        # full asymmetric-reachability invariant family.
+        for fleet_name in ("uniform", "rack2"):
+            n = fleet(fleet_name).n_workers
+            schedule = scripted_partition_schedule(n)
+            res, jobs, schedule, sim = run_churn_sim(
+                scheduler=policy,
+                fleet_name=fleet_name,
+                schedule=schedule,
+                duration=duration,
+                prefetch=PrefetchConfig(),
+                return_sim=True,
+            )
+            try:
+                check_invariants(res, jobs, schedule)
+                check_partition_invariants(res, jobs, schedule, sim)
+                verdict = "ok"
+            except AssertionError as exc:
+                failures += 1
+                verdict = f"FAIL: {exc}"
+            print(
+                f"chaos-smoke {policy:10s} partition {fleet_name:8s} "
+                f"jobs={len(res.records)}/{len(jobs)} "
+                f"cuts={res.churn_partitions} heals={res.churn_heals} "
+                f"rescued={res.tasks_rescued} "
+                f"reexec={res.outputs_recovered} "
+                f"xrack={res.net_cross_transfers} {verdict}"
+            )
     return 1 if failures else 0
 
 

@@ -13,6 +13,7 @@ from repro.core import (
     ALIVE,
     ClusterSpec,
     DEAD,
+    fleet,
     GB,
     GossipConfig,
     Job,
@@ -580,3 +581,100 @@ def test_validate_schedule_rejects_bad_sequences():
         )
     with pytest.raises(ValueError):
         ChurnEvent(1.0, "explode", 0)
+
+
+# --------------------------------------------------------------------------
+# Recovery targeting: full Navigator cost instead of the dispatcher's
+# greedy earliest-start rule (ROADMAP follow-up regression)
+# --------------------------------------------------------------------------
+def _warm_rows(n, ft=None):
+    out = [SSTRow(cache_bitmap=0xFF, free_cache_bytes=16 * GB)
+           for _ in range(n)]
+    for w, f in (ft or {}).items():
+        out[w].ft_estimate_s = f
+    return out
+
+
+def test_recovery_baselines_have_no_opinion():
+    """Non-Navigator schedulers defer to the dispatcher's greedy rule."""
+    from repro.core import make_scheduler
+
+    cluster = fleet("mixed")
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    for name in ("hash", "heft", "jit"):
+        sched = make_scheduler(name, p)
+        assert sched.select_recovery_worker(
+            job, "opt_ingest", 0.0, _warm_rows(5), {}, {}, [0, 1]
+        ) is None
+
+
+def test_recovery_full_cost_beats_greedy_on_worker_speed():
+    """Greedy earliest-start picks the idle EDGE worker; the full cost
+    weighs R(t, w) and pays a short queue wait on the A10 instead."""
+    cluster = fleet("mixed")  # (A10 2.0x, L4 1.6x, T4, T4, EDGE 0.5x)
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    sched = NavigatorScheduler(p)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    rows = _warm_rows(5, ft={0: 0.5, 1: 5.0, 2: 5.0, 3: 5.0, 4: 0.0})
+    cands = [0, 4]
+    # The dispatcher's greedy rule: earliest start, model-fetch aware only.
+    greedy = min(cands, key=lambda w: (rows[w].ft_estimate_s, w))
+    assert greedy == 4
+    choice = sched.select_recovery_worker(
+        job, "opt_ingest", 0.0, rows, {}, {}, cands
+    )
+    # 0.5 s wait + 0.80/2.0 run on the A10 beats 0 + 0.80/0.5 on EDGE.
+    assert choice == 0
+
+
+def test_recovery_full_cost_ships_to_input_holder_across_racks():
+    """With a large surviving input parked in rack 1, the full cost's
+    path-aware re-staging term keeps recovery beside the data; greedy
+    (start-time ties broken by index) would drag it across the spine."""
+    cluster = fleet("rack2")
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    sched = NavigatorScheduler(p)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+    rows = _warm_rows(8)
+    choice = sched.select_recovery_worker(
+        job, "opt_ingest", 0.0, rows,
+        {"prev": 5}, {"prev": 0.2 * GB}, list(range(8)),
+    )
+    assert choice == 5
+
+
+def test_recovery_routes_through_navigator_hook():
+    """End to end: every stranded task's new home is chosen by the
+    Navigator hook (never the greedy fallback) on a crash schedule."""
+    cluster = fleet("mixed")
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    jobs = poisson_workload(paper_dfgs(), 2.0, 40.0, seed=3)
+    sim = Simulation(
+        cluster, p, MODELS, scheduler="navigator", seed=1,
+        churn=[
+            ChurnEvent(time=6.0, kind="crash", worker=1),
+            ChurnEvent(time=20.0, kind="join", worker=1),
+        ],
+    )
+    calls = []
+    orig = sim.scheduler.select_recovery_worker
+
+    def spy(*args, **kwargs):
+        choice = orig(*args, **kwargs)
+        calls.append(choice)
+        return choice
+
+    sim.scheduler.select_recovery_worker = spy
+    res = sim.run(jobs)
+    assert len(res.records) == len(jobs)
+    assert calls, "crash stranded no work: hook never consulted"
+    assert all(c is not None for c in calls)

@@ -94,11 +94,12 @@ def test_sst_row_roundtrip():
     )
     packed = pack_row(row, queue_len=7)
     assert packed.shape == (ROW_WIDTH,)
-    assert packed.nbytes == 40  # ≤ one 64-byte cache line (Fig. 5)
+    assert packed.nbytes == 48  # ≤ one 64-byte cache line (Fig. 5)
     back = unpack_rows(packed[None])[0]
     assert back.ft_estimate_s == pytest.approx(row.ft_estimate_s)
     assert back.cache_bitmap == row.cache_bitmap
     assert back.free_cache_bytes == pytest.approx(row.free_cache_bytes, rel=1e-6)
+    assert back.fetch_model_id == -1 and back.fetch_eta_s == 0.0
 
 
 def test_sst_allgather_replicates_rows():

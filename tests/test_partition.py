@@ -1,0 +1,202 @@
+"""Partition tolerance: cuts and heals through the simulator, the
+asymmetric-reachability lease semantics, and the chaos invariant family
+(no double commit, no stale-epoch resurrection, bounded reconvergence,
+bit-exact determinism)."""
+
+import pytest
+
+from chaos import (
+    check_invariants,
+    check_partition_invariants,
+    run_churn_sim,
+    scripted_partition_schedule,
+)
+from repro.core import LeaseConfig, PrefetchConfig, SharedStateTable
+from repro.core.state import ALIVE, DEAD
+from repro.sim import ChurnEvent, partition_schedule, validate_schedule
+
+
+# -- schedule generation ------------------------------------------------------
+
+def test_partition_schedule_well_formed():
+    sched = partition_schedule(8, duration_s=60.0, mtbp_s=20.0, seed=3)
+    validate_schedule(sched, 8)
+    kinds = [e.kind for e in sched]
+    assert kinds.count("partition") == kinds.count("heal") > 0
+    # Cuts never overlap and every cut heals.
+    open_cut = False
+    for e in sched:
+        if e.kind == "partition":
+            assert not open_cut
+            open_cut = True
+            assert e.groups is not None and len(e.groups) >= 2
+        elif e.kind == "heal":
+            assert open_cut
+            open_cut = False
+    assert not open_cut
+
+
+def test_partition_schedule_deterministic():
+    a = partition_schedule(8, 60.0, mtbp_s=20.0, seed=5)
+    b = partition_schedule(8, 60.0, mtbp_s=20.0, seed=5)
+    assert a == b
+    c = partition_schedule(8, 60.0, mtbp_s=20.0, seed=6)
+    assert a != c
+
+
+def test_unhealed_partition_rejected():
+    sched = [ChurnEvent(time=5.0, kind="partition", groups=((0, 1), (2, 3)))]
+    with pytest.raises(ValueError):
+        validate_schedule(sched, 4)
+
+
+# -- central-plane lease asymmetry -------------------------------------------
+
+def test_sst_partition_lease_disagreement():
+    """Across a cut, readers classify each other from the frozen pre-cut
+    heartbeat; same-side verdicts stay fresh — per-reader disagreement."""
+    lease = LeaseConfig()
+    sst = SharedStateTable(4, lease=lease)
+    for w in range(4):
+        sst.heartbeat(w, 10.0)
+        sst.push(w, 10.0)
+    sst.set_partition([0, 0, 1, 1], now=10.0)
+    # Keep side-local heartbeats fresh well past dead_after_s.
+    later = 10.0 + lease.dead_after_s + 1.0
+    for w in range(4):
+        sst.heartbeat(w, later)
+        sst.push(w, later)
+    for reader in range(4):
+        view = sst.view(reader, later)
+        for w in range(4):
+            same_side = (reader < 2) == (w < 2)
+            assert view[w].liveness == (ALIVE if same_side else DEAD), (
+                f"reader {reader} sees worker {w} as {view[w].liveness}"
+            )
+    # Healing restores symmetric ALIVE verdicts immediately (the central
+    # plane replays the owner's real heartbeats; gossip takes rounds).
+    sst.set_partition(None, later)
+    for reader in range(4):
+        assert all(r.liveness == ALIVE for r in sst.view(reader, later))
+
+
+def test_sst_partition_short_blip_never_suspects():
+    """A cut shorter than suspect_after_s is invisible to the lease."""
+    lease = LeaseConfig()
+    sst = SharedStateTable(2, lease=lease)
+    for w in range(2):
+        sst.heartbeat(w, 5.0)
+        sst.push(w, 5.0)
+    sst.set_partition([0, 1], now=5.0)
+    t = 5.0 + lease.suspect_after_s * 0.5
+    assert sst.view(0, t)[1].liveness == ALIVE
+
+
+# -- simulator end-to-end -----------------------------------------------------
+
+FLEETS = ("uniform", "rack2")
+POLICIES = ("navigator", "hash")
+
+
+@pytest.mark.parametrize("fleet_name", FLEETS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_scripted_partition_invariants(policy, fleet_name):
+    """The scripted rack-boundary cut scenario upholds every churn and
+    partition invariant: no job or task lost, no double commit across a
+    heal, no stale-epoch resurrection, bounded reconvergence."""
+    from repro.core import fleet
+
+    n = fleet(fleet_name).n_workers
+    schedule = scripted_partition_schedule(n)
+    res, jobs, schedule, sim = run_churn_sim(
+        scheduler=policy,
+        fleet_name=fleet_name,
+        schedule=schedule,
+        duration=30.0,
+        prefetch=PrefetchConfig(),
+        return_sim=True,
+    )
+    check_invariants(res, jobs, schedule)
+    check_partition_invariants(res, jobs, schedule, sim)
+    assert res.churn_partitions == 2 and res.churn_heals == 2
+
+
+def test_generated_partition_invariants():
+    """Seeded generated cut schedules (not just the scripted one) uphold
+    the same family, including cuts interleaved with gossip."""
+    from repro.core import fleet
+
+    n = fleet("rack2").n_workers
+    for seed in (0, 7):
+        schedule = partition_schedule(
+            n, duration_s=40.0, mtbp_s=15.0, outage_s=5.0, seed=seed
+        )
+        res, jobs, schedule, sim = run_churn_sim(
+            scheduler="navigator",
+            fleet_name="rack2",
+            schedule=schedule,
+            duration=40.0,
+            seed=seed + 1,
+            return_sim=True,
+        )
+        check_invariants(res, jobs, schedule)
+        check_partition_invariants(res, jobs, schedule, sim)
+
+
+def test_partition_with_crash_overlap():
+    """A worker that crashes *while partitioned away* must recover through
+    the normal epoch-bump path; peers that merely presumed it dead across
+    the cut must not have committed its tasks twice."""
+    schedule = [
+        ChurnEvent(time=6.0, kind="partition",
+                   groups=((0, 1, 2, 3), (4, 5, 6, 7))),
+        ChurnEvent(time=8.0, kind="crash", worker=6),
+        ChurnEvent(time=13.0, kind="heal"),
+        ChurnEvent(time=18.0, kind="join", worker=6),
+    ]
+    res, jobs, schedule, sim = run_churn_sim(
+        scheduler="navigator",
+        fleet_name="rack2",
+        schedule=schedule,
+        duration=30.0,
+        return_sim=True,
+    )
+    check_invariants(res, jobs, schedule)
+    check_partition_invariants(res, jobs, schedule, sim)
+    truth = sim.sst.view(None, res.horizon)
+    assert truth[6].epoch == 1  # exactly the one real rejoin
+
+
+def test_partition_bit_exact_determinism():
+    """Same seeds, same schedule → byte-identical event logs, on the rack
+    fleet with cuts, heals, gossip, and prefetch all active."""
+    logs = []
+    for _ in range(2):
+        n = 8
+        res, jobs, schedule = run_churn_sim(
+            scheduler="navigator",
+            fleet_name="rack2",
+            schedule=scripted_partition_schedule(n),
+            duration=30.0,
+            prefetch=PrefetchConfig(),
+            record_events=True,
+        )
+        logs.append((res.event_log, res.mean_latency, res.tasks_rescued))
+    assert logs[0] == logs[1]
+
+
+def test_partition_forces_failover_work():
+    """The long scripted cut actually exercises the failover machinery —
+    the invariants above must not be vacuously true.  Hash placement
+    ignores racks, so it keeps shipping across the spine into the cut and
+    must rescue or re-execute; the topology-aware navigator, by contrast,
+    mostly rides it out rack-locally."""
+    res, jobs, schedule = run_churn_sim(
+        scheduler="hash",
+        fleet_name="rack2",
+        schedule=scripted_partition_schedule(8),
+        duration=30.0,
+        prefetch=PrefetchConfig(),
+    )
+    assert res.churn_partitions == 2
+    assert (res.tasks_rescued + res.outputs_recovered + res.bounces) > 0

@@ -329,7 +329,7 @@ def test_sst_wire_row_carries_intent_bitmap():
         intent_bitmap=(1 << 63) | (1 << 5) | 3,
     )
     packed = pack_row(row)
-    assert packed.shape == (ROW_WIDTH,) and packed.nbytes == 40
+    assert packed.shape == (ROW_WIDTH,) and packed.nbytes == 48
     back = unpack_rows(packed[None])[0]
     assert back.intent_bitmap == row.intent_bitmap
     assert back.cache_bitmap == row.cache_bitmap
@@ -541,3 +541,104 @@ def test_gossip_plus_prefetch_sim_completes():
     ).run(jobs)
     assert len(res.records) == len(jobs)
     assert res.prefetch_stats.intents_issued > 0
+
+
+# --------------------------------------------------------------------------
+# expected-completion (fetch-ETA) advertisements: the discount scales
+# with the remaining transfer fraction (ROADMAP follow-up)
+# --------------------------------------------------------------------------
+def test_eta_discount_scales_with_remaining_fraction():
+    """Eq. 2 with an in-flight fetch advertisement: only the part of the
+    fetch outlasting the task's earliest start is still on the critical
+    path — a nearly-done fetch is nearly free, a just-started one costs
+    the full fetch."""
+    profiles = make_profiles()
+    sched = NavigatorScheduler(
+        profiles, NavigatorConfig(intent_confidence=0.9)
+    )
+    task = TaskSpec("t", 0.4, model_id=2)
+    fetch = profiles.td_model(2)
+    intent = 1 << 2
+
+    def cost(eta, start_hint=0.0):
+        return sched._td_model(
+            task, 0, 0, 16 * GB, intent, True, 2, eta, start_hint
+        )
+
+    nearly_done = cost(eta=0.05)
+    halfway = cost(eta=fetch / 2)
+    just_started = cost(eta=fetch)
+    assert nearly_done == pytest.approx(0.05)
+    assert nearly_done < halfway < just_started
+    assert just_started == pytest.approx(fetch)
+    # A fetch completing before the task could start costs nothing.
+    assert cost(eta=1.0, start_hint=2.0) == 0.0
+    # The ETA can never make the miss pricier than a cold fetch.
+    assert cost(eta=1e9) == fetch
+
+
+def test_eta_discount_beats_queued_confidence_when_nearly_done():
+    """A queued (not yet in-flight) intent only earns the constant
+    confidence discount; an in-flight fetch about to finish beats it."""
+    profiles = make_profiles()
+    conf = 0.5
+    sched = NavigatorScheduler(
+        profiles, NavigatorConfig(intent_confidence=conf)
+    )
+    task = TaskSpec("t", 0.4, model_id=2)
+    fetch = profiles.td_model(2)
+    intent = 1 << 2
+    queued = sched._td_model(task, 0, 0, 16 * GB, intent, True, -1, 0.0, 0.0)
+    assert queued == pytest.approx(fetch * (1.0 - conf))
+    inflight = sched._td_model(
+        task, 0, 0, 16 * GB, intent, True, 2, 0.01, 0.0
+    )
+    assert inflight < queued
+
+
+def test_plan_places_on_nearly_done_fetcher():
+    """Two workers both advertise an in-flight fetch of the needed model;
+    the planner picks the one whose fetch is almost done."""
+    profiles = make_profiles()
+    dfg = DFG("one4", [TaskSpec("t", 0.4, model_id=2)], [])
+    profiles.register(dfg)
+    job = Job(0, dfg, 0.0)
+    fetch = profiles.td_model(2)
+    sst = _rows()
+    for w, eta in ((3, 0.05), (4, fetch)):  # nearly done vs just started
+        sst[w].intent_bitmap = 1 << 2
+        sst[w].fetch_model_id = 2
+        sst[w].fetch_eta_s = eta
+    sched = NavigatorScheduler(
+        profiles, NavigatorConfig(intent_confidence=0.9)
+    )
+    adfg = sched.plan(job, 0.0, 0, sst)
+    assert adfg["t"] == 3
+
+
+def test_sim_advertises_fetch_eta_while_pipe_busy():
+    """The engine's cache publication carries the in-flight fetch id and
+    its expected completion on the wire whenever the pipe is busy."""
+    cluster = ClusterSpec(n_workers=3)
+    profiles = make_profiles(cluster)
+    jobs = poisson_workload(paper_dfgs(), 1.0, 20.0, seed=2)
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator",
+        prefetch=PrefetchConfig(), seed=1,
+    )
+    seen = []
+    orig = sim.sst.update_cache
+
+    def spy(worker, bitmap, free, now=0.0, fetch_model_id=-1,
+            fetch_eta_s=0.0):
+        if fetch_model_id >= 0:
+            seen.append((worker, fetch_model_id, fetch_eta_s, now))
+        return orig(worker, bitmap, free, now, fetch_model_id, fetch_eta_s)
+
+    sim.sst.update_cache = spy
+    res = sim.run(jobs)
+    assert len(res.records) == len(jobs)
+    assert seen, "no fetch-ETA advertisement ever published"
+    for _, mid, eta, now in seen:
+        assert 0 <= mid < 64
+        assert eta >= now  # expected completion lies in the future
