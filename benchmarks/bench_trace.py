@@ -1,15 +1,26 @@
 """Fig. 9: bursty production-trace replay (statistically matched trace;
 see DESIGN.md §7) — completion times under unpredictable arrivals.
 
-``REPRO_BENCH_SMOKE=1`` shrinks the horizon to a CI-sized smoke run."""
+``REPRO_BENCH_SMOKE=1`` shrinks the horizon to a CI-sized smoke run.
+
+``--explain [TASK_ID]`` re-runs the paper-config replay with the flight
+recorder on and prints, per job, the critical-path latency breakdown
+(queue / input-transfer / model-fetch-wait / compute / output-ship, which
+sum to the measured JCT) plus, for the chosen task, every placement
+decision with its per-candidate Eq. 2 cost vector — "why worker 3 and
+not worker 5", answered from the trace alone (see EXPERIMENTS.md
+"Reading a trace").  ``--export DIR`` additionally writes the
+deterministic JSONL and Chrome-trace/Perfetto JSON exports."""
 
 from __future__ import annotations
 
+import argparse
 import os
-from typing import List, Tuple
+import sys
+from typing import List, Optional, Tuple
 
 from benchmarks.common import save_json
-from repro.core import ClusterSpec, ProfileRepository
+from repro.core import ClusterSpec, ProfileRepository, SimReport
 from repro.sim import Simulation, bursty_trace_workload
 from repro.workflows import MODELS, paper_dfgs
 
@@ -53,6 +64,81 @@ def run() -> List[Tuple[str, float, float]]:
     return rows
 
 
-if __name__ == "__main__":
+def _traced_run(scheduler: str, duration_s: float) -> SimReport:
+    cluster = ClusterSpec(n_workers=5)
+    dfgs = paper_dfgs()
+    jobs = bursty_trace_workload(
+        dfgs, base_rate_per_s=0.8, duration_s=duration_s, seed=3
+    )
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in dfgs:
+        profiles.register(d)
+    res = Simulation(
+        cluster, profiles, MODELS, scheduler=scheduler, seed=1, trace=True
+    ).run(jobs)
+    return SimReport(res)
+
+
+def explain(
+    task_id: Optional[str],
+    scheduler: str = "navigator",
+    duration_s: float = 60.0,
+    export_dir: Optional[str] = None,
+    max_jobs: int = 10,
+) -> None:
+    report = _traced_run(scheduler, duration_s)
+    res = report.result
+    print(f"# {scheduler}: {len(res.records)} jobs over {duration_s:.0f}s "
+          f"(5-worker paper config, seed 1)")
+    agg = report.latency_breakdown()
+    shares = agg.get("shares", {})
+    print("# aggregate critical-path shares: "
+          + "  ".join(f"{k.removesuffix('_s')}={v:.1%}"
+                      for k, v in shares.items()))
+    print(f"{'job':>5} {'jct_s':>9} {'queue':>8} {'in_xfer':>8} "
+          f"{'fetch':>8} {'compute':>8} {'out_ship':>8}  critical path")
+    for r in res.records[:max_jobs]:
+        bd = report.latency_breakdown(r.job_id)
+        assert abs(bd.components_sum_s - bd.jct_s) < 1e-6
+        path = "→".join(t for t, _ in reversed(bd.critical_path))
+        print(f"{bd.job_id:>5} {bd.jct_s:>9.4f} {bd.queue_s:>8.4f} "
+              f"{bd.input_transfer_s:>8.4f} {bd.fetch_wait_s:>8.4f} "
+              f"{bd.compute_s:>8.4f} {bd.output_ship_s:>8.4f}  {path}")
+    if len(res.records) > max_jobs:
+        print(f"  ... {len(res.records) - max_jobs} more jobs "
+              f"(--jobs N to widen)")
+    if task_id is not None:
+        print()
+        print(report.explain(task_id))
+    if export_dir is not None:
+        os.makedirs(export_dir, exist_ok=True)
+        jsonl = os.path.join(export_dir, f"trace_{scheduler}.jsonl")
+        chrome = os.path.join(export_dir, f"trace_{scheduler}.chrome.json")
+        report.recorder.write(jsonl, chrome)
+        print(f"# exported {jsonl} and {chrome}", file=sys.stderr)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--explain", nargs="?", const="", metavar="TASK_ID",
+                    default=None,
+                    help="print per-job latency breakdowns; with a TASK_ID, "
+                         "also that task's placement provenance")
+    ap.add_argument("--scheduler", default="navigator", choices=SCHEDULERS)
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="replay horizon for --explain (seconds)")
+    ap.add_argument("--jobs", type=int, default=10,
+                    help="how many per-job breakdown rows to print")
+    ap.add_argument("--export", metavar="DIR", default=None,
+                    help="write JSONL + Chrome-trace exports to DIR")
+    args = ap.parse_args(argv)
+    if args.explain is not None or args.export is not None:
+        explain(args.explain or None, args.scheduler, args.duration,
+                args.export, args.jobs)
+        return
     for name, us, derived in run():
         print(f"{name},{us:.1f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

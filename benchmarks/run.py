@@ -12,8 +12,13 @@ from __future__ import annotations
 import json
 import os
 import re
+import subprocess
 import sys
 import time
+
+# Version of the trajectory-file layout: bump when the shape of the
+# per-suite payloads changes so downstream tooling can dispatch on it.
+TRAJECTORY_SCHEMA_VERSION = 1
 
 
 SUITES = [
@@ -47,9 +52,24 @@ def _summarize(rows):
     }
 
 
+def _git_sha():
+    """Short SHA of HEAD, or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
 def _merge_trajectory(per_suite):
-    """Update BENCH_trajectory.json in place, suite by suite, so partial
-    runs never clobber other suites' history."""
+    """Update BENCH_trajectory.json in place, suite by suite: re-running
+    a suite *replaces* its cell (idempotent merge), and partial runs
+    never clobber other suites' history.  Each cell is stamped with the
+    git SHA it was measured at."""
     traj = {}
     if os.path.exists(TRAJECTORY_PATH):
         try:
@@ -57,8 +77,12 @@ def _merge_trajectory(per_suite):
                 traj = json.load(f)
         except (OSError, ValueError):
             traj = {}
+    traj["schema_version"] = TRAJECTORY_SCHEMA_VERSION
+    sha = _git_sha()
     suites = traj.setdefault("suites", {})
     for suite, payload in per_suite.items():
+        if sha is not None:
+            payload = dict(payload, git_sha=sha)
         suites[suite] = payload
     with open(TRAJECTORY_PATH, "w") as f:
         json.dump(traj, f, indent=1, sort_keys=True)

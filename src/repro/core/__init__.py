@@ -42,6 +42,15 @@ from repro.core.scheduler import (
     make_scheduler,
 )
 from repro.core.sst_exchange import GossipConfig, GossipPlane
+from repro.core.telemetry import (
+    CandidateCost,
+    FlightRecorder,
+    MetricsRegistry,
+    PlacementDecision,
+    SimReport,
+    TraceConfig,
+    validate_schema,
+)
 from repro.core.state import (
     ALIVE,
     DEAD,
@@ -57,10 +66,12 @@ __all__ = [
     "ALIVE",
     "AcceleratorLink",
     "CacheStats",
+    "CandidateCost",
     "ClusterSpec",
     "DEAD",
     "DFG",
     "FLEETS",
+    "FlightRecorder",
     "GB",
     "GossipConfig",
     "GossipPlane",
@@ -73,10 +84,12 @@ __all__ = [
     "LinkSpec",
     "MB",
     "MLModel",
+    "MetricsRegistry",
     "NavigatorConfig",
     "NavigatorScheduler",
     "NetworkModel",
     "NetworkState",
+    "PlacementDecision",
     "PrefetchConfig",
     "PrefetchIntent",
     "PrefetchPlane",
@@ -88,12 +101,15 @@ __all__ = [
     "SUSPECT",
     "Scheduler",
     "SharedStateTable",
+    "SimReport",
     "TPU_V5E_CLUSTER",
     "TaskSpec",
     "Topology",
+    "TraceConfig",
     "WorkerProfile",
     "build_fleet",
     "fleet",
     "make_scheduler",
     "rack_topology",
+    "validate_schema",
 ]

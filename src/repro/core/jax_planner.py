@@ -89,7 +89,10 @@ def build_static_inputs(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("static", "config", "n_workers", "worker_speed"),
+    static_argnames=(
+        "static", "config", "n_workers", "worker_speed",
+        "return_components",
+    ),
 )
 def plan_vectorized(
     static: StaticPlanInputs,
@@ -112,8 +115,11 @@ def plan_vectorized(
     fetch_model: Optional[jax.Array] = None,   # (W,) in-flight fetch model
     # id per worker (−1 = none) — expected-completion intent lane
     fetch_eta: Optional[jax.Array] = None,     # (W,) absolute fetch ETA
-) -> Tuple[jax.Array, jax.Array]:
-    """Returns (assignment (T,) int32, planned_ft (T,) float32)."""
+    return_components: bool = False,  # also return stacked (T, W) Eq. 2
+    # component arrays (queue, at, td_model, intent discount, runtime,
+    # selection cost) for placement provenance — tracing-on path only
+) -> Tuple[jax.Array, ...]:
+    """Returns (assignment (T,) int32, planned_ft (T,) float32[, components])."""
     t_count = len(static.order)
     speed = (
         jnp.ones((n_workers,), jnp.float32)
@@ -130,6 +136,7 @@ def plan_vectorized(
     avc = avc0
     assign = []
     task_ft = []
+    comps: List[Tuple[jax.Array, ...]] = []
     mean_speed_inv = jnp.mean(1.0 / speed)
 
     for ti in range(t_count):
@@ -167,6 +174,7 @@ def plan_vectorized(
         x = jnp.maximum(ft, at)                               # line 8
         hit = jnp.zeros((n_workers,), bool)
         intent_m = jnp.zeros((n_workers,), bool)
+        undiscounted = None
         if mid < 0 or not config.use_model_locality:
             td_model = (
                 jnp.zeros((n_workers,), jnp.float32)
@@ -186,6 +194,7 @@ def plan_vectorized(
                 # catalogue means are maintained by the Python planner).
                 penalty = static.fetch_times[ti]
             miss_cost = static.fetch_times[ti] + jnp.where(fits, 0.0, penalty)
+            undiscounted = miss_cost
             if use_intents:
                 # Prefetch plane: intended models cost the undiscounted
                 # remainder of the fetch (core/prefetch.py).
@@ -237,6 +246,19 @@ def plan_vectorized(
             )
             w_min = jnp.where(use_alt, alt, w_min)
         ft_min = ftw[w_min]
+        if return_components:
+            base_td = (
+                td_model if undiscounted is None
+                else jnp.where(hit, 0.0, undiscounted)
+            )
+            comps.append((
+                ft,                                    # queue (pre-update)
+                jnp.broadcast_to(at, (n_workers,)),
+                td_model,
+                jnp.maximum(0.0, base_td - td_model),  # intent discount
+                r_w,
+                cost,
+            ))
         assign.append(w_min)
         task_ft.append(ft_min)
         ft = ft.at[w_min].set(ft_min)                         # line 12
@@ -247,6 +269,11 @@ def plan_vectorized(
                 -static.cached_sizes[ti] * newly
             )
             avc = jnp.maximum(avc, 0.0)
+    if return_components:
+        stacked = tuple(
+            jnp.stack([c[k] for c in comps]) for k in range(6)
+        )
+        return (jnp.stack(assign), jnp.stack(task_ft)) + stacked
     return jnp.stack(assign), jnp.stack(task_ft)
 
 
@@ -261,6 +288,11 @@ class JaxNavigatorPlanner:
         self.profiles = profiles
         self.config = config or NavigatorConfig()
         self._static: Dict[str, StaticPlanInputs] = {}
+        # Flight-recorder hook (see Scheduler.recorder): when set, plan()
+        # asks the kernel for the stacked Eq. 2 component arrays and
+        # records one PlacementDecision per task.  The jit specialises on
+        # ``return_components``, so the tracing-off kernel is unchanged.
+        self.recorder = None
         # Topology path-cost matrices (uncontended planner view); None on
         # flat clusters so the kernel keeps the all-pairs-table code path.
         topo = profiles.cluster.topology
@@ -291,7 +323,7 @@ class JaxNavigatorPlanner:
                 live[w] = np.inf
             elif row.liveness == SUSPECT:
                 live[w] = self.config.suspect_penalty_s
-        assign, task_ft = plan_vectorized(
+        out = plan_vectorized(
             static,
             self.config,
             n,
@@ -315,9 +347,34 @@ class JaxNavigatorPlanner:
             fetch_eta=jnp.asarray(
                 [r.fetch_eta_s for r in sst], jnp.float32
             ),
+            return_components=self.recorder is not None,
         )
+        assign, task_ft = out[0], out[1]
         adfg = ADFG(job)
         for i, tid in enumerate(static.order):
             adfg[tid] = int(assign[i])
             adfg.planned_ft[tid] = float(task_ft[i])
+        if self.recorder is not None:
+            from repro.core.telemetry import CandidateCost, PlacementDecision
+
+            queue, at, td, disc, rt, cost = (np.asarray(a) for a in out[2:])
+            for i, tid in enumerate(static.order):
+                self.recorder.record_placement(PlacementDecision(
+                    t=now, job_id=job.job_id, task_id=tid, phase="plan",
+                    scheduler="navigator-jax", reader=origin_worker,
+                    chosen=int(assign[i]),
+                    candidates=tuple(
+                        CandidateCost(
+                            worker=w,
+                            queue_s=float(queue[i, w]),
+                            input_s=float(at[i, w]),
+                            model_s=float(td[i, w]),
+                            intent_discount_s=float(disc[i, w]),
+                            runtime_s=float(rt[i, w]),
+                            liveness_s=float(live[w]),
+                            total_s=float(cost[i, w]),
+                        )
+                        for w in range(n)
+                    ),
+                ))
         return adfg

@@ -175,6 +175,11 @@ class NetworkState:
         self._flows: List[List[float]] = [[] for _ in range(topology.n_racks)]
         self.bulk_transfers = 0
         self.contended_transfers = 0
+        # Fair-share fractions applied to the most recent transfer_time
+        # call, one per crossed uplink (empty for local paths).  The
+        # flight recorder reads this to tag each traced transfer with
+        # the contention share it actually received.
+        self.last_shares: Tuple[float, ...] = ()
 
     def active_flows(self, rack: int, now: float) -> int:
         heap = self._flows[rack]
@@ -188,10 +193,12 @@ class NetworkState:
         (does not register the flow)."""
         uplinks = self.topology.path_uplinks(src, dst)
         if not uplinks:
+            self.last_shares = ()
             return self.topology.transfer_time(nbytes, src, dst)
         shares = tuple(
             1.0 / (self.active_flows(r, now) + 1) for r in uplinks
         )
+        self.last_shares = shares
         return self.topology.transfer_time(nbytes, src, dst, shares)
 
     def start_transfer(self, nbytes: float, src: int, dst: int,

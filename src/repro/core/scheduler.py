@@ -30,6 +30,11 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.core import bitmaps
 from repro.core.profiles import ProfileRepository
 from repro.core.state import DEAD, SSTRow, SUSPECT
+from repro.core.telemetry import (
+    CandidateCost,
+    FlightRecorder,
+    PlacementDecision,
+)
 from repro.core.types import ADFG, DFG, Job, TaskSpec
 
 
@@ -103,6 +108,10 @@ class Scheduler:
     def __init__(self, profiles: ProfileRepository) -> None:
         self.profiles = profiles
         self.cluster = profiles.cluster
+        # Flight-recorder hook: the engine attaches its recorder when
+        # tracing is on; schedulers that price state (Navigator, JIT)
+        # record a PlacementDecision per choice.  None ⇒ zero overhead.
+        self.recorder: Optional[FlightRecorder] = None
 
     # Planning at job arrival.  Returns None for per-task schedulers (JIT).
     def plan(
@@ -264,32 +273,57 @@ class NavigatorScheduler(Scheduler):
             self._liveness_cost(row, self.config.suspect_penalty_s)
             for row in sst
         ]
+        rec = self.recorder
         for tid in self.profiles.rank_order(dfg):             # lines 4-5
             task = dfg.tasks[tid]
             fts: List[float] = []
+            cands: List[CandidateCost] = []
             for w in workers:                                 # line 7
                 if not self.profiles.model_fits(task.model_id, w):
                     fts.append(float("inf"))  # GPU can never host the model
+                    if rec is not None:
+                        cands.append(CandidateCost(
+                            worker=w, queue_s=ft_map[w], input_s=0.0,
+                            model_s=float("inf"), intent_discount_s=0.0,
+                            runtime_s=0.0, liveness_s=live_cost[w],
+                            total_s=float("inf"),
+                        ))
                     continue
                 at = self._at_all_inputs(job, tid, w, now, origin_worker, adfg)
                 x = max(ft_map[w], at)                        # line 8
-                fts.append(
-                    x
-                    + self._td_model(
-                        task, w, bitmap[w], avc[w], intent[w], fresh[w],
-                        fetch_model[w], fetch_eta[w], x,
-                    )
-                    + self.profiles.runtime(task, w)
-                )                                             # line 9
+                td = self._td_model(
+                    task, w, bitmap[w], avc[w], intent[w], fresh[w],
+                    fetch_model[w], fetch_eta[w], x,
+                )
+                rt = self.profiles.runtime(task, w)
+                fts.append(x + td + rt)                       # line 9
+                if rec is not None:
+                    # Undiscounted Eq. 2 (intent lane zeroed) prices what
+                    # the prefetch plane saved on this candidate.
+                    base = self._td_model(task, w, bitmap[w], avc[w])
+                    cands.append(CandidateCost(
+                        worker=w, queue_s=ft_map[w], input_s=at, model_s=td,
+                        intent_discount_s=max(0.0, base - td),
+                        runtime_s=rt, liveness_s=live_cost[w],
+                        total_s=x + td + rt + live_cost[w],
+                    ))
             # Selection cost = predicted finish + membership risk; the
             # penalty biases the argmin only, never the recorded estimate
             # (planned_ft / ft_map feed Eq. 3, prefetch expected-starts,
             # and Alg. 2 hysteresis, which must stay time-shaped).
             costs = [fts[w] + live_cost[w] for w in workers]
-            best_w = min(workers, key=lambda w: costs[w])     # line 10
+            argmin_w = min(workers, key=lambda w: costs[w])   # line 10
             best_w = self._herd_sticky_choice(
-                task.model_id, best_w, costs, bitmap, intent, fresh, workers
+                task.model_id, argmin_w, costs, bitmap, intent, fresh, workers
             )
+            if rec is not None:
+                rec.record_placement(PlacementDecision(
+                    t=now, job_id=job.job_id, task_id=tid, phase="plan",
+                    scheduler=self.name, reader=origin_worker,
+                    chosen=best_w, candidates=tuple(cands),
+                    note=("herd-sticky override of "
+                          f"w{argmin_w}") if best_w != argmin_w else "",
+                ))
             best_ft = fts[best_w]
             adfg[tid] = best_w                                # line 11
             adfg.planned_ft[tid] = best_ft
@@ -399,6 +433,8 @@ class NavigatorScheduler(Scheduler):
         if dfg.is_join(task_id) or not above:                   # lines 3-5
             return w_planned
         ft_map = self._ft_map(now, sst)                         # line 6
+        rec = self.recorder
+        parts: Dict[int, Tuple[float, float, float, float, float]] = {}
 
         def est(w: int) -> float:
             if not self.profiles.model_fits(task.model_id, w):
@@ -407,27 +443,30 @@ class NavigatorScheduler(Scheduler):
             live = self._liveness_cost(row, self.config.suspect_penalty_s)
             if live == float("inf"):
                 return live  # DEAD in this view: never a move target
-            ft = (
-                ft_map[w]
-                + self._td_model(
-                    task,
-                    w,
-                    row.cache_bitmap,
-                    row.free_cache_bytes,
-                    row.intent_bitmap,
-                    max(0.0, now - row.pushed_at)
-                    <= self.config.intent_fresh_s,
-                    row.fetch_model_id,
-                    row.fetch_eta_s,
-                    ft_map[w],
-                )
-                + self.profiles.runtime(task, w)
-                + live
+            td = self._td_model(
+                task,
+                w,
+                row.cache_bitmap,
+                row.free_cache_bytes,
+                row.intent_bitmap,
+                max(0.0, now - row.pushed_at)
+                <= self.config.intent_fresh_s,
+                row.fetch_model_id,
+                row.fetch_eta_s,
+                ft_map[w],
             )
+            ft = ft_map[w] + td + self.profiles.runtime(task, w) + live
+            path = 0.0
             if w != current_worker:                             # lines 10-11
-                ft += self.cluster.path_transfer_time(
+                path = self.cluster.path_transfer_time(
                     input_bytes, current_worker, w
                 )
+                ft += path
+            if rec is not None:
+                parts[w] = (td, live, path,
+                            self._td_model(task, w, row.cache_bitmap,
+                                           row.free_cache_bytes),
+                            self.profiles.runtime(task, w))
             return ft
 
         best_w, best_ft = w_planned, est(w_planned)
@@ -451,9 +490,39 @@ class NavigatorScheduler(Scheduler):
             # truth); only remote rows carry age-scaled uncertainty.
             age = max(0.0, now - sst[best_w].pushed_at)
             margin += self.config.staleness_margin_per_s * age
-        if best_w != w_planned and best_ft > planned_ft * (1.0 - margin):
+        held = best_w != w_planned and best_ft > planned_ft * (1.0 - margin)
+        chosen = w_planned if held else best_w
+        if rec is not None:
+            totals = {w: est(w) for w in range(len(ft_map))}
+            stale = margin - self.config.adjustment_margin
+            cands = tuple(
+                CandidateCost(
+                    worker=w, queue_s=ft_map[w],
+                    # the Alg. 2 data term rides the current worker → w
+                    # path, recorded in input_s (absolute = now + path)
+                    input_s=now + parts[w][2] if w in parts else 0.0,
+                    model_s=parts[w][0] if w in parts else float("inf"),
+                    intent_discount_s=(
+                        max(0.0, parts[w][3] - parts[w][0])
+                        if w in parts else 0.0
+                    ),
+                    runtime_s=parts[w][4] if w in parts else 0.0,
+                    liveness_s=parts[w][1] if w in parts else float("inf"),
+                    total_s=totals[w],
+                    staleness_margin_s=stale if w == best_w else 0.0,
+                )
+                for w in range(len(ft_map))
+            )
+            rec.record_placement(PlacementDecision(
+                t=now, job_id=job.job_id, task_id=task_id, phase="adjust",
+                scheduler=self.name, reader=current_worker, chosen=chosen,
+                candidates=cands,
+                note=(f"hysteresis hold on w{w_planned} "
+                      f"(margin={margin:.4f})") if held else "",
+            ))
+        if held:
             return w_planned
-        return best_w                                           # lines 12-13
+        return chosen                                           # lines 12-13
 
     # -- recovery targeting ------------------------------------------------------
     def select_recovery_worker(
@@ -478,6 +547,8 @@ class NavigatorScheduler(Scheduler):
         than excluded: the evidence is stale, not authoritative."""
         task = job.dfg.tasks[task_id]
         ft_map = self._ft_map(now, sst)
+        rec = self.recorder
+        cands: List[CandidateCost] = []
         best_w: Optional[int] = None
         best_cost = float("inf")
         for w in candidates:
@@ -495,26 +566,38 @@ class NavigatorScheduler(Scheduler):
                         ),
                     )
             x = max(ft_map[w], now + td_in)
-            cost = (
-                x
-                + self._td_model(
-                    task,
-                    w,
-                    row.cache_bitmap,
-                    row.free_cache_bytes,
-                    row.intent_bitmap,
-                    max(0.0, now - row.pushed_at)
-                    <= self.config.intent_fresh_s,
-                    row.fetch_model_id,
-                    row.fetch_eta_s,
-                    x,
-                )
-                + self.profiles.runtime(task, w)
-                + live
+            td = self._td_model(
+                task,
+                w,
+                row.cache_bitmap,
+                row.free_cache_bytes,
+                row.intent_bitmap,
+                max(0.0, now - row.pushed_at)
+                <= self.config.intent_fresh_s,
+                row.fetch_model_id,
+                row.fetch_eta_s,
+                x,
             )
+            rt = self.profiles.runtime(task, w)
+            cost = x + td + rt + live
+            if rec is not None:
+                base = self._td_model(
+                    task, w, row.cache_bitmap, row.free_cache_bytes
+                )
+                cands.append(CandidateCost(
+                    worker=w, queue_s=ft_map[w], input_s=now + td_in,
+                    model_s=td, intent_discount_s=max(0.0, base - td),
+                    runtime_s=rt, liveness_s=live, total_s=cost,
+                ))
             if cost < best_cost or (cost == best_cost and best_w is not None
                                     and w < best_w):
                 best_w, best_cost = w, cost
+        if rec is not None and best_w is not None:
+            rec.record_placement(PlacementDecision(
+                t=now, job_id=job.job_id, task_id=task_id, phase="recovery",
+                scheduler=self.name, reader=-1, chosen=best_w,
+                candidates=tuple(cands),
+            ))
         return best_w
 
 
@@ -553,6 +636,8 @@ class JITScheduler(Scheduler):
         dfg = job.dfg
         task = dfg.tasks[task_id]
         ft_map = self._ft_map(now, sst)
+        rec = self.recorder
+        cands: List[CandidateCost] = []
         best_w, best_ft = 0, float("inf")
         for w in range(len(ft_map)):
             if not self.profiles.model_fits(task.model_id, w):
@@ -575,14 +660,24 @@ class JITScheduler(Scheduler):
                 sst[w].cache_bitmap, task.model_id
             ):
                 td_model = self.profiles.td_model(task.model_id)
-            ft = (
-                max(ft_map[w], now + td_in)
-                + td_model
-                + self.profiles.runtime(task, w)
-                + self._liveness_cost(sst[w], self.suspect_penalty_s)
-            )
+            rt = self.profiles.runtime(task, w)
+            live = self._liveness_cost(sst[w], self.suspect_penalty_s)
+            ft = max(ft_map[w], now + td_in) + td_model + rt + live
+            if rec is not None:
+                cands.append(CandidateCost(
+                    worker=w, queue_s=ft_map[w], input_s=now + td_in,
+                    model_s=td_model, intent_discount_s=0.0,
+                    runtime_s=rt, liveness_s=live, total_s=ft,
+                ))
             if ft < best_ft:
                 best_w, best_ft = w, ft
+        if rec is not None:
+            rec.record_placement(PlacementDecision(
+                t=now, job_id=job.job_id, task_id=task_id, phase="jit",
+                scheduler=self.name,
+                reader=self_worker if self_worker is not None else -1,
+                chosen=best_w, candidates=tuple(cands),
+            ))
         return best_w
 
 

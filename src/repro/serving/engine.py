@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,7 @@ from repro.core import (
 )
 from repro.core.scheduler import Scheduler, make_scheduler
 from repro.core.sst_exchange import GossipConfig, GossipPlane
+from repro.core.telemetry import FlightRecorder, TraceConfig
 from repro.core.types import DFG, MLModel, TaskSpec
 from repro.models import decode_step, forward, init_cache, init_params
 from repro.models.config import ModelConfig
@@ -121,6 +122,7 @@ class ServingCluster:
         decode_tokens: int = 8,
         gossip: Optional[GossipConfig] = None,
         prefetch: Optional[PrefetchConfig] = None,
+        trace: Union[bool, TraceConfig] = False,
     ) -> None:
         self.cluster = cluster
         self.hosted = {h.model_id: h for h in hosted}
@@ -132,6 +134,16 @@ class ServingCluster:
         self.scheduler: Scheduler = make_scheduler(
             scheduler, self.profiles, navigator_config
         )
+        # Flight recorder (core/telemetry.py): events land on the virtual
+        # clock, so serving traces line up with simulator traces of the
+        # same workload; placement provenance comes from the scheduler.
+        self.recorder: Optional[FlightRecorder] = None
+        if trace:
+            self.recorder = FlightRecorder(
+                cluster.n_workers,
+                trace if isinstance(trace, TraceConfig) else None,
+            )
+            self.scheduler.recorder = self.recorder
         # ``gossip`` swaps the single-snapshot table for the decentralized
         # per-worker view plane: the planner then reads the *origin
         # worker's* replica, which lags peers by up to a gossip period.
@@ -194,6 +206,10 @@ class ServingCluster:
             raise NotImplementedError("serving engine drives planned schedulers")
         if self.prefetch_plane is not None:
             self._issue_prefetches(job, adfg, now)
+        rec = self.recorder
+        if rec is not None:
+            rec.emit(now, "job.arrive", worker=origin, job=job.job_id,
+                     dfg=dfg.name, origin=origin, n_tasks=len(dfg.tasks))
 
         wall0 = time.perf_counter()
         outputs: Dict[str, np.ndarray] = {}
@@ -209,9 +225,26 @@ class ServingCluster:
             # transfer delay for remote inputs
             for p in dfg.preds[tid]:
                 if adfg[p] != w:
-                    start += self.cluster.network.transfer_time(
+                    dur = self.cluster.network.transfer_time(
                         dfg.tasks[p].output_bytes
                     )
+                    start += dur
+                    if rec is not None:
+                        rec.emit(finish[p], "net.xfer", worker=adfg[p],
+                                 dst=w, bytes=dfg.tasks[p].output_bytes,
+                                 dur=dur, scope="flat", share=1.0)
+            if rec is not None:
+                if not dfg.preds[tid]:
+                    rec.emit(now, "task.input", worker=w, job=job.job_id,
+                             task=tid, gen=0, src="", frm=origin, to=w,
+                             arrive=now)
+                else:
+                    for p in dfg.preds[tid]:
+                        arrive = finish[p] if adfg[p] == w else start
+                        rec.emit(arrive, "task.input", worker=w,
+                                 job=job.job_id, task=tid, gen=0, src=p,
+                                 frm=adfg[p], to=w, arrive=arrive)
+            was_miss = False
             if task.model_id is not None:
                 upcoming = [task.model_id]
                 res = mem.ensure(task.model_id, upcoming)
@@ -222,6 +255,14 @@ class ServingCluster:
                 )
                 if res is not None:
                     fetch_s, _ = res
+                    was_miss = fetch_s > 0.0
+                    if rec is not None and fetch_s > 0.0:
+                        rec.emit(start, "fetch.start", worker=w,
+                                 fetch_kind="demand", model=task.model_id,
+                                 bytes=mem.cached_size(task.model_id),
+                                 dur=fetch_s, job=job.job_id, task=tid)
+                        rec.emit(start + fetch_s, "fetch.done", worker=w,
+                                 model=task.model_id, spec=False)
                     if fetch_s > 0.0 and self.prefetch_plane is not None:
                         # Demand miss: demand preempts speculation on the
                         # single fetch pipe — the transfer starts now, and
@@ -241,6 +282,10 @@ class ServingCluster:
                         # Cache hit thanks to a speculative transfer that
                         # may still be in flight on the virtual clock.
                         start = max(start, ready)
+                        if rec is not None:
+                            rec.emit(start, "fetch.promote", worker=w,
+                                     model=task.model_id, job=job.job_id,
+                                     task=tid)
                 self.sst.update_cache(w, mem.bitmap, mem.free_bytes, start)
                 if self.prefetch_plane is not None:
                     self.sst.update_intent(
@@ -260,12 +305,23 @@ class ServingCluster:
                 ) if preds else np.zeros((1, 0), np.int32)
                 runtime = 1e-4
             finish[tid] = start + runtime
+            if rec is not None:
+                rec.emit(start, "task.start", worker=w, job=job.job_id,
+                         task=tid, gen=0,
+                         model=-1 if task.model_id is None else task.model_id,
+                         miss=was_miss)
+                rec.emit(finish[tid], "task.done", worker=w, job=job.job_id,
+                         task=tid, gen=0)
             self._vclock[w] = finish[tid]
             self.sst.update_load(w, self._vclock[w], finish[tid])
             if self.gossip is not None:
                 self.sst.advance(finish[tid])
             else:
                 self.sst.push(w, finish[tid])
+        if rec is not None:
+            t_end = max(finish.values())
+            rec.emit(t_end, "job.done", worker=origin, job=job.job_id,
+                     latency=t_end - now)
         result = RequestResult(
             job_id=job.job_id,
             dfg_name=dfg.name,
@@ -302,6 +358,13 @@ class ServingCluster:
                     plane.stall_inflight(w, now)
                     break
                 fetch_s, _ = res
+                if self.recorder is not None:
+                    self.recorder.emit(
+                        t_pipe, "fetch.start", worker=w,
+                        fetch_kind="prefetch", model=intent.model_id,
+                        bytes=mem.cached_size(intent.model_id),
+                        dur=fetch_s, job=-1, task="",
+                    )
                 t_pipe += fetch_s
                 mem.complete_prefetch(intent.model_id)
                 plane.complete_inflight(w)

@@ -4,6 +4,7 @@ from repro.sim.churn import (
     partition_schedule,
     validate_schedule,
 )
+from repro.core.telemetry import SimReport, TraceConfig
 from repro.sim.engine import JobRecord, SimResult, Simulation
 from repro.sim.workload import (
     arrival_rate_timeline,
@@ -16,8 +17,10 @@ from repro.sim.workload import (
 __all__ = [
     "ChurnEvent",
     "JobRecord",
+    "SimReport",
     "SimResult",
     "Simulation",
+    "TraceConfig",
     "arrival_rate_timeline",
     "bursty_trace_workload",
     "churn_schedule",

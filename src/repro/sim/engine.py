@@ -26,10 +26,15 @@ import heapq
 import itertools
 import math
 import random
-from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple, Union
 
 from repro.core.memory import GpuMemoryManager
 from repro.core.netmodel import ClusterSpec, NetworkState
+from repro.core.telemetry import (
+    FlightRecorder,
+    MetricsRegistry,
+    TraceConfig,
+)
 from repro.core.prefetch import (
     INTENT_WIRE_BYTES,
     PrefetchConfig,
@@ -116,56 +121,147 @@ class JobRecord:
 
 @dataclasses.dataclass
 class SimResult:
+    """Per-run outcome.  All counters live in the :class:`MetricsRegistry`
+    (``metrics``) under named, labeled families — the legacy flat fields
+    (``cache_hits``, ``net_local_transfers``, ...) are derived views over
+    it, so existing benchmarks and tests keep working unchanged."""
+
     scheduler: str
     records: List[JobRecord]
     horizon: float
     n_workers: int
     busy_time: Dict[int, float]
-    cache_hits: int
-    cache_misses: int
-    cache_evictions: int
-    bytes_fetched: float
-    sst_pushes: int
     workers_used: Set[int]
-    adjustments: int = 0
-    # Predictive prefetch plane (core/prefetch.py); zeros when disabled.
-    prefetch_bytes: float = 0.0
-    prefetch_wasted_bytes: float = 0.0
-    prefetch_unused_resident_bytes: float = 0.0
-    prefetch_useful: int = 0
+    metrics: MetricsRegistry
     prefetch_stats: Optional[PrefetchStats] = None
-    # Fleet churn / fault tolerance (zeros on a static fleet).
-    churn_crashes: int = 0
-    churn_joins: int = 0
-    churn_drains: int = 0
-    churn_partitions: int = 0     # network cuts applied
-    churn_heals: int = 0          # cuts closed
-    # Topology plane (zeros on a flat cluster): bulk transfers that stayed
-    # inside one rack vs. crossed the (oversubscribable) spine, and how
-    # many of the crossing ones shared an uplink with another in-flight
-    # transfer (fair-share slowdown actually applied).
-    net_local_transfers: int = 0
-    net_cross_transfers: int = 0
-    net_contended_transfers: int = 0
-    bounces: int = 0              # capacity bounces executed (§3.2 dispatcher)
-    tasks_rescued: int = 0        # in-flight/queued work re-routed off a dead worker
-    outputs_recovered: int = 0    # finished producers re-run (outputs died)
-    churn_wasted_bytes: float = 0.0  # PCIe bytes thrown away by churn
-    # Accounting-balance inputs for the chaos invariant checker:
-    # hits + misses == model_exec_starts + lost_miss_attempts
-    #                  + demand_refetches.
-    model_exec_starts: int = 0
-    lost_miss_attempts: int = 0
-    # A waiting task's fetched model was evicted before it could start
-    # (another task's execution displaced it): the dispatcher fetches
-    # again, charging a second miss against the same eventual start.
-    demand_refetches: int = 0
     # (job_id, task_id) -> accepted completion count; every task completes
     # >= 1 time, and sum == n_tasks + outputs_recovered.
     task_completions: Optional[Dict[Tuple[int, str], int]] = None
     # (time, kind) per processed event when ``record_events=True`` — the
     # determinism regression tests compare two runs' logs verbatim.
     event_log: Optional[List[Tuple[float, str]]] = None
+    # Flight recorder (core/telemetry.py) when the run was traced; feed
+    # it (or the whole result) to ``SimReport`` for latency breakdowns,
+    # critical paths, and placement provenance.
+    trace: Optional[FlightRecorder] = None
+
+    # -- derived views over the metrics registry -------------------------------
+    @property
+    def cache_hits(self) -> int:
+        return int(self.metrics.sum_values("cache.hits"))
+
+    @property
+    def cache_misses(self) -> int:
+        return int(self.metrics.sum_values("cache.misses"))
+
+    @property
+    def cache_evictions(self) -> int:
+        return int(self.metrics.sum_values("cache.evictions"))
+
+    @property
+    def bytes_fetched(self) -> float:
+        return self.metrics.sum_values("cache.bytes_fetched")
+
+    @property
+    def sst_pushes(self) -> int:
+        return int(self.metrics.value("sst.pushes"))
+
+    @property
+    def adjustments(self) -> int:
+        return int(self.metrics.value("sched.adjustments"))
+
+    # Predictive prefetch plane (core/prefetch.py); zeros when disabled.
+    @property
+    def prefetch_bytes(self) -> float:
+        return self.metrics.sum_values("prefetch.bytes")
+
+    @property
+    def prefetch_wasted_bytes(self) -> float:
+        return self.metrics.sum_values("prefetch.wasted_bytes")
+
+    @property
+    def prefetch_unused_resident_bytes(self) -> float:
+        return self.metrics.sum_values("prefetch.unused_resident_bytes")
+
+    @property
+    def prefetch_useful(self) -> int:
+        return int(self.metrics.sum_values("prefetch.useful"))
+
+    # Fleet churn / fault tolerance (zeros on a static fleet).
+    @property
+    def churn_crashes(self) -> int:
+        return int(self.metrics.value("churn.events", kind="crash"))
+
+    @property
+    def churn_joins(self) -> int:
+        return int(self.metrics.value("churn.events", kind="join"))
+
+    @property
+    def churn_drains(self) -> int:
+        return int(self.metrics.value("churn.events", kind="drain"))
+
+    @property
+    def churn_partitions(self) -> int:
+        return int(self.metrics.value("churn.events", kind="partition"))
+
+    @property
+    def churn_heals(self) -> int:
+        return int(self.metrics.value("churn.events", kind="heal"))
+
+    # Topology plane (zeros on a flat cluster): bulk transfers that stayed
+    # inside one rack vs. crossed the (oversubscribable) spine, and how
+    # many of the crossing ones shared an uplink with another in-flight
+    # transfer (fair-share slowdown actually applied).
+    @property
+    def net_local_transfers(self) -> int:
+        return int(self.metrics.value("net.transfers", scope="local"))
+
+    @property
+    def net_cross_transfers(self) -> int:
+        return int(self.metrics.value("net.transfers", scope="cross"))
+
+    @property
+    def net_contended_transfers(self) -> int:
+        return int(self.metrics.value("net.transfers", scope="contended"))
+
+    @property
+    def bounces(self) -> int:
+        """Capacity bounces executed (§3.2 dispatcher)."""
+        return int(self.metrics.value("sched.bounces"))
+
+    @property
+    def tasks_rescued(self) -> int:
+        """In-flight/queued work re-routed off a dead worker."""
+        return int(self.metrics.value("churn.tasks_rescued"))
+
+    @property
+    def outputs_recovered(self) -> int:
+        """Finished producers re-run (outputs died)."""
+        return int(self.metrics.value("churn.outputs_recovered"))
+
+    @property
+    def churn_wasted_bytes(self) -> float:
+        """PCIe bytes thrown away by churn."""
+        return self.metrics.sum_values("churn.wasted_bytes")
+
+    # Accounting-balance inputs for the chaos invariant checker:
+    # hits + misses == model_exec_starts + lost_miss_attempts
+    #                  + demand_refetches.
+    @property
+    def model_exec_starts(self) -> int:
+        return int(self.metrics.value("exec.model_starts"))
+
+    @property
+    def lost_miss_attempts(self) -> int:
+        return int(self.metrics.value("exec.lost_miss_attempts"))
+
+    @property
+    def demand_refetches(self) -> int:
+        """A waiting task's fetched model was evicted before it could
+        start (another task's execution displaced it): the dispatcher
+        fetches again, charging a second miss against the same eventual
+        start."""
+        return int(self.metrics.value("exec.demand_refetches"))
 
     # -- aggregates ------------------------------------------------------------
     @property
@@ -233,6 +329,7 @@ class Simulation:
         lease: Optional[LeaseConfig] = None,
         churn: Optional[Sequence[ChurnEvent]] = None,
         record_events: bool = False,
+        trace: Union[bool, TraceConfig] = False,
         runtime_noise_sigma: float = 0.25,
         seed: int = 0,
     ) -> None:
@@ -242,6 +339,18 @@ class Simulation:
         self.scheduler: Scheduler = make_scheduler(
             scheduler, profiles, navigator_config
         )
+        # Flight recorder (core/telemetry.py).  ``None`` when off: every
+        # emission site below is guarded by ``if self._rec is not None``,
+        # so the disabled path costs one attribute load + branch and
+        # performs zero telemetry allocations in the event loop (the CI
+        # trace-smoke guard asserts exactly that).
+        self._rec: Optional[FlightRecorder] = None
+        if trace:
+            self._rec = FlightRecorder(
+                cluster.n_workers,
+                trace if isinstance(trace, TraceConfig) else None,
+            )
+        self.scheduler.recorder = self._rec  # placement provenance sink
         # Metadata plane: ``gossip`` selects the decentralized per-worker
         # view subsystem (each worker plans from its own, possibly stale,
         # replica); default is the single-published-snapshot table.
@@ -362,6 +471,27 @@ class Simulation:
     def _post(self, t: float, kind: str, *payload) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), (kind, *payload)))
 
+    def _post_input(
+        self,
+        t_arrive: float,
+        js: "_JobState",
+        tid: str,
+        src: str,
+        worker: int,
+        gen: int,
+        src_worker: Optional[int],
+    ) -> None:
+        """Post one input shipment, tracing its send/arrive pair.  The
+        span stitcher reconstructs per-task transfer time from exactly
+        these records (``t`` = send time, ``arrive`` = landing time)."""
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "task.input", worker=worker,
+                job=js.job.job_id, task=tid, gen=gen, src=src,
+                frm=src_worker, to=worker, arrive=t_arrive,
+            )
+        self._post(t_arrive, "input", js, tid, src, worker, gen, src_worker)
+
     def _noisy(self, runtime: float) -> float:
         if self.noise_sigma <= 0:
             return runtime
@@ -369,6 +499,15 @@ class Simulation:
 
     # -- public API ----------------------------------------------------------------
     def run(self, jobs: Sequence[Job]) -> SimResult:
+        """Drive the simulation to completion.  Split into schedule /
+        event-loop / assemble stages so the CI zero-allocation guard can
+        profile the hot event loop in isolation (result assembly builds
+        the metrics registry, which allocates by design)."""
+        self._schedule_initial(jobs)
+        self._event_loop()
+        return self._assemble_result()
+
+    def _schedule_initial(self, jobs: Sequence[Job]) -> None:
         origin = itertools.cycle(self.cluster.workers())
         for job in sorted(jobs, key=lambda j: j.arrival_time):
             self._post(job.arrival_time, "arrival", job, next(origin))
@@ -399,6 +538,7 @@ class Simulation:
                 self._post(offset, "heartbeat", w, 0)
         self._jobs_open = len(jobs)
 
+    def _event_loop(self) -> None:
         while self._heap and self._jobs_open > 0:
             t, _, ev = heapq.heappop(self._heap)
             self._now = t
@@ -460,52 +600,76 @@ class Simulation:
             else:  # pragma: no cover
                 raise AssertionError(f"unknown event {kind}")
 
-        mems = self.memories
+    def _assemble_result(self) -> SimResult:
+        """Fold the engine's hot-loop counters (plain ints — cheap to
+        bump, free when tracing is off) and the per-worker memory ledgers
+        into one named, labeled metrics registry.  The legacy SimResult
+        fields read back out of it as derived views."""
+        reg = MetricsRegistry()
+        for w, m in enumerate(self.memories):
+            ws = str(w)
+            s = m.stats
+            reg.counter("cache.hits", worker=ws).inc(s.hits)
+            reg.counter("cache.misses", worker=ws).inc(s.misses)
+            reg.counter("cache.evictions", worker=ws).inc(s.evictions)
+            reg.counter("cache.bytes_fetched", worker=ws).inc(s.bytes_fetched)
+            reg.counter("prefetch.bytes", worker=ws).inc(s.prefetch_bytes)
+            reg.counter("prefetch.wasted_bytes", worker=ws).inc(
+                s.prefetch_wasted_bytes
+            )
+            reg.counter("prefetch.useful", worker=ws).inc(s.prefetch_useful)
+            reg.counter("churn.wasted_bytes", worker=ws).inc(
+                s.churn_wasted_bytes
+            )
+            reg.gauge("prefetch.unused_resident_bytes", worker=ws).set(
+                m.unused_prefetched_bytes()
+            )
+            reg.gauge("exec.busy_s", worker=ws).set(self._busy_time[w])
+        reg.counter("sst.pushes").inc(self.sst.total_pushes)
+        reg.counter("sched.adjustments").inc(self._adjustments)
+        reg.counter("sched.bounces").inc(self._bounces)
+        for kind, v in (
+            ("crash", self._churn_crashes),
+            ("join", self._churn_joins),
+            ("drain", self._churn_drains),
+            ("partition", self._churn_partitions),
+            ("heal", self._churn_heals),
+        ):
+            reg.counter("churn.events", kind=kind).inc(v)
+        reg.counter("churn.tasks_rescued").inc(self._tasks_rescued)
+        reg.counter("churn.outputs_recovered").inc(self._outputs_recovered)
+        reg.counter("net.transfers", scope="local").inc(self._net_local)
+        reg.counter("net.transfers", scope="cross").inc(self._net_cross)
+        reg.counter("net.transfers", scope="contended").inc(
+            self._net.contended_transfers if self._net is not None else 0
+        )
+        reg.counter("exec.model_starts").inc(self._model_exec_starts)
+        reg.counter("exec.lost_miss_attempts").inc(self._lost_miss_attempts)
+        reg.counter("exec.demand_refetches").inc(self._demand_refetches)
+        reg.gauge("sim.horizon_s").set(self._now)
+        reg.counter("sim.jobs_completed").inc(len(self._records))
+        lat = reg.histogram(
+            "job.latency_s",
+            bounds=(0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0),
+        )
+        for r in self._records:
+            lat.observe(r.latency)
         return SimResult(
             scheduler=self.scheduler.name,
             records=self._records,
             horizon=self._now,
             n_workers=self.cluster.n_workers,
             busy_time=self._busy_time,
-            cache_hits=sum(m.stats.hits for m in mems),
-            cache_misses=sum(m.stats.misses for m in mems),
-            cache_evictions=sum(m.stats.evictions for m in mems),
-            bytes_fetched=sum(m.stats.bytes_fetched for m in mems),
-            sst_pushes=self.sst.total_pushes,
             workers_used=self._workers_used,
-            adjustments=self._adjustments,
-            prefetch_bytes=sum(m.stats.prefetch_bytes for m in mems),
-            prefetch_wasted_bytes=sum(
-                m.stats.prefetch_wasted_bytes for m in mems
-            ),
-            prefetch_unused_resident_bytes=sum(
-                m.unused_prefetched_bytes() for m in mems
-            ),
-            prefetch_useful=sum(m.stats.prefetch_useful for m in mems),
+            metrics=reg,
             prefetch_stats=(
                 self.prefetch_plane.stats
                 if self.prefetch_plane is not None
                 else None
             ),
-            churn_crashes=self._churn_crashes,
-            churn_joins=self._churn_joins,
-            churn_drains=self._churn_drains,
-            churn_partitions=self._churn_partitions,
-            churn_heals=self._churn_heals,
-            net_local_transfers=self._net_local,
-            net_cross_transfers=self._net_cross,
-            net_contended_transfers=(
-                self._net.contended_transfers if self._net is not None else 0
-            ),
-            bounces=self._bounces,
-            tasks_rescued=self._tasks_rescued,
-            outputs_recovered=self._outputs_recovered,
-            churn_wasted_bytes=sum(m.stats.churn_wasted_bytes for m in mems),
-            model_exec_starts=self._model_exec_starts,
-            lost_miss_attempts=self._lost_miss_attempts,
-            demand_refetches=self._demand_refetches,
             task_completions=dict(self._completions),
             event_log=self.event_log,
+            trace=self._rec,
         )
 
     # -- network plane -----------------------------------------------------------
@@ -525,16 +689,31 @@ class Simulation:
         transfers fair-share the spine; control messages ride unregistered
         and uncontended."""
         if self._net is None or src is None or dst is None:
-            return self.cluster.network.transfer_time(nbytes)
+            dur = self.cluster.network.transfer_time(nbytes)
+            if register and self._rec is not None and src is not None:
+                self._rec.emit(
+                    self._now, "net.xfer", worker=src, dst=dst,
+                    bytes=nbytes, dur=dur, scope="flat", share=1.0,
+                )
+            return dur
         if src == dst:
             return 0.0
         if register:
             topo = self._net.topology
-            if topo.rack(src) == topo.rack(dst):
+            local = topo.rack(src) == topo.rack(dst)
+            if local:
                 self._net_local += 1
             else:
                 self._net_cross += 1
-            return self._net.start_transfer(nbytes, src, dst, self._now)
+            dur = self._net.start_transfer(nbytes, src, dst, self._now)
+            if self._rec is not None:
+                self._rec.emit(
+                    self._now, "net.xfer", worker=src, dst=dst,
+                    bytes=nbytes, dur=dur,
+                    scope="local" if local else "cross",
+                    share=min(self._net.last_shares, default=1.0),
+                )
+            return dur
         return self._net.transfer_time(nbytes, src, dst, self._now)
 
     def _reachable(self, a: Optional[int], b: Optional[int]) -> bool:
@@ -578,6 +757,12 @@ class Simulation:
         origin = live
         js = _JobState(job, origin)
         self._open_jobs.append(js)
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "job.arrive", job=job.job_id,
+                dfg=job.dfg.name, origin=origin,
+                n_tasks=len(job.dfg.tasks),
+            )
         adfg = self.scheduler.plan(
             job, self._now, origin, self.sst.view(origin, self._now)
         )
@@ -613,8 +798,8 @@ class Simulation:
                         job.dfg.tasks[tid].input_bytes, origin, w,
                         register=True,
                     )
-                self._post(
-                    self._now + delay, "input", js, tid, "", w,
+                self._post_input(
+                    self._now + delay, js, tid, "", w,
                     js.tasks[tid].generation, origin,
                 )
 
@@ -660,8 +845,8 @@ class Simulation:
                 )
         gen = js.tasks[task_id].generation
         for src, loc in input_locations.items():
-            self._post(
-                self._now + delay, "input", js, task_id, src, w, gen, loc
+            self._post_input(
+                self._now + delay, js, task_id, src, w, gen, loc
             )
 
     def _on_input(
@@ -712,6 +897,11 @@ class Simulation:
             return  # the transfer this event described was preempted
         mid = self._fetch_model[worker]
         spec = self._fetch_spec[worker]
+        if self._rec is not None and mid is not None:
+            self._rec.emit(
+                self._now, "fetch.done", worker=worker, model=mid,
+                spec=spec,
+            )
         self._fetch_busy[worker] = False
         self._fetch_model[worker] = None
         self._fetch_spec[worker] = False
@@ -731,6 +921,11 @@ class Simulation:
             return  # the worker died mid-run; the attempt is void
         run.finished = self._now
         run.session = self._session[worker]
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "task.done", worker=worker,
+                job=js.job.job_id, task=task_id, gen=gen,
+            )
         key = (js.job.job_id, task_id)
         self._completions[key] = self._completions.get(key, 0) + 1
         task = js.job.dfg.tasks[task_id]
@@ -753,6 +948,11 @@ class Simulation:
                 )
             )
             self._jobs_open -= 1
+            if self._rec is not None:
+                self._rec.emit(
+                    self._now, "job.done", job=js.job.job_id,
+                    latency=self._now - js.job.arrival_time,
+                )
         if (
             self._draining[worker]
             and self._gpu_busy[worker] is None
@@ -790,6 +990,16 @@ class Simulation:
                     )
                     if new_w != adfg[succ]:
                         self._adjustments += 1
+                        if self._rec is not None:
+                            self._rec.emit(
+                                self._now,
+                                "sched.adjust",
+                                worker=worker,
+                                job=js.job.job_id,
+                                task=succ,
+                                frm=adfg[succ],
+                                to=new_w,
+                            )
                         if self.prefetch_plane is not None:
                             self._migrate_intent(
                                 js, succ, adfg[succ], new_w, worker
@@ -803,8 +1013,8 @@ class Simulation:
                         task.output_bytes, worker, w, register=True
                     )
                 )
-                self._post(
-                    self._now + delay, "input", js, succ, task_id, w,
+                self._post_input(
+                    self._now + delay, js, succ, task_id, w,
                     run_s.generation, worker,
                 )
             else:
@@ -862,6 +1072,13 @@ class Simulation:
             queue.pop(idx)
             run = js.tasks[tid]
             run.started = self._now
+            if self._rec is not None:
+                self._rec.emit(
+                    self._now, "task.start", worker=worker,
+                    job=js.job.job_id, task=tid, gen=run.generation,
+                    model=-1 if task.model_id is None else task.model_id,
+                    miss=run.was_miss,
+                )
             if task.model_id is not None:
                 self._model_exec_starts += 1
                 if not run.was_miss:
@@ -963,6 +1180,13 @@ class Simulation:
         self._fetch_preemptible[worker] = False
         self._fetch_started[worker] = self._now
         self._fetch_ends[worker] = self._now + fetch_s
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "fetch.start", worker=worker,
+                model=task.model_id, fetch_kind="demand",
+                bytes=mem.cached_size(task.model_id), dur=fetch_s,
+                job=js.job.job_id, task=tid,
+            )
         if self.prefetch_plane is not None:
             # Demand took over this task's model staging; its intent (if
             # still queued) is spent.
@@ -1017,6 +1241,12 @@ class Simulation:
         self._fetch_preemptible[worker] = True
         self._fetch_started[worker] = self._now
         self._fetch_ends[worker] = self._now + fetch_s
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "fetch.start", worker=worker,
+                model=intent.model_id, fetch_kind="prefetch",
+                bytes=mem.cached_size(intent.model_id), dur=fetch_s,
+            )
         self._post(
             self._now + fetch_s, "fetch_done", worker,
             self._fetch_token[worker],
@@ -1024,6 +1254,12 @@ class Simulation:
         self._publish_cache(worker)  # also refreshes the intent bitmap
 
     def _promote_prefetch(self, worker: int, js: _JobState, tid: str) -> None:
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "fetch.promote", worker=worker,
+                model=self._fetch_model[worker], job=js.job.job_id,
+                task=tid,
+            )
         self._fetch_preemptible[worker] = False
         if self.prefetch_plane is not None:
             self.prefetch_plane.promote_inflight(worker)
@@ -1044,6 +1280,11 @@ class Simulation:
         self._fetch_token[worker] += 1  # invalidate the posted completion
         dur = self._fetch_ends[worker] - self._fetch_started[worker]
         frac = 0.0 if dur <= 0 else (self._now - self._fetch_started[worker]) / dur
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "fetch.abort", worker=worker, model=mid,
+                frac=frac, churn=False,
+            )
         self.memories[worker].abort_prefetch(mid, frac)
         self._fetch_busy[worker] = False
         self._fetch_model[worker] = None
@@ -1068,6 +1309,10 @@ class Simulation:
         assert self.prefetch_plane is not None
         if not self._serving(worker):
             return  # control message reached a corpse; dropped on the floor
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "intent.admit", worker=worker, n=len(intents)
+            )
         self.prefetch_plane.admit(worker, intents, self._now)
         self._publish_intent(worker)
         self._maybe_prefetch(worker)
@@ -1076,6 +1321,11 @@ class Simulation:
         assert self.prefetch_plane is not None
         if not self._up[worker]:
             return  # the plane state for this worker was already dropped
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "intent.cancel", worker=worker,
+                job=js.job.job_id, task=task_id,
+            )
         aborted = self.prefetch_plane.cancel(
             worker, js.job.job_id, task_id, migrated=True
         )
@@ -1150,9 +1400,15 @@ class Simulation:
                 delay, self._xfer_time(nbytes, worker, target, register=True)
             )
         js.inputs_arrived[tid] = set()
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "task.bounce", worker=worker,
+                job=js.job.job_id, task=tid, to=target,
+                gen=run.generation,
+            )
         for src in srcs:
-            self._post(
-                self._now + delay, "input", js, tid, src, target,
+            self._post_input(
+                self._now + delay, js, tid, src, target,
                 run.generation, worker,
             )
         self._update_load(worker)
@@ -1206,6 +1462,11 @@ class Simulation:
         no listed group are fully isolated (unique singleton groups)."""
         assert ev.groups is not None
         self._churn_partitions += 1
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "churn.partition",
+                groups=repr([sorted(g) for g in ev.groups]),
+            )
         # Negative ids for unlisted workers so they can never collide with
         # a group index.
         part = [-(w + 1) for w in range(self.cluster.n_workers)]
@@ -1222,6 +1483,8 @@ class Simulation:
         if self._partition is None:
             return
         self._churn_heals += 1
+        if self._rec is not None:
+            self._rec.emit(self._now, "churn.heal")
         self._partition = None
         self.sst.set_partition(None, self._now)
 
@@ -1236,6 +1499,8 @@ class Simulation:
         if not self._up[w]:
             return
         self._churn_crashes += 1
+        if self._rec is not None:
+            self._rec.emit(self._now, "churn.crash", worker=w)
         self._up[w] = False
         self._draining[w] = False
         self._session[w] += 1  # voids the gossip/heartbeat/publish chains
@@ -1267,6 +1532,8 @@ class Simulation:
         if not self._serving(w):
             return
         self._churn_drains += 1
+        if self._rec is not None:
+            self._rec.emit(self._now, "churn.drain", worker=w)
         self._draining[w] = True
         self.sst.set_draining(w, True, self._now)
         self._abort_worker_fetch(w, churn=True)
@@ -1330,6 +1597,8 @@ class Simulation:
                 self._dispatch(w)
             return
         self._churn_joins += 1
+        if self._rec is not None:
+            self._rec.emit(self._now, "churn.join", worker=w)
         self._up[w] = True
         self._draining[w] = False
         self._session[w] += 1
@@ -1365,6 +1634,11 @@ class Simulation:
             if dur <= 0
             else min(1.0, (self._now - self._fetch_started[w]) / dur)
         )
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "fetch.abort", worker=w, model=mid,
+                frac=frac, churn=churn,
+            )
         mem = self.memories[w]
         if self._fetch_spec[w]:
             mem.abort_prefetch(mid, frac)
@@ -1526,11 +1800,17 @@ class Simulation:
             delay = self._xfer_time(
                 nbytes, src_worker, run.worker, register=True
             )
-            self._post(
-                self._now + delay, "input", js, tid, src, run.worker, gen,
+            self._post_input(
+                self._now + delay, js, tid, src, run.worker, gen,
                 src_worker,
             )
             return
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "task.dead_letter",
+                worker=src_worker if src_worker is not None else -1,
+                job=js.job.job_id, task=tid, src=src, gen=gen,
+            )
         self._reroute(js, tid, from_worker=src_worker)
 
     def _reset_task(self, js: _JobState, tid: str) -> None:
@@ -1544,6 +1824,13 @@ class Simulation:
                 for j, t in self._queues[run.worker]
                 if (j, t) != (js, tid)
             ]
+        if self._rec is not None:
+            self._rec.emit(
+                self._now, "task.recover",
+                worker=run.worker if run.worker is not None else -1,
+                job=js.job.job_id, task=tid, gen=run.generation + 1,
+                had_output=run.finished is not None,
+            )
         if run.finished is not None:
             self._outputs_recovered += 1
         else:
@@ -1760,8 +2047,8 @@ class Simulation:
                     task.input_bytes, origin, target, register=True
                 )
             )
-            self._post(
-                self._now + delay, "input", js, tid, "", target,
+            self._post_input(
+                self._now + delay, js, tid, "", target,
                 run.generation, origin,
             )
             return
@@ -1779,8 +2066,8 @@ class Simulation:
                     ),
                 )
         for p in ready:
-            self._post(
-                self._now + delay, "input", js, tid, p, target,
+            self._post_input(
+                self._now + delay, js, tid, p, target,
                 run.generation, js.tasks[p].worker,
             )
 
@@ -1821,6 +2108,11 @@ class Simulation:
             return
         for peer, updates, nbytes in self.sst.exchange(worker, self._now):
             delay = self._xfer_time(nbytes, worker, peer)
+            if self._rec is not None:
+                self._rec.emit(
+                    self._now, "gossip.exchange", worker=worker,
+                    peer=peer, bytes=nbytes, n=len(updates),
+                )
             self._post(
                 self._now + delay, "gossip_rx", peer, updates, worker
             )

@@ -26,6 +26,15 @@ Partition schedules add the asymmetric-reachability family
    partitioned-then-healed worker reconverges to ALIVE in every live
    reader's view within bounded gossip rounds of the final heal.
 
+The flight recorder (core/telemetry.py) adds the strongest oracle
+(``check_trace_determinism``):
+
+6. **Traces are deterministic** — the same seed + config produces a
+   byte-identical JSONL event stream across two runs, on both the
+   gossip and shared-table metadata planes, under churn and partition
+   schedules alike.  Any scheduling, fetch, transfer, or recovery
+   divergence shows up as the first differing line.
+
 Run as a script for the CI chaos-smoke job (30 s seeded scenario across
 all schedulers, exits non-zero on any violation)::
 
@@ -99,6 +108,7 @@ def run_churn_sim(
     prefetch: Optional[PrefetchConfig] = None,
     record_events: bool = False,
     return_sim: bool = False,
+    trace: bool = False,
 ):
     """Build and run one churn scenario; returns (result, jobs, schedule),
     plus the finished ``Simulation`` when ``return_sim`` is set (the
@@ -126,6 +136,7 @@ def run_churn_sim(
         prefetch=prefetch,
         record_events=record_events,
         seed=sim_seed,
+        trace=trace,
     )
     res = sim.run(jobs)
     if return_sim:
@@ -257,6 +268,30 @@ def check_partition_invariants(
             )
 
 
+def check_trace_determinism(**kwargs) -> None:
+    """Family 6: same seed + config ⇒ byte-identical JSONL trace.  Runs
+    the scenario twice with the flight recorder on and diffs the exports
+    (kwargs are forwarded to ``run_churn_sim``)."""
+    kwargs.pop("trace", None)
+    kwargs.pop("return_sim", None)
+    a = run_churn_sim(trace=True, **kwargs)[0]
+    b = run_churn_sim(trace=True, **kwargs)[0]
+    ja, jb = a.trace.to_jsonl(), b.trace.to_jsonl()
+    assert ja, "trace is empty"
+    assert a.trace.dropped == 0, f"ring dropped {a.trace.dropped} events"
+    if ja != jb:
+        for i, (la, lb) in enumerate(zip(ja.splitlines(), jb.splitlines())):
+            if la != lb:
+                raise AssertionError(
+                    f"trace diverged at line {i}:\n  run A: {la}\n"
+                    f"  run B: {lb}"
+                )
+        raise AssertionError(
+            f"trace lengths differ: {ja.count(chr(10))} vs "
+            f"{jb.count(chr(10))} lines"
+        )
+
+
 def main() -> int:
     """CI chaos-smoke: a 30 s seeded generated schedule plus the scripted
     crash/drain and partition scenarios, across every scheduler, on the
@@ -322,6 +357,30 @@ def main() -> int:
                 f"reexec={res.outputs_recovered} "
                 f"xrack={res.net_cross_transfers} {verdict}"
             )
+    # Family 6: trace determinism on both metadata planes, under the
+    # scripted churn schedule and a partition schedule.
+    trace_cases = [
+        ("gossip+churn", dict(
+            schedule=[e for e in SCRIPTED_SCHEDULE if e.time < duration],
+            duration=duration, prefetch=PrefetchConfig(),
+        )),
+        ("sst+churn", dict(
+            schedule=[e for e in SCRIPTED_SCHEDULE if e.time < duration],
+            duration=duration, gossip=None, prefetch=PrefetchConfig(),
+        )),
+        ("gossip+partition", dict(
+            schedule=scripted_partition_schedule(5),
+            duration=duration, prefetch=PrefetchConfig(),
+        )),
+    ]
+    for label, kwargs in trace_cases:
+        try:
+            check_trace_determinism(**kwargs)
+            verdict = "ok"
+        except AssertionError as exc:
+            failures += 1
+            verdict = f"FAIL: {exc}"
+        print(f"chaos-smoke trace-determinism {label:17s} {verdict}")
     return 1 if failures else 0
 
 

@@ -1,0 +1,356 @@
+"""Flight-recorder observability plane: span stitching, latency
+breakdown, placement provenance, export schemas, determinism, and the
+zero-overhead-when-off guarantee (§observability)."""
+
+import json
+import os
+import tracemalloc
+
+import pytest
+
+from chaos import (
+    SCRIPTED_SCHEDULE,
+    check_trace_determinism,
+    scripted_partition_schedule,
+)
+from repro.core import (
+    GB,
+    ClusterSpec,
+    Job,
+    ProfileRepository,
+    SimReport,
+    validate_schema,
+)
+from repro.core import telemetry as telemetry_mod
+from repro.core.telemetry import FlightRecorder, TraceConfig
+from repro.sim import Simulation, bursty_trace_workload
+from repro.workflows import MODELS, paper_dfgs, translation_dfg
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_profiles(cluster):
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def load_schema(name):
+    with open(os.path.join(REPO, "schemas", name)) as f:
+        return json.load(f)
+
+
+class _FakeRecord:
+    """Minimal JobRecord stand-in (SimReport reads job_id/arrival/finish)."""
+
+    def __init__(self, job_id, arrival, finish):
+        self.job_id, self.arrival, self.finish = job_id, arrival, finish
+
+    @property
+    def latency(self):
+        return self.finish - self.arrival
+
+
+class _FakeResult:
+    def __init__(self, records, trace):
+        self.records, self.trace = records, trace
+
+
+@pytest.fixture(scope="module")
+def traced():
+    """One traced 30 s navigator run shared by the read-only tests."""
+    cluster = ClusterSpec(n_workers=5)
+    profiles = make_profiles(cluster)
+    jobs = bursty_trace_workload(
+        paper_dfgs(), base_rate_per_s=0.8, duration_s=30.0, seed=3
+    )
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator", seed=1, trace=True
+    )
+    res = sim.run(jobs)
+    return res, SimReport(res)
+
+
+# --------------------------------------------------------------------------
+# Span stitcher: hand-built 3-task DAG with a closed-form breakdown
+# --------------------------------------------------------------------------
+def _emit_diamond(rec, stall=0.0):
+    """Job 7: entry tasks a (w0, cache hit) and b (w1, demand fetch),
+    join task c (w0) gated by b.  With ``stall`` > 0, c's input shipment
+    leaves ``stall`` seconds after b completes (a recovery re-staging
+    gap), exercising the critical-path fallback rule.
+
+    Closed form (stall=0): a queues 0.5 then computes 1.0; b ships its
+    0.2 s entry payload, waits 0.8 s on the model fetch, computes 1.0;
+    c ships b's output for 0.3 s, queues 0.5, computes 0.5.  Critical
+    path c <- b; JCT 3.3 = queue 0.5 + input 0.2 + ship 0.3 + fetch 0.8
+    + compute 1.5.
+    """
+    E = rec.emit
+    E(0.0, "job.arrive", job=7)
+    E(0.0, "task.input", worker=0,
+      job=7, task="a", gen=0, src="", frm=-1, to=0, arrive=0.0)
+    E(0.0, "task.input", worker=1,
+      job=7, task="b", gen=0, src="", frm=-1, to=1, arrive=0.2)
+    E(0.2, "fetch.start", worker=1,
+      fetch_kind="demand", model=3, bytes=1.0 * GB, dur=0.8, job=7, task="b")
+    E(0.5, "task.start", worker=0, job=7, task="a", gen=0, model=-1,
+      miss=False)
+    E(1.0, "fetch.done", worker=1, model=3, spec=False)
+    E(1.0, "task.start", worker=1, job=7, task="b", gen=0, model=3,
+      miss=True)
+    E(1.5, "task.done", worker=0, job=7, task="a", gen=0)
+    E(1.5, "task.input", worker=0,
+      job=7, task="c", gen=0, src="a", frm=0, to=0, arrive=1.5)
+    E(2.0, "task.done", worker=1, job=7, task="b", gen=0)
+    t_ship = 2.0 + stall
+    E(t_ship, "task.input", worker=0,
+      job=7, task="c", gen=0, src="b", frm=1, to=0, arrive=t_ship + 0.3)
+    E(t_ship + 0.8, "task.start", worker=0, job=7, task="c", gen=0,
+      model=-1, miss=False)
+    E(t_ship + 1.3, "task.done", worker=0, job=7, task="c", gen=0)
+    E(t_ship + 1.3, "job.done", job=7, latency=t_ship + 1.3)
+    return t_ship + 1.3
+
+
+def test_span_stitcher_closed_form():
+    rec = FlightRecorder(2)
+    finish = _emit_diamond(rec)
+    report = SimReport(_FakeResult([_FakeRecord(7, 0.0, finish)], rec))
+
+    b = report.final_span(7, "b")
+    assert b.worker == 1 and b.miss and b.model == 3
+    assert b.t_send == 0.0 and b.t_ready == pytest.approx(0.2)
+    assert b.input_s == pytest.approx(0.2)
+    assert b.model_ready == pytest.approx(1.0)
+    assert b.fetch_s == pytest.approx(0.8)
+    assert b.queue_s == pytest.approx(0.0)
+    assert b.compute_s == pytest.approx(1.0)
+
+    c = report.final_span(7, "c")
+    assert c.t_send == pytest.approx(2.0)
+    assert c.t_ready == pytest.approx(2.3)
+    assert c.input_s == pytest.approx(0.3)
+    assert c.fetch_s == 0.0  # cache hit: no fetch on the span
+    assert c.queue_s == pytest.approx(0.5)
+    assert c.compute_s == pytest.approx(0.5)
+
+    # b's completion gates c's shipment exactly -> path walks c <- b.
+    assert report.critical_path(7) == [("c", 0), ("b", 0)]
+
+    bd = report.latency_breakdown(7)
+    assert bd.queue_s == pytest.approx(0.5)
+    assert bd.input_transfer_s == pytest.approx(0.2)
+    assert bd.output_ship_s == pytest.approx(0.3)
+    assert bd.fetch_wait_s == pytest.approx(0.8)
+    assert bd.compute_s == pytest.approx(1.5)
+    assert bd.jct_s == pytest.approx(3.3)
+    assert bd.components_sum_s == pytest.approx(bd.jct_s, abs=1e-12)
+
+    # explain() falls back to the measured span when no decisions exist.
+    assert "measured:" in report.explain("c", 7)
+
+
+def test_critical_path_stall_absorbed_as_queueing():
+    """With a 0.1 s gap between b's completion and c's shipment there is
+    no exact-match predecessor; the walk falls back to the latest-
+    arriving input's producer and the gap lands in queue_s."""
+    rec = FlightRecorder(2)
+    finish = _emit_diamond(rec, stall=0.1)
+    report = SimReport(_FakeResult([_FakeRecord(7, 0.0, finish)], rec))
+
+    assert report.critical_path(7) == [("c", 0), ("b", 0)]
+    bd = report.latency_breakdown(7)
+    assert bd.queue_s == pytest.approx(0.6)   # 0.5 dispatch + 0.1 stall
+    assert bd.output_ship_s == pytest.approx(0.3)
+    assert bd.components_sum_s == pytest.approx(bd.jct_s, abs=1e-12)
+
+
+def test_simreport_requires_trace_and_flags_drops():
+    with pytest.raises(ValueError):
+        SimReport(_FakeResult([], None))
+    rec = FlightRecorder(1, TraceConfig(ring_capacity=4))
+    for i in range(10):
+        rec.emit(float(i), "task.start", worker=0,
+                 job=0, task="t", gen=0, model=-1, miss=False)
+    assert rec.dropped == 6
+    report = SimReport(_FakeResult([_FakeRecord(0, 0.0, 1.0)], rec))
+    with pytest.raises(ValueError, match="dropped"):
+        _ = report.spans
+
+
+# --------------------------------------------------------------------------
+# Traced simulation: breakdown exactness, provenance, export schemas
+# --------------------------------------------------------------------------
+def test_sim_breakdown_sums_to_jct(traced):
+    res, report = traced
+    assert res.trace is not None and res.trace.dropped == 0
+    assert len(res.records) > 5
+    for r in res.records:
+        bd = report.latency_breakdown(r.job_id)
+        assert abs(bd.components_sum_s - bd.jct_s) < 1e-6
+        assert abs(bd.jct_s - r.latency) < 1e-9
+    agg = report.latency_breakdown()
+    assert agg["jobs"] == len(res.records)
+    assert sum(agg["shares"].values()) == pytest.approx(1.0)
+
+
+def test_provenance_eq2_recomposition(traced):
+    """Every recorded candidate vector re-composes to its total (Eq. 2:
+    max(queue, input) + model + runtime + liveness) and, absent an
+    override note, the chosen worker is the candidate argmin."""
+    res, _ = traced
+    placements = res.trace.placements
+    assert placements
+    assert {"plan", "adjust"} <= {d.phase for d in placements}
+    n_place_events = sum(
+        1 for e in res.trace.events() if e[2] == "sched.place"
+    )
+    assert n_place_events == len(placements)
+    for d in placements:
+        chosen = d.candidate(d.chosen)
+        assert chosen is not None, f"{d.task_id}: chosen worker not recorded"
+        feasible = [c for c in d.candidates if c.total_s != float("inf")]
+        assert feasible
+        if not d.note:  # herd-sticky / hysteresis overrides carry a note
+            best = min(c.total_s for c in feasible)
+            assert chosen.total_s <= best + 1e-6
+        if d.phase in ("plan", "jit", "recovery"):
+            for c in feasible:
+                recomposed = (max(c.queue_s, c.input_s) + c.model_s
+                              + c.runtime_s + c.liveness_s)
+                assert abs(recomposed - c.total_s) < 1e-6, (
+                    f"{d.phase}/{d.task_id} w{c.worker}: "
+                    f"{recomposed} != {c.total_s}"
+                )
+
+
+def test_explain_renders_decision_table(traced):
+    res, report = traced
+    d = res.trace.placements[0]
+    text = report.explain(d.task_id, d.job_id)
+    assert f"job {d.job_id}" in text and d.task_id in text
+    assert "total" in text           # cost-vector table header
+    assert f"w{d.chosen}" in text
+
+
+def test_jax_python_provenance_agree():
+    """The jax planner's recorded Eq. 2 component vectors match the
+    python Navigator's on the same SST snapshot (pushed rows: the
+    documented eviction-surrogate divergence only appears on empty
+    unpublished rows)."""
+    pytest.importorskip("jax")
+    from repro.core.jax_planner import JaxNavigatorPlanner
+    from repro.core.scheduler import NavigatorScheduler
+    from repro.core.state import SharedStateTable
+
+    cluster = ClusterSpec(n_workers=3)
+    profiles = make_profiles(cluster)
+    sst = SharedStateTable(3)
+    for w in range(3):
+        bitmap = 0b111 if w == 0 else 0
+        sst.update_cache(w, bitmap, 8.0 * GB, 0.0)
+        sst.push(w, 0.0)
+    view = sst.view(0, 0.0)
+    job = Job(0, translation_dfg(), arrival_time=0.0)
+
+    py = NavigatorScheduler(profiles)
+    py.recorder = FlightRecorder(3)
+    adfg_py = py.plan(job, 0.0, 0, view)
+
+    jx = JaxNavigatorPlanner(profiles)
+    jx.recorder = FlightRecorder(3)
+    adfg_jx = jx.plan(job, 0.0, 0, view)
+
+    assert jx.recorder.placements, "jax planner recorded no provenance"
+    for tid in job.dfg.tasks:
+        assert adfg_py[tid] == adfg_jx[tid]
+        dp = py.recorder.decisions(0, tid)
+        dj = jx.recorder.decisions(0, tid)
+        assert len(dp) == 1 and len(dj) == 1
+        assert dp[0].chosen == dj[0].chosen
+        for cp, cj in zip(dp[0].candidates, dj[0].candidates):
+            assert cp.worker == cj.worker
+            if cp.total_s == float("inf"):
+                assert cj.total_s == float("inf")
+                continue
+            assert cj.model_s == pytest.approx(cp.model_s, abs=1e-3)
+            assert cj.total_s == pytest.approx(cp.total_s, abs=1e-3)
+
+
+def test_exports_validate_against_schemas(traced):
+    res, _ = traced
+    chrome = json.loads(json.dumps(res.trace.to_chrome_trace()))
+    validate_schema(chrome, load_schema("trace.schema.json"))
+    assert any(e["ph"] == "X" for e in chrome["traceEvents"])
+    validate_schema(res.metrics.export(), load_schema("metrics.schema.json"))
+
+
+def test_validate_schema_rejects_bad_payloads():
+    schema = load_schema("metrics.schema.json")
+    with pytest.raises(ValueError):                  # missing required key
+        validate_schema({"metrics": []}, schema)
+    with pytest.raises(ValueError):                  # enum violation
+        validate_schema(
+            {"schema_version": 1,
+             "metrics": [{"name": "x", "type": "timer", "labels": {}}]},
+            schema,
+        )
+    with pytest.raises(ValueError):                  # additionalProperties
+        validate_schema(
+            {"schema_version": 1, "metrics": [], "extra": 1}, schema
+        )
+
+
+# --------------------------------------------------------------------------
+# Determinism + zero-overhead-when-off
+# --------------------------------------------------------------------------
+def test_trace_determinism_gossip_churn():
+    check_trace_determinism(
+        schedule=[e for e in SCRIPTED_SCHEDULE if e.time < 20.0],
+        duration=20.0, rate=1.0,
+    )
+
+
+def test_trace_determinism_shared_table_churn():
+    check_trace_determinism(
+        schedule=[e for e in SCRIPTED_SCHEDULE if e.time < 20.0],
+        duration=20.0, rate=1.0, gossip=None,
+    )
+
+
+def test_trace_determinism_partition():
+    check_trace_determinism(
+        schedule=scripted_partition_schedule(5), duration=20.0, rate=1.0,
+    )
+
+
+def test_tracing_off_zero_telemetry_allocations():
+    """The tracing-off event loop must perform zero allocations
+    attributable to core/telemetry.py (the zero-overhead-when-off
+    contract, also enforced by tools/trace_smoke.py in CI)."""
+    cluster = ClusterSpec(n_workers=5)
+    profiles = make_profiles(cluster)
+    jobs = bursty_trace_workload(
+        paper_dfgs(), base_rate_per_s=0.8, duration_s=10.0, seed=3
+    )
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator", seed=1, trace=False
+    )
+    sim._schedule_initial(jobs)
+    tracemalloc.start(25)
+    try:
+        before = tracemalloc.take_snapshot()
+        sim._event_loop()
+        after = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    flt = [tracemalloc.Filter(True, telemetry_mod.__file__)]
+    stats = after.filter_traces(flt).compare_to(
+        before.filter_traces(flt), "lineno"
+    )
+    leaked = [s for s in stats if s.size_diff > 0 or s.count_diff > 0]
+    assert not leaked, "\n".join(str(s) for s in leaked)
+    res = sim._assemble_result()
+    assert res.trace is None and res.records
