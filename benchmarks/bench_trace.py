@@ -10,14 +10,20 @@ sum to the measured JCT) plus, for the chosen task, every placement
 decision with its per-candidate Eq. 2 cost vector — "why worker 3 and
 not worker 5", answered from the trace alone (see EXPERIMENTS.md
 "Reading a trace").  ``--export DIR`` additionally writes the
-deterministic JSONL and Chrome-trace/Perfetto JSON exports."""
+deterministic JSONL and Chrome-trace/Perfetto JSON exports.
+
+``--calibration`` joins the recorded Eq. 2 cost vectors against the
+measured span breakdowns of the same replay and prints per-component
+residual statistics (queue / input-transfer / model-fetch / runtime)
+for the navigator and JIT schedulers — the cost-model calibration
+report (see EXPERIMENTS.md "Calibrating the cost model")."""
 
 from __future__ import annotations
 
 import argparse
 import os
 import sys
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from benchmarks.common import save_json
 from repro.core import ClusterSpec, ProfileRepository, SimReport
@@ -118,12 +124,33 @@ def explain(
         print(f"# exported {jsonl} and {chrome}", file=sys.stderr)
 
 
+def calibration(
+    schedulers: Sequence[str] = ("navigator", "jit"),
+    duration_s: float = 60.0,
+) -> None:
+    """Eq. 2 cost-model calibration on the standing trace benchmark:
+    predicted cost components from placement provenance vs measured span
+    breakdowns, per scheduler."""
+    for sched in schedulers:
+        report = _traced_run(sched, duration_s)
+        cal = report.calibration()
+        print(cal.format_table())
+        worst = cal.worst_component()
+        stats = cal.components[worst].as_dict()
+        print(f"# worst-calibrated component for {sched}: {worst} "
+              f"(mean |residual| {stats['residual_abs_mean_s']:.4f}s)")
+        print()
+
+
 def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--explain", nargs="?", const="", metavar="TASK_ID",
                     default=None,
                     help="print per-job latency breakdowns; with a TASK_ID, "
                          "also that task's placement provenance")
+    ap.add_argument("--calibration", action="store_true",
+                    help="print the Eq. 2 cost-model calibration report "
+                         "(navigator + jit) and exit")
     ap.add_argument("--scheduler", default="navigator", choices=SCHEDULERS)
     ap.add_argument("--duration", type=float, default=60.0,
                     help="replay horizon for --explain (seconds)")
@@ -132,6 +159,9 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--export", metavar="DIR", default=None,
                     help="write JSONL + Chrome-trace exports to DIR")
     args = ap.parse_args(argv)
+    if args.calibration:
+        calibration(duration_s=args.duration)
+        return
     if args.explain is not None or args.export is not None:
         explain(args.explain or None, args.scheduler, args.duration,
                 args.export, args.jobs)

@@ -36,6 +36,18 @@ SUITES = [
 
 TRAJECTORY_PATH = os.environ.get("REPRO_TRAJECTORY", "BENCH_trajectory.json")
 
+# Smoke runs (REPRO_BENCH_SMOKE=1) use shrunken horizons, so their
+# numbers live under distinct ``<suite>@smoke`` trajectory keys — a CI
+# smoke run never overwrites (or gets diffed against) a full-horizon
+# cell.  tools/bench_regression.py compares fresh smoke runs against
+# the committed ``@smoke`` cells.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def suite_key(suite: str) -> str:
+    """Trajectory cell name for a suite under the current run mode."""
+    return f"{suite}@smoke" if SMOKE else suite
+
 # Row-name fragments worth tracking across PRs (JCT percentiles + hit
 # rates, whatever the suite's exact naming scheme).
 _TRACK = re.compile(
@@ -103,7 +115,7 @@ def main() -> None:
               file=sys.stderr)
         summary = _summarize(rows)
         if summary:
-            per_suite[suite] = {
+            per_suite[suite_key(suite)] = {
                 "metrics": summary,
                 "wall_s": round(elapsed, 1),
             }

@@ -6,6 +6,14 @@ the GPU memory manager (FIFO + queue-lookahead eviction), the decentralized
 shared state table, and the baseline schedulers (JIT / HEFT / Hash).
 """
 
+from repro.core.healthplane import (
+    CalibrationReport,
+    HealthConfig,
+    HealthEvent,
+    HealthMonitor,
+    QuantileSketch,
+    calibrate,
+)
 from repro.core.memory import CacheStats, GpuMemoryManager
 from repro.core.netmodel import (
     AcceleratorLink,
@@ -66,6 +74,7 @@ __all__ = [
     "ALIVE",
     "AcceleratorLink",
     "CacheStats",
+    "CalibrationReport",
     "CandidateCost",
     "ClusterSpec",
     "DEAD",
@@ -78,6 +87,9 @@ __all__ = [
     "GpuMemoryManager",
     "HEFTScheduler",
     "HashScheduler",
+    "HealthConfig",
+    "HealthEvent",
+    "HealthMonitor",
     "JITScheduler",
     "Job",
     "LeaseConfig",
@@ -95,6 +107,7 @@ __all__ = [
     "PrefetchPlane",
     "PrefetchStats",
     "ProfileRepository",
+    "QuantileSketch",
     "RACK_FLEETS",
     "SCHEDULERS",
     "SSTRow",
@@ -108,6 +121,7 @@ __all__ = [
     "TraceConfig",
     "WorkerProfile",
     "build_fleet",
+    "calibrate",
     "fleet",
     "make_scheduler",
     "rack_topology",

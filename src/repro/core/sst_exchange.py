@@ -21,8 +21,8 @@ Two transports live here:
    axis of a JAX mesh.  Like the RDMA original, a push moves one cache
    line per peer.
 
-Row layout (uint32 lanes — exact bit transport; 12 lanes = 48 bytes, still
-under one 64-byte cache line, keeping the wire format faithful to Fig. 5):
+Row layout (uint32 lanes — exact bit transport; 16 lanes = 64 bytes =
+exactly one cache line, keeping the wire format faithful to Fig. 5):
   [0] ft_estimate_s   (f32 bit pattern)
   [1] cache_bitmap lo 32 bits
   [2] cache_bitmap hi 32 bits
@@ -35,6 +35,10 @@ under one 64-byte cache line, keeping the wire format faithful to Fig. 5):
   [9] epoch (31 bits) | draining flag (bit 31)
   [10] in-flight fetch model id + 1 (0 = no fetch in flight)
   [11] fetch_eta_s    (f32 bit pattern — expected fetch completion)
+  [12] health: queue depth            (core/healthplane.py digest lane)
+  [13] health: GPU-memory occupancy   (f32 bit pattern, 0..1)
+  [14] health: fetch-pipe utilization (f32 bit pattern, 0..1)
+  [15] health: local task-latency p99 (f32 bit pattern, seconds)
 """
 
 from __future__ import annotations
@@ -51,7 +55,7 @@ from repro.core.state import ALIVE, DEAD, LeaseConfig, SSTRow, SUSPECT
 # jax is imported lazily inside make_sst_allgather so the gossip plane
 # (pure Python) stays importable on hosts without an accelerator stack.
 
-ROW_WIDTH = 12
+ROW_WIDTH = 16
 
 
 def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
@@ -68,6 +72,10 @@ def pack_row(row: SSTRow, queue_len: int = 0) -> np.ndarray:
     out[9] = np.uint32((row.epoch & 0x7FFFFFFF) | (int(row.draining) << 31))
     out[10] = np.uint32(row.fetch_model_id + 1)
     out[11] = np.float32(row.fetch_eta_s).view(np.uint32)
+    out[12] = np.uint32(min(row.health_queue_depth, 2**32 - 1))
+    out[13] = np.float32(row.health_mem_occupancy).view(np.uint32)
+    out[14] = np.float32(row.health_fetch_util).view(np.uint32)
+    out[15] = np.float32(row.health_p99_latency_s).view(np.uint32)
     return out
 
 
@@ -88,6 +96,10 @@ def unpack_rows(table: np.ndarray) -> List[SSTRow]:
                 draining=bool(int(r[9]) >> 31),
                 fetch_model_id=int(r[10]) - 1,
                 fetch_eta_s=float(r[11:12].view(np.float32)[0]),
+                health_queue_depth=int(r[12]),
+                health_mem_occupancy=float(r[13:14].view(np.float32)[0]),
+                health_fetch_util=float(r[14:15].view(np.float32)[0]),
+                health_p99_latency_s=float(r[15:16].view(np.float32)[0]),
             )
         )
     return rows
@@ -134,9 +146,9 @@ class GossipConfig:
     ``drop_prob``  — per-message loss probability.  Lost rows are *not*
                      retransmitted point-to-point; they reach the peer via
                      relay through third parties, as in rumor mongering.
-    ``wire_row_bytes`` — bytes per row update on the wire (the 12-lane
-                     packed row above; the owner header rides the same
-                     64-byte cache line).
+    ``wire_row_bytes`` — bytes per row update on the wire (the 16-lane
+                     packed row above: exactly one 64-byte cache line,
+                     owner header in-line).
     ``seed``       — peer-selection / drop-sampling RNG seed (combined
                      with the driving engine's seed for determinism).
     """
@@ -144,7 +156,7 @@ class GossipConfig:
     period_s: float = 0.2
     fanout: int = 2
     drop_prob: float = 0.0
-    wire_row_bytes: float = 48.0  # 12 packed lanes (owner header in-line)
+    wire_row_bytes: float = 64.0  # 16 packed lanes = one cache line
     seed: int = 0
 
 
@@ -275,6 +287,26 @@ class GossipPlane:
         """Prefetch-plane advertisement; disseminates like any other row
         mutation (diff-shipped, epidemically relayed)."""
         self.local[worker].intent_bitmap = intent_bitmap
+        self._bump(worker, now)
+
+    def update_health(
+        self,
+        worker: int,
+        queue_depth: int,
+        mem_occupancy: float,
+        fetch_util: float,
+        p99_latency_s: float,
+        now: float = 0.0,
+    ) -> None:
+        """Health-digest lane (core/healthplane.py, wire lanes 12–15):
+        refreshed by the engine right before the owner's gossip round, so
+        every reader's view of fleet health is staleness-bounded by the
+        dissemination period — no oracle, same discipline as load/cache."""
+        row = self.local[worker]
+        row.health_queue_depth = queue_depth
+        row.health_mem_occupancy = mem_occupancy
+        row.health_fetch_util = fetch_util
+        row.health_p99_latency_s = p99_latency_s
         self._bump(worker, now)
 
     # -- membership (heartbeat/lease lane) ----------------------------------

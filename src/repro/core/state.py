@@ -98,6 +98,14 @@ class SSTRow:
     # scale the intent discount (a nearly-done fetch is nearly free).
     fetch_model_id: int = -1
     fetch_eta_s: float = 0.0
+    # Health-digest lane (core/healthplane.py): the owner's four-field
+    # health summary, refreshed right before each publication so every
+    # reader holds a staleness-bounded view of fleet health with no
+    # oracle — wire lanes 12–15 in sst_exchange.py.
+    health_queue_depth: int = 0
+    health_mem_occupancy: float = 0.0
+    health_fetch_util: float = 0.0
+    health_p99_latency_s: float = 0.0
     # Reader-side annotation (NOT wire state): the membership state the
     # reader that produced this view assigns the row.  Filled by
     # ``view(..., now=...)`` when a lease is configured; planners cost
@@ -117,6 +125,10 @@ class SSTRow:
             self.draining,
             self.fetch_model_id,
             self.fetch_eta_s,
+            self.health_queue_depth,
+            self.health_mem_occupancy,
+            self.health_fetch_util,
+            self.health_p99_latency_s,
             self.liveness,
         )
 
@@ -195,6 +207,26 @@ class SharedStateTable:
         row.intent_bitmap = intent_bitmap
         row.pushed_at = max(row.pushed_at, now)
 
+    def update_health(
+        self,
+        worker: int,
+        queue_depth: int,
+        mem_occupancy: float,
+        fetch_util: float,
+        p99_latency_s: float,
+        now: float = 0.0,
+    ) -> None:
+        """Health-digest lane (core/healthplane.py): the engine refreshes
+        the owner's four-field digest right before each publication, so
+        the replicated view's staleness is bounded by the push interval
+        like every other lane."""
+        row = self.local[worker]
+        row.health_queue_depth = queue_depth
+        row.health_mem_occupancy = mem_occupancy
+        row.health_fetch_util = fetch_util
+        row.health_p99_latency_s = p99_latency_s
+        row.pushed_at = max(row.pushed_at, now)
+
     # -- membership (heartbeat/lease lane) -----------------------------------
     def heartbeat(self, worker: int, now: float) -> None:
         """Owner self-stamp; reaches peers on the next push (so lease age
@@ -224,6 +256,12 @@ class SharedStateTable:
         self.published[worker].heartbeat_s = self.local[worker].heartbeat_s
         self.published[worker].draining = self.local[worker].draining
         self.published[worker].epoch = self.local[worker].epoch
+        # The health-digest lane rides the load cadence (both describe
+        # the owner's instantaneous busyness).
+        self.published[worker].health_queue_depth = self.local[worker].health_queue_depth
+        self.published[worker].health_mem_occupancy = self.local[worker].health_mem_occupancy
+        self.published[worker].health_fetch_util = self.local[worker].health_fetch_util
+        self.published[worker].health_p99_latency_s = self.local[worker].health_p99_latency_s
         self.published[worker].pushed_at = now
         self._pushes += 1
 

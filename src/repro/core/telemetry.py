@@ -40,6 +40,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import gzip
+import io
 import json
 from typing import (
     Any,
@@ -355,6 +357,17 @@ class FlightRecorder:
             e - len(r) for e, r in zip(self._emitted, self._rings)
         )
 
+    def ring_stats(self) -> Dict[str, Tuple[int, int]]:
+        """Per-ring (emitted, dropped) counts keyed by ring name
+        (``worker<N>`` / ``cluster``) — the engines fold these into the
+        MetricsRegistry export (``trace.emitted`` / ``trace.dropped``)
+        so a drop-rate alert needs no trace access."""
+        out: Dict[str, Tuple[int, int]] = {}
+        for i, (e, r) in enumerate(zip(self._emitted, self._rings)):
+            name = f"worker{i}" if i < self.n_workers else "cluster"
+            out[name] = (e, e - len(r))
+        return out
+
     def events(self) -> List[Tuple[int, float, str, int, Dict[str, Any]]]:
         """All retained events in emission order (seq-sorted)."""
         out: List[Tuple[int, float, str, int, Dict[str, Any]]] = []
@@ -442,7 +455,9 @@ class FlightRecorder:
                           "task.bounce", "task.dead_letter",
                           "task.recover", "gossip.exchange",
                           "intent.admit", "intent.cancel",
-                          "fetch.promote"):
+                          "fetch.promote", "health.straggler",
+                          "health.queue_buildup", "health.memory_thrash",
+                          "health.spine_saturation"):
                 tev.append({
                     "ph": "i", "s": "p" if pid < self.n_workers else "g",
                     "cat": kind.split(".")[0], "name": kind,
@@ -456,11 +471,26 @@ class FlightRecorder:
             "traceEvents": tev,
         }
 
+    def export_jsonl(self, path: str, compress: bool = False) -> None:
+        """Write the JSONL stream to ``path``; with ``compress=True`` the
+        stream is gzipped (``mtime=0`` so the archive, like the
+        uncompressed stream, is byte-deterministic across reruns — long
+        open-loop traces shrink ~10×)."""
+        payload = self.to_jsonl().encode("utf-8")
+        if compress:
+            raw = io.BytesIO()
+            with gzip.GzipFile(fileobj=raw, mode="wb", mtime=0) as gz:
+                gz.write(payload)
+            with open(path, "wb") as f:
+                f.write(raw.getvalue())
+        else:
+            with open(path, "wb") as f:
+                f.write(payload)
+
     def write(self, jsonl_path: Optional[str] = None,
               chrome_path: Optional[str] = None) -> None:
         if jsonl_path:
-            with open(jsonl_path, "w") as f:
-                f.write(self.to_jsonl())
+            self.export_jsonl(jsonl_path)
         if chrome_path:
             with open(chrome_path, "w") as f:
                 json.dump(self.to_chrome_trace(), f, indent=1,
@@ -833,6 +863,27 @@ class SimReport:
 
     def _placement_keys(self):
         return self.recorder._placement_index.keys()
+
+    # -- health plane (core/healthplane.py) -----------------------------------
+    def health_summary(self) -> Dict[str, Any]:
+        """Deterministic health report for the run (windowed series
+        aggregates, fleet latency sketches, detector ledger); requires
+        ``Simulation(..., health=True)``."""
+        health = getattr(self.result, "health", None)
+        if health is None:
+            raise ValueError(
+                "SimReport.health_summary needs a health-monitored run: "
+                "pass health=True to the engine (result.health is None)"
+            )
+        return health.summary()
+
+    def calibration(self):
+        """Eq. 2 cost-model calibration: per-component residuals of this
+        run's placement provenance against its measured spans (see
+        ``core.healthplane.calibrate``)."""
+        from repro.core.healthplane import calibrate
+
+        return calibrate(self)
 
 
 # --------------------------------------------------------------------------

@@ -35,6 +35,7 @@ from repro.core import (
     ProfileRepository,
     SharedStateTable,
 )
+from repro.core.healthplane import HealthConfig, HealthMonitor
 from repro.core.scheduler import Scheduler, make_scheduler
 from repro.core.sst_exchange import GossipConfig, GossipPlane
 from repro.core.telemetry import FlightRecorder, TraceConfig
@@ -123,6 +124,7 @@ class ServingCluster:
         gossip: Optional[GossipConfig] = None,
         prefetch: Optional[PrefetchConfig] = None,
         trace: Union[bool, TraceConfig] = False,
+        health: Union[bool, HealthConfig] = False,
     ) -> None:
         self.cluster = cluster
         self.hosted = {h.model_id: h for h in hosted}
@@ -144,6 +146,15 @@ class ServingCluster:
                 trace if isinstance(trace, TraceConfig) else None,
             )
             self.scheduler.recorder = self.recorder
+        # Health plane (core/healthplane.py) on the virtual clock: same
+        # zero-overhead-when-off ``is not None`` guard as the recorder.
+        self.health: Optional[HealthMonitor] = None
+        if health:
+            self.health = HealthMonitor(
+                cluster.n_workers,
+                health if isinstance(health, HealthConfig) else None,
+                recorder=self.recorder,
+            )
         # ``gossip`` swaps the single-snapshot table for the decentralized
         # per-worker view plane: the planner then reads the *origin
         # worker's* replica, which lags peers by up to a gossip period.
@@ -208,13 +219,15 @@ class ServingCluster:
             self._issue_prefetches(job, adfg, now)
         rec = self.recorder
         if rec is not None:
-            rec.emit(now, "job.arrive", worker=origin, job=job.job_id,
+            # Cluster-scope lifecycle events ride the GLOBAL ring, same
+            # as the simulator (parity-tested: identical taxonomy).
+            rec.emit(now, "job.arrive", job=job.job_id,
                      dfg=dfg.name, origin=origin, n_tasks=len(dfg.tasks))
 
         wall0 = time.perf_counter()
         outputs: Dict[str, np.ndarray] = {}
         finish: Dict[str, float] = {}
-        for tid in dfg.topo_order:
+        for ti, tid in enumerate(dfg.topo_order):
             task = dfg.tasks[tid]
             w = adfg[tid]
             mem = self.memories[w]
@@ -233,6 +246,11 @@ class ServingCluster:
                         rec.emit(finish[p], "net.xfer", worker=adfg[p],
                                  dst=w, bytes=dfg.tasks[p].output_bytes,
                                  dur=dur, scope="flat", share=1.0)
+                    if self.health is not None:
+                        self.health.on_transfer(
+                            finish[p], "flat", dfg.tasks[p].output_bytes,
+                            1.0, cross=False,
+                        )
             if rec is not None:
                 if not dfg.preds[tid]:
                     rec.emit(now, "task.input", worker=w, job=job.job_id,
@@ -263,6 +281,9 @@ class ServingCluster:
                                  dur=fetch_s, job=job.job_id, task=tid)
                         rec.emit(start + fetch_s, "fetch.done", worker=w,
                                  model=task.model_id, spec=False)
+                    if self.health is not None and fetch_s > 0.0:
+                        self.health.fetch_state(w, start, True)
+                        self.health.fetch_state(w, start + fetch_s, False)
                     if fetch_s > 0.0 and self.prefetch_plane is not None:
                         # Demand miss: demand preempts speculation on the
                         # single fetch pipe — the transfer starts now, and
@@ -287,6 +308,14 @@ class ServingCluster:
                                      model=task.model_id, job=job.job_id,
                                      task=tid)
                 self.sst.update_cache(w, mem.bitmap, mem.free_bytes, start)
+                if self.health is not None:
+                    self.health.sample_memory(
+                        w, start,
+                        (mem.used_bytes + mem.exec_reserved_bytes)
+                        / mem.capacity_bytes
+                        if mem.capacity_bytes > 0 else 0.0,
+                        mem.stats.evictions,
+                    )
                 if self.prefetch_plane is not None:
                     self.sst.update_intent(
                         w,
@@ -314,14 +343,34 @@ class ServingCluster:
                          task=tid, gen=0)
             self._vclock[w] = finish[tid]
             self.sst.update_load(w, self._vclock[w], finish[tid])
+            if self.health is not None:
+                # Virtual-queue depth: this job's tasks still bound to w
+                # (including the one just finished draining to 0 marks
+                # the backlog the next probe would see).
+                depth = sum(
+                    1 for t2 in dfg.topo_order[ti + 1:] if adfg[t2] == w
+                )
+                self.health.sample_queue(w, finish[tid], depth)
+                self.health.task_done(
+                    w, finish[tid], runtime,
+                    self.profiles.runtime(task, w),
+                )
+                # Digest refresh rides the publication, same as the sim.
+                d = self.health.digest(w, finish[tid])
+                self.sst.update_health(
+                    w, d.queue_depth, d.mem_occupancy, d.fetch_util,
+                    d.p99_latency_s, finish[tid],
+                )
             if self.gossip is not None:
                 self.sst.advance(finish[tid])
             else:
                 self.sst.push(w, finish[tid])
+        t_end = max(finish.values())
         if rec is not None:
-            t_end = max(finish.values())
-            rec.emit(t_end, "job.done", worker=origin, job=job.job_id,
+            rec.emit(t_end, "job.done", job=job.job_id,
                      latency=t_end - now)
+        if self.health is not None:
+            self.health.job_done(t_end, t_end - now)
         result = RequestResult(
             job_id=job.job_id,
             dfg_name=dfg.name,
@@ -359,13 +408,22 @@ class ServingCluster:
                     break
                 fetch_s, _ = res
                 if self.recorder is not None:
+                    # Same key set as the simulator's speculative
+                    # fetch.start (no job/task: nothing demanded it yet).
                     self.recorder.emit(
                         t_pipe, "fetch.start", worker=w,
                         fetch_kind="prefetch", model=intent.model_id,
                         bytes=mem.cached_size(intent.model_id),
-                        dur=fetch_s, job=-1, task="",
+                        dur=fetch_s,
                     )
+                if self.health is not None:
+                    self.health.fetch_state(w, t_pipe, True)
                 t_pipe += fetch_s
+                if self.recorder is not None:
+                    self.recorder.emit(t_pipe, "fetch.done", worker=w,
+                                       model=intent.model_id, spec=True)
+                if self.health is not None:
+                    self.health.fetch_state(w, t_pipe, False)
                 mem.complete_prefetch(intent.model_id)
                 plane.complete_inflight(w)
                 self._prefetch_ready_at[w][intent.model_id] = t_pipe

@@ -28,6 +28,7 @@ import math
 import random
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple, Union
 
+from repro.core.healthplane import HealthConfig, HealthMonitor
 from repro.core.memory import GpuMemoryManager
 from repro.core.netmodel import ClusterSpec, NetworkState
 from repro.core.telemetry import (
@@ -144,6 +145,10 @@ class SimResult:
     # it (or the whole result) to ``SimReport`` for latency breakdowns,
     # critical paths, and placement provenance.
     trace: Optional[FlightRecorder] = None
+    # Health monitor (core/healthplane.py) when the health plane ran:
+    # windowed series, latency sketches, and detector ledger — read via
+    # ``SimReport.health_summary()`` or ``health.summary()`` directly.
+    health: Optional[HealthMonitor] = None
 
     # -- derived views over the metrics registry -------------------------------
     @property
@@ -330,6 +335,7 @@ class Simulation:
         churn: Optional[Sequence[ChurnEvent]] = None,
         record_events: bool = False,
         trace: Union[bool, TraceConfig] = False,
+        health: Union[bool, HealthConfig] = False,
         runtime_noise_sigma: float = 0.25,
         seed: int = 0,
     ) -> None:
@@ -351,6 +357,16 @@ class Simulation:
                 trace if isinstance(trace, TraceConfig) else None,
             )
         self.scheduler.recorder = self._rec  # placement provenance sink
+        # Health plane (core/healthplane.py).  Same zero-overhead-when-off
+        # contract as the recorder: every sampling site below is guarded
+        # by ``if self._health is not None``.
+        self._health: Optional[HealthMonitor] = None
+        if health:
+            self._health = HealthMonitor(
+                cluster.n_workers,
+                health if isinstance(health, HealthConfig) else None,
+                recorder=self._rec,
+            )
         # Metadata plane: ``gossip`` selects the decentralized per-worker
         # view subsystem (each worker plans from its own, possibly stale,
         # replica); default is the single-published-snapshot table.
@@ -577,6 +593,8 @@ class Simulation:
                 self._on_heartbeat(ev[1], ev[2])
             elif kind == "sst_load":
                 if ev[2] == self._session[ev[1]] and self._up[ev[1]]:
+                    if self._health is not None:
+                        self._refresh_health_digest(ev[1])
                     self.sst.push_load(ev[1], t)
                     self._post(
                         t + self.sst.push_interval_s, "sst_load", ev[1], ev[2]
@@ -648,6 +666,18 @@ class Simulation:
         reg.counter("exec.demand_refetches").inc(self._demand_refetches)
         reg.gauge("sim.horizon_s").set(self._now)
         reg.counter("sim.jobs_completed").inc(len(self._records))
+        if self._rec is not None:
+            # Per-ring FIFO drop counters (satellite of the health plane):
+            # counted inside the recorder since PR 5, now visible in the
+            # metrics export so a drop-rate alert needs no trace access.
+            for ring, (emitted, dropped) in self._rec.ring_stats().items():
+                reg.counter("trace.emitted", ring=ring).inc(emitted)
+                reg.counter("trace.dropped", ring=ring).inc(dropped)
+        if self._health is not None:
+            for kind in sorted(self._health.counts):
+                reg.counter("health.events", kind=kind).inc(
+                    self._health.counts[kind]
+                )
         lat = reg.histogram(
             "job.latency_s",
             bounds=(0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0),
@@ -670,6 +700,7 @@ class Simulation:
             task_completions=dict(self._completions),
             event_log=self.event_log,
             trace=self._rec,
+            health=self._health,
         )
 
     # -- network plane -----------------------------------------------------------
@@ -695,6 +726,10 @@ class Simulation:
                     self._now, "net.xfer", worker=src, dst=dst,
                     bytes=nbytes, dur=dur, scope="flat", share=1.0,
                 )
+            if register and self._health is not None and src is not None:
+                self._health.on_transfer(
+                    self._now, "flat", nbytes, 1.0, cross=False
+                )
             return dur
         if src == dst:
             return 0.0
@@ -706,12 +741,20 @@ class Simulation:
             else:
                 self._net_cross += 1
             dur = self._net.start_transfer(nbytes, src, dst, self._now)
+            share = min(self._net.last_shares, default=1.0)
             if self._rec is not None:
                 self._rec.emit(
                     self._now, "net.xfer", worker=src, dst=dst,
                     bytes=nbytes, dur=dur,
                     scope="local" if local else "cross",
-                    share=min(self._net.last_shares, default=1.0),
+                    share=share,
+                )
+            if self._health is not None:
+                self._health.on_transfer(
+                    self._now,
+                    f"rack{topo.rack(src)}" if local
+                    else f"spine.rack{topo.rack(src)}",
+                    nbytes, share, cross=not local,
                 )
             return dur
         return self._net.transfer_time(nbytes, src, dst, self._now)
@@ -906,6 +949,8 @@ class Simulation:
         self._fetch_model[worker] = None
         self._fetch_spec[worker] = False
         self._fetch_preemptible[worker] = False
+        if self._health is not None:
+            self._health.fetch_state(worker, self._now, False)
         if spec and mid is not None:
             self.memories[worker].complete_prefetch(mid)
             if self.prefetch_plane is not None:
@@ -933,6 +978,12 @@ class Simulation:
             self.memories[worker].end_execution(task.model_id)
             self._publish_cache(worker)
         self._busy_time[worker] += self._now - (run.started or self._now)
+        if self._health is not None:
+            self._health.task_done(
+                worker, self._now,
+                self._now - (run.started or self._now),
+                self.profiles.runtime(task, worker),
+            )
         self._gpu_busy[worker] = None
         self._update_load(worker)
         self._route_successors(js, task_id, worker)
@@ -952,6 +1003,10 @@ class Simulation:
                 self._rec.emit(
                     self._now, "job.done", job=js.job.job_id,
                     latency=self._now - js.job.arrival_time,
+                )
+            if self._health is not None:
+                self._health.job_done(
+                    self._now, self._now - js.job.arrival_time
                 )
         if (
             self._draining[worker]
@@ -1180,6 +1235,8 @@ class Simulation:
         self._fetch_preemptible[worker] = False
         self._fetch_started[worker] = self._now
         self._fetch_ends[worker] = self._now + fetch_s
+        if self._health is not None:
+            self._health.fetch_state(worker, self._now, True)
         if self._rec is not None:
             self._rec.emit(
                 self._now, "fetch.start", worker=worker,
@@ -1241,6 +1298,8 @@ class Simulation:
         self._fetch_preemptible[worker] = True
         self._fetch_started[worker] = self._now
         self._fetch_ends[worker] = self._now + fetch_s
+        if self._health is not None:
+            self._health.fetch_state(worker, self._now, True)
         if self._rec is not None:
             self._rec.emit(
                 self._now, "fetch.start", worker=worker,
@@ -1290,6 +1349,8 @@ class Simulation:
         self._fetch_model[worker] = None
         self._fetch_spec[worker] = False
         self._fetch_preemptible[worker] = False
+        if self._health is not None:
+            self._health.fetch_state(worker, self._now, False)
         self._publish_cache(worker)  # also refreshes the intent bitmap
 
     def _schedule_poke(self, worker: int, at: Optional[float]) -> None:
@@ -1651,6 +1712,8 @@ class Simulation:
         self._fetch_model[w] = None
         self._fetch_spec[w] = False
         self._fetch_preemptible[w] = False
+        if self._health is not None:
+            self._health.fetch_state(w, self._now, False)
 
     # -- task recovery --------------------------------------------------------------
     def _strand_snapshot(
@@ -2106,6 +2169,8 @@ class Simulation:
         assert self.gossip is not None and isinstance(self.sst, GossipPlane)
         if session != self._session[worker] or not self._up[worker]:
             return
+        if self._health is not None:
+            self._refresh_health_digest(worker)
         for peer, updates, nbytes in self.sst.exchange(worker, self._now):
             delay = self._xfer_time(nbytes, worker, peer)
             if self._rec is not None:
@@ -2144,11 +2209,23 @@ class Simulation:
         for js, tid in self._queues[worker]:
             ft += self.profiles.runtime(js.job.dfg.tasks[tid], worker)
         self.sst.update_load(worker, ft, self._now)
+        if self._health is not None:
+            self._health.sample_queue(
+                worker, self._now,
+                len(self._queues[worker]) + (1 if busy is not None else 0),
+            )
 
     def _publish_cache(self, worker: int) -> None:
         if not self._up[worker]:
             return
         mem = self.memories[worker]
+        if self._health is not None:
+            self._health.sample_memory(
+                worker, self._now,
+                (mem.used_bytes + mem.exec_reserved_bytes)
+                / mem.capacity_bytes if mem.capacity_bytes > 0 else 0.0,
+                mem.stats.evictions,
+            )
         # Expected-completion advertisement: the model on the pipe and its
         # absolute ETA ride every cache publication, so remote planners can
         # discount an in-flight fetch by its *remaining* fraction instead
@@ -2180,6 +2257,18 @@ class Simulation:
             worker,
             mem.bitmap | self.prefetch_plane.advertised_bits(worker),
             self._now,
+        )
+
+    def _refresh_health_digest(self, worker: int) -> None:
+        """Stamp the owner's four-field health digest onto its SST row
+        right before a publication/gossip round (wire lanes 12–15), so
+        the replicated view's staleness is bounded by the dissemination
+        period — the same discipline as the load/cache lanes."""
+        assert self._health is not None
+        d = self._health.digest(worker, self._now)
+        self.sst.update_health(
+            worker, d.queue_depth, d.mem_occupancy, d.fetch_util,
+            d.p99_latency_s, self._now,
         )
 
     def _publish_intent(self, worker: int) -> None:

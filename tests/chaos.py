@@ -109,6 +109,7 @@ def run_churn_sim(
     record_events: bool = False,
     return_sim: bool = False,
     trace: bool = False,
+    health: bool = False,
 ):
     """Build and run one churn scenario; returns (result, jobs, schedule),
     plus the finished ``Simulation`` when ``return_sim`` is set (the
@@ -137,6 +138,7 @@ def run_churn_sim(
         record_events=record_events,
         seed=sim_seed,
         trace=trace,
+        health=health,
     )
     res = sim.run(jobs)
     if return_sim:
@@ -271,11 +273,31 @@ def check_partition_invariants(
 def check_trace_determinism(**kwargs) -> None:
     """Family 6: same seed + config ⇒ byte-identical JSONL trace.  Runs
     the scenario twice with the flight recorder on and diffs the exports
-    (kwargs are forwarded to ``run_churn_sim``)."""
+    (kwargs are forwarded to ``run_churn_sim``).  With ``health=True``
+    the health plane joins the oracle: the summary payload and the
+    metrics export must also be byte-identical, and the metrics export
+    must validate against the committed schema."""
+    import json
+
     kwargs.pop("trace", None)
     kwargs.pop("return_sim", None)
-    a = run_churn_sim(trace=True, **kwargs)[0]
-    b = run_churn_sim(trace=True, **kwargs)[0]
+    health = bool(kwargs.pop("health", False))
+    a = run_churn_sim(trace=True, health=health, **kwargs)[0]
+    b = run_churn_sim(trace=True, health=health, **kwargs)[0]
+    if health:
+        sa = json.dumps(a.health.summary(), sort_keys=True)
+        sb = json.dumps(b.health.summary(), sort_keys=True)
+        assert sa == sb, "health summary diverged between identical runs"
+        import os
+
+        from repro.core.telemetry import validate_schema
+
+        ea = json.dumps(a.metrics.export(), sort_keys=True)
+        eb = json.dumps(b.metrics.export(), sort_keys=True)
+        assert ea == eb, "metrics export diverged between identical runs"
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(repo, "schemas", "metrics.schema.json")) as f:
+            validate_schema(a.metrics.export(), json.load(f))
     ja, jb = a.trace.to_jsonl(), b.trace.to_jsonl()
     assert ja, "trace is empty"
     assert a.trace.dropped == 0, f"ring dropped {a.trace.dropped} events"
@@ -371,6 +393,10 @@ def main() -> int:
         ("gossip+partition", dict(
             schedule=scripted_partition_schedule(5),
             duration=duration, prefetch=PrefetchConfig(),
+        )),
+        ("gossip+churn+health", dict(
+            schedule=[e for e in SCRIPTED_SCHEDULE if e.time < duration],
+            duration=duration, prefetch=PrefetchConfig(), health=True,
         )),
     ]
     for label, kwargs in trace_cases:

@@ -1,0 +1,173 @@
+"""Serving-vs-sim trace parity: both engines must speak the same event
+taxonomy so one set of analysis tooling (SimReport, bench_trace
+--explain, the chaos byte-diff oracle) reads either engine's stream.
+
+Historically the serving engine emitted job lifecycle events on the
+origin worker's ring (the simulator uses the global ring) and tagged
+speculative prefetches with job/task keys the simulator omits; this
+file pins the repaired contract: for an identical workload shape, every
+event kind the serving engine emits exists in the simulator's stream
+with an identical key set, and job lifecycle events live on the global
+ring in both."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import ClusterSpec, GB, ProfileRepository
+from repro.core.types import DFG, Job, MB, TaskSpec
+from repro.models import init_params
+from repro.serving import HostedModel, ServingCluster
+from repro.sim import Simulation
+from repro.workflows import MODELS
+
+
+def _pipeline_dfg():
+    return DFG(
+        "p",
+        tasks=[
+            TaskSpec("a", 0.05, model_id=1, output_bytes=0.01 * MB,
+                     input_bytes=0.01 * MB),
+            TaskSpec("b", 0.1, model_id=0, output_bytes=0.01 * MB),
+        ],
+        edges=[("a", "b")],
+    )
+
+
+def _taxonomy(jsonl):
+    """kind -> (key set, worker ids seen) over a JSONL stream."""
+    tax, workers = {}, {}
+    for line in jsonl.splitlines():
+        d = json.loads(line)
+        tax.setdefault(d["kind"], set()).update(d.keys())
+        workers.setdefault(d["kind"], set()).add(d["worker"])
+    return tax, workers
+
+
+@pytest.fixture(scope="module")
+def serving_trace():
+    hosted = []
+    for mid, arch in enumerate(["mistral-nemo-12b", "mamba2-780m"]):
+        cfg = ARCHS[arch].reduced(dtype="float32")
+        hosted.append(
+            HostedModel(mid, cfg, init_params(cfg, jax.random.key(mid)))
+        )
+    cluster = ClusterSpec(n_workers=2, gpu_capacity_bytes=1 * GB)
+    sc = ServingCluster(cluster, hosted, scheduler="navigator",
+                        decode_tokens=4, trace=True, health=True)
+    dfg = _pipeline_dfg()
+    sc.register_pipeline(dfg)
+    prompt = np.array([[3, 4, 5]], np.int32)
+    for origin in (0, 1, 0):
+        sc.submit(dfg, {"a": prompt}, origin=origin)
+    return sc
+
+
+@pytest.fixture(scope="module")
+def sim_trace():
+    cluster = ClusterSpec(n_workers=2)
+    dfg = _pipeline_dfg()
+    profiles = ProfileRepository(cluster, MODELS)
+    profiles.register(dfg)
+    jobs = [Job(job_id=i, dfg=dfg, arrival_time=0.4 * i) for i in range(3)]
+    return Simulation(
+        cluster, profiles, MODELS, scheduler="navigator", seed=1,
+        trace=True, health=True,
+    ).run(jobs)
+
+
+#: Health-detector events are emitted by the shared HealthMonitor._fire
+#: path in both engines, so a tiny run of one engine may observe a
+#: detector the other's run never trips — they're pinned against the
+#: canonical shape instead of the other stream.
+HEALTH_EVENT_KEYS = {"t", "kind", "seq", "worker", "value", "threshold",
+                     "detail"}
+
+
+def test_serving_taxonomy_subset_of_sim(serving_trace, sim_trace):
+    from repro.core.healthplane import DETECTOR_KINDS
+
+    srv_tax, _ = _taxonomy(serving_trace.recorder.to_jsonl())
+    sim_tax, _ = _taxonomy(sim_trace.trace.to_jsonl())
+    assert srv_tax, "serving engine emitted no events"
+    for kind, keys in sorted(srv_tax.items()):
+        if kind in DETECTOR_KINDS:
+            assert keys == HEALTH_EVENT_KEYS, (
+                f"{kind!r} keys {sorted(keys)} != canonical health shape"
+            )
+            continue
+        assert kind in sim_tax, (
+            f"serving emits {kind!r}, unknown to the simulator — "
+            f"analysis tooling would not recognize it"
+        )
+        assert keys == sim_tax[kind], (
+            f"{kind!r} key sets diverge: serving {sorted(keys)} vs "
+            f"sim {sorted(sim_tax[kind])}"
+        )
+    for kind in set(sim_tax) & set(DETECTOR_KINDS):
+        assert sim_tax[kind] == HEALTH_EVENT_KEYS
+
+
+def test_core_lifecycle_kinds_present_in_both(serving_trace, sim_trace):
+    core = {"job.arrive", "job.done", "sched.place", "task.start",
+            "task.input", "task.done", "fetch.start", "fetch.done"}
+    srv_tax, _ = _taxonomy(serving_trace.recorder.to_jsonl())
+    sim_tax, _ = _taxonomy(sim_trace.trace.to_jsonl())
+    assert core <= set(srv_tax), f"serving missing {core - set(srv_tax)}"
+    assert core <= set(sim_tax), f"sim missing {core - set(sim_tax)}"
+
+
+def test_job_lifecycle_on_global_ring(serving_trace, sim_trace):
+    """job.arrive / job.done ride the cluster-global ring (worker -1) in
+    both engines — the serving engine used to pin them to the origin
+    worker's ring, splitting the streams' shapes."""
+    _, srv_workers = _taxonomy(serving_trace.recorder.to_jsonl())
+    _, sim_workers = _taxonomy(sim_trace.trace.to_jsonl())
+    for kind in ("job.arrive", "job.done"):
+        assert srv_workers[kind] == {-1}, (
+            f"serving {kind} on rings {srv_workers[kind]}, expected global"
+        )
+        assert sim_workers[kind] == {-1}, (
+            f"sim {kind} on rings {sim_workers[kind]}, expected global"
+        )
+
+
+def test_spans_build_from_serving_stream(serving_trace):
+    """The simulator's span stitcher consumes the serving stream as-is:
+    every completed task yields a span with start/done stitched."""
+    from repro.core.telemetry import build_spans
+
+    spans = build_spans(serving_trace.recorder.events())
+    done = [s for s in spans.values() if s.t_done is not None]
+    assert len(done) == 6  # 3 jobs x 2 tasks
+    for s in done:
+        assert s.t_start is not None and s.t_done >= s.t_start
+
+
+def test_serving_health_taxonomy_matches_sim():
+    """Health digests published by the serving engine land on the same
+    SST lanes the simulator uses (wire parity, lanes 12-15)."""
+    hosted = []
+    for mid, arch in enumerate(["mistral-nemo-12b", "mamba2-780m"]):
+        cfg = ARCHS[arch].reduced(dtype="float32")
+        hosted.append(
+            HostedModel(mid, cfg, init_params(cfg, jax.random.key(mid)))
+        )
+    cluster = ClusterSpec(n_workers=2, gpu_capacity_bytes=1 * GB)
+    sc = ServingCluster(cluster, hosted, scheduler="navigator",
+                        decode_tokens=4, health=True)
+    dfg = _pipeline_dfg()
+    sc.register_pipeline(dfg)
+    prompt = np.array([[1, 2]], np.int32)
+    for origin in (0, 1):
+        sc.submit(dfg, {"a": prompt}, origin=origin)
+    s = sc.health.summary()
+    assert s["schema_version"] == 1
+    assert s["fleet_job_latency"]["count"] == 2
+    rows = sc.sst.view(None, 1e9)
+    assert any(r.health_p99_latency_s > 0.0 for r in rows), (
+        "serving engine never published a health digest to the SST"
+    )

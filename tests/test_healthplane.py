@@ -1,0 +1,464 @@
+"""Live cluster health plane (core/healthplane.py): deterministic
+t-digest quantile sketches (property-tested against exact quantiles),
+windowed series, online detectors, gossiped health digests with bounded
+staleness, the schema-versioned summary, and Eq. 2 cost-model
+calibration against measured span breakdowns."""
+
+import json
+import math
+import os
+import random
+
+import pytest
+
+from chaos import run_churn_sim
+from hypothesis_compat import given, settings, st
+from repro.core import (
+    GossipConfig,
+    HealthConfig,
+    HealthMonitor,
+    ProfileRepository,
+    QuantileSketch,
+    SimReport,
+    fleet,
+    validate_schema,
+)
+from repro.core.healthplane import (
+    CALIBRATION_COMPONENTS,
+    MEMORY_THRASH,
+    QUEUE_BUILDUP,
+    SPINE_SATURATION,
+    STRAGGLER,
+    WindowedSeries,
+    _PipeUtilization,
+    calibrate,
+)
+from repro.core.sst_exchange import GossipPlane, pack_row, unpack_rows
+from repro.core.state import SSTRow
+from repro.core.types import DFG, Job, MB, TaskSpec
+from repro.sim import Simulation, fleet_scaled_rate, poisson_workload
+from repro.workflows import MODELS, paper_dfgs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_schema(name):
+    with open(os.path.join(REPO, "schemas", name)) as f:
+        return json.load(f)
+
+
+def exact_quantile(data, q):
+    """Nearest-rank exact quantile with linear interpolation (the
+    reference the sketch is pinned against)."""
+    s = sorted(data)
+    if len(s) == 1:
+        return s[0]
+    pos = q * (len(s) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+
+
+def assert_sketch_close(sketch, data, qs=(0.5, 0.9, 0.99), rank_eps=0.03):
+    """The sketch's quantile must land between the exact quantiles at
+    q ± rank_eps — the rank-error contract of a merging t-digest — give
+    or take 5% of the data range (linear interpolation across a heavy
+    duplicate-value centroid smears in value space even when the rank
+    is exact).  For tiny samples the centroid-midpoint interpolation is
+    only accurate to about one rank, so the bracket widens to 1.5/n."""
+    rank_eps = max(rank_eps, 1.5 / len(data))
+    slack = 0.05 * (max(data) - min(data))
+    for q in qs:
+        lo = exact_quantile(data, max(0.0, q - rank_eps))
+        hi = exact_quantile(data, min(1.0, q + rank_eps))
+        v = sketch.quantile(q)
+        assert lo - slack - 1e-9 <= v <= hi + slack + 1e-9, (
+            f"q={q}: sketch {v} outside exact bracket [{lo}, {hi}] "
+            f"± {slack} (n={sketch.count})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Quantile sketch: accuracy, merge, determinism
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-1e6, max_value=1e6,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=400,
+    )
+)
+def test_sketch_tracks_exact_quantiles(data):
+    sk = QuantileSketch()
+    for v in data:
+        sk.add(v)
+    assert sk.count == len(data)
+    assert sk.min == min(data) and sk.max == max(data)
+    assert_sketch_close(sk, data)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=0.0, max_value=1e3,
+                  allow_nan=False, allow_infinity=False),
+        min_size=2, max_size=300,
+    ),
+    st.integers(min_value=1, max_value=5),
+)
+def test_sketch_merge_matches_pooled_data(data, n_shards):
+    """Merging per-shard sketches approximates the pooled distribution
+    (the fleet-level rollup path in HealthMonitor.summary)."""
+    shards = [QuantileSketch() for _ in range(n_shards)]
+    for i, v in enumerate(data):
+        shards[i % n_shards].add(v)
+    merged = QuantileSketch()
+    for s in shards:
+        merged.merge(s)
+    assert merged.count == len(data)
+    assert merged.min == min(data) and merged.max == max(data)
+    assert_sketch_close(merged, data, rank_eps=max(0.08, 3.0 / len(data)))
+
+
+def test_sketch_bitwise_deterministic():
+    def build(seed):
+        rng = random.Random(seed)
+        sk = QuantileSketch()
+        for _ in range(5000):
+            sk.add(rng.lognormvariate(0.0, 1.0))
+        return sk
+
+    a, b = build(7), build(7)
+    assert a.centroids() == b.centroids()
+    assert a.as_dict() == b.as_dict()
+    # Merge is deterministic too.
+    c, d = QuantileSketch(), QuantileSketch()
+    c.merge(a), c.merge(build(8))
+    d.merge(b), d.merge(build(8))
+    assert c.centroids() == d.centroids()
+
+
+def test_sketch_accuracy_on_heavy_tail():
+    rng = random.Random(3)
+    data = [rng.lognormvariate(0.0, 1.5) for _ in range(20000)]
+    sk = QuantileSketch()
+    for v in data:
+        sk.add(v)
+    for q in (0.5, 0.9, 0.99):
+        exact = exact_quantile(data, q)
+        assert abs(sk.quantile(q) - exact) / exact < 0.05
+
+
+def test_sketch_empty_and_single():
+    sk = QuantileSketch()
+    assert sk.as_dict()["count"] == 0
+    sk.add(2.5)
+    for q in (0.0, 0.5, 1.0):
+        assert sk.quantile(q) == 2.5
+
+
+# ---------------------------------------------------------------------------
+# Windowed series + pipe utilization
+# ---------------------------------------------------------------------------
+def test_windowed_series_fixed_windows():
+    s = WindowedSeries(window_s=1.0, max_windows=4)
+    for t, v in [(0.1, 2.0), (0.9, 4.0), (1.5, 1.0), (7.2, 9.0)]:
+        s.observe(t, v)
+    assert [w.index for w in s.windows] == [0, 1, 7]
+    w0 = s.windows[0]
+    assert (w0.count, w0.min, w0.max, w0.mean) == (2, 2.0, 4.0, 3.0)
+    assert s.overall_max() == 9.0
+
+
+def test_windowed_series_bounded_memory():
+    s = WindowedSeries(window_s=1.0, max_windows=3)
+    for t in range(10):
+        s.observe(float(t), 1.0)
+    assert len(s.windows) == 3
+    assert [w.index for w in s.windows] == [7, 8, 9]
+
+
+def test_pipe_utilization_integrates_busy_time():
+    p = _PipeUtilization(window_s=1.0, max_windows=8)
+    assert p.utilization(1.0) == 0.0
+    p.update(0.0, True)
+    p.update(0.5, False)   # busy [0, 0.5): window 0 gets 0.5
+    p.update(2.0, True)    # busy [2.0, 4.0): windows 2, 3 get 1.0 each
+    # Mean busy fraction over the retained (touched) windows {0, 2, 3}.
+    assert abs(p.utilization(4.0) - (0.5 + 1.0 + 1.0) / 3.0) < 1e-9
+    # A fully busy pipe pins at 1.0.
+    q = _PipeUtilization(window_s=1.0, max_windows=8)
+    q.update(0.0, True)
+    assert q.utilization(5.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Detectors (unit level)
+# ---------------------------------------------------------------------------
+def test_straggler_detector_threshold():
+    hm = HealthMonitor(1)
+    hm.task_done(0, 1.0, service_s=0.2, expected_s=0.1)   # 2x: no
+    hm.task_done(0, 2.0, service_s=0.31, expected_s=0.1)  # 3.1x: yes
+    hm.task_done(0, 3.0, service_s=0.04, expected_s=0.01) # 4x but < floor
+    assert hm.counts[STRAGGLER] == 1
+    (e,) = [e for e in hm.events if e.kind == STRAGGLER]
+    assert e.worker == 0 and e.value == 0.31
+
+
+def test_queue_buildup_needs_consecutive_samples():
+    hm = HealthMonitor(2)
+    for t in (1.0, 2.0):
+        hm.sample_queue(0, t, 9)
+    hm.sample_queue(0, 3.0, 2)    # dip resets the streak
+    for t in (4.0, 5.0, 6.0):
+        hm.sample_queue(0, t, 10)
+    assert hm.counts[QUEUE_BUILDUP] == 1
+    # Fires once at the Nth sample, not on every subsequent one.
+    hm.sample_queue(0, 7.0, 11)
+    assert hm.counts[QUEUE_BUILDUP] == 1
+
+
+def test_memory_thrash_per_window():
+    hm = HealthMonitor(1, HealthConfig(thrash_evictions_per_window=4))
+    hm.sample_memory(0, 0.1, 0.9, evictions_total=2)   # 2 in window 0
+    hm.sample_memory(0, 0.5, 0.9, evictions_total=5)   # 5 in window 0: fire
+    assert hm.counts[MEMORY_THRASH] == 1
+    # Next window starts a fresh count.
+    hm.sample_memory(0, 1.2, 0.9, evictions_total=7)   # 2 in window 1
+    assert hm.counts[MEMORY_THRASH] == 1
+    hm.sample_memory(0, 1.8, 0.9, evictions_total=10)  # 5 in window 1
+    assert hm.counts[MEMORY_THRASH] == 2
+
+
+def test_spine_saturation_consecutive_contended():
+    hm = HealthMonitor(4)
+    for i in range(3):
+        hm.on_transfer(float(i), "spine.rack0", 1e6, 0.25, cross=True)
+    hm.on_transfer(3.0, "spine.rack0", 1e6, 0.5, cross=True)  # reset
+    for i in range(4):
+        hm.on_transfer(4.0 + i, "spine.rack0", 1e6, 0.3, cross=True)
+    assert hm.counts[SPINE_SATURATION] == 1
+    (e,) = [e for e in hm.events if e.kind == SPINE_SATURATION]
+    assert e.worker == -1  # fleet-scoped
+
+
+# ---------------------------------------------------------------------------
+# Detectors (engine level: injected faults)
+# ---------------------------------------------------------------------------
+def _base(fleet_name="uniform"):
+    cluster = fleet(fleet_name)
+    profiles = ProfileRepository(cluster, MODELS)
+    dfgs = paper_dfgs()
+    for d in dfgs:
+        profiles.register(d)
+    return cluster, profiles, dfgs
+
+
+def test_injected_straggler_flagged():
+    """Heavy runtime noise (lognormal sigma 1.2) injects real stragglers;
+    the nominal-noise control run flags none."""
+    cluster, profiles, dfgs = _base()
+    jobs = poisson_workload(
+        dfgs, fleet_scaled_rate(cluster, 1.5), 30.0, seed=7
+    )
+    noisy = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator", seed=1,
+        runtime_noise_sigma=1.2, health=True,
+    ).run(jobs)
+    assert noisy.health.counts[STRAGGLER] > 0
+    for e in noisy.health.events:
+        if e.kind == STRAGGLER:
+            assert e.value >= e.threshold > 0.0
+
+    control = Simulation(
+        cluster, profiles, MODELS, scheduler="navigator", seed=1,
+        runtime_noise_sigma=0.25, health=True,
+    ).run(jobs)
+    assert control.health.counts[STRAGGLER] == 0
+
+
+def test_injected_spine_saturation_flagged():
+    """A 16-way fan-out burst across the rack2 spine drives >= 3
+    concurrent flows onto one uplink (share <= 1/3) and must trip the
+    fleet-scoped spine-saturation detector."""
+    cluster = fleet("rack2")
+    tasks = [TaskSpec("src", 0.05, model_id=None, output_bytes=8 * MB)]
+    edges = []
+    for i in range(16):
+        tasks.append(TaskSpec(f"c{i}", 0.05, model_id=None,
+                              output_bytes=0.01 * MB))
+        edges.append(("src", f"c{i}"))
+    dfg = DFG("fan", tasks=tasks, edges=edges)
+    profiles = ProfileRepository(cluster, MODELS)
+    profiles.register(dfg)
+    res = Simulation(
+        cluster, profiles, MODELS, scheduler="hash", seed=1, health=True
+    ).run([Job(job_id=0, dfg=dfg, arrival_time=0.0)])
+    assert res.health.counts[SPINE_SATURATION] >= 1
+    (e, *_rest) = [
+        e for e in res.health.events if e.kind == SPINE_SATURATION
+    ]
+    assert e.worker == -1 and e.value <= e.threshold
+    assert e.detail.startswith("uplink spine.")
+
+
+# ---------------------------------------------------------------------------
+# Gossiped digests: convergence with bounded staleness
+# ---------------------------------------------------------------------------
+def _drive_rounds(plane, t0, rounds, period=0.2):
+    t = t0
+    for _ in range(rounds):
+        t += period
+        for w in range(plane.n_workers):
+            for dst, updates, _nbytes in plane.exchange(w, t):
+                plane.deliver(dst, updates, t)
+    return t
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=12),
+    st.integers(min_value=0, max_value=1000),
+)
+def test_health_digest_gossip_converges(n, seed):
+    """Every reader sees the published digest within n gossip rounds at
+    fanout 2 (epidemic spread reaches all n workers in O(log n) rounds;
+    n is a loose deterministic bound), so view staleness is bounded by
+    rounds x period — no oracle."""
+    plane = GossipPlane(n, GossipConfig(period_s=0.2, fanout=2), seed=seed)
+    plane.update_health(0, queue_depth=7, mem_occupancy=0.625,
+                        fetch_util=0.25, p99_latency_s=1.5, now=0.0)
+    _drive_rounds(plane, 0.0, rounds=n)
+    for reader in range(n):
+        row = plane.views[reader][0]
+        assert row.health_queue_depth == 7
+        assert row.health_mem_occupancy == 0.625
+        assert row.health_fetch_util == 0.25
+        assert row.health_p99_latency_s == 1.5
+
+
+def test_health_digest_refresh_supersedes():
+    """A refreshed digest (higher row version) replaces the stale one at
+    every reader; nobody regresses to the old values."""
+    n = 6
+    plane = GossipPlane(n, GossipConfig(period_s=0.2, fanout=2), seed=5)
+    plane.update_health(2, 3, 0.5, 0.1, 0.8, now=0.0)
+    t = _drive_rounds(plane, 0.0, rounds=n)
+    plane.update_health(2, 9, 0.9, 0.7, 2.5, now=t)
+    _drive_rounds(plane, t, rounds=n)
+    for reader in range(n):
+        assert plane.views[reader][2].health_queue_depth == 9
+        assert plane.views[reader][2].health_p99_latency_s == 2.5
+
+
+def test_health_lanes_pack_roundtrip():
+    row = SSTRow(health_queue_depth=11, health_mem_occupancy=0.75,
+                 health_fetch_util=0.5, health_p99_latency_s=2.25)
+    (back,) = unpack_rows(pack_row(row)[None, :])
+    assert back.health_queue_depth == 11
+    assert back.health_mem_occupancy == 0.75   # exact in float32
+    assert back.health_fetch_util == 0.5
+    assert back.health_p99_latency_s == 2.25
+
+
+def test_sim_publishes_digests_to_sst():
+    """End to end: after a health-enabled run, live readers' SST replicas
+    carry non-trivial digests for the busy workers."""
+    res, jobs, schedule, sim = run_churn_sim(
+        "navigator", schedule=[], duration=30.0, health=True,
+        return_sim=True,
+    )
+    rows = sim.sst.view(0, res.horizon)
+    assert any(r.health_p99_latency_s > 0.0 for r in rows), (
+        "no worker's gossiped digest ever carried a task-latency p99"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Summary payload + engine integration
+# ---------------------------------------------------------------------------
+def test_health_summary_validates_and_counts():
+    res, jobs, schedule = run_churn_sim("navigator", health=True, trace=True)
+    s = res.health.summary()
+    validate_schema(s, load_schema("health.schema.json"))
+    assert s["schema_version"] == 1
+    assert len(s["workers"]) == res.n_workers
+    assert s["fleet_job_latency"]["count"] == len(res.records)
+    total_tasks = sum(w["task_latency"]["count"] for w in s["workers"])
+    assert s["fleet_task_latency"]["count"] == total_tasks
+    # Detector counts mirror the metrics export and the event ledger.
+    for kind, count in s["detectors"].items():
+        assert count == int(res.metrics.value("health.events", kind=kind))
+    assert len(s["events"]) <= res.health.config.max_events
+    # Health events also land in the flight recorder's stream.
+    kinds = {json.loads(line)["kind"]
+             for line in res.trace.to_jsonl().splitlines()}
+    for kind, count in s["detectors"].items():
+        if count:
+            assert kind in kinds
+
+
+def test_health_summary_raises_when_off():
+    res, jobs, schedule = run_churn_sim("navigator", duration=10.0,
+                                        trace=True)
+    assert res.health is None
+    with pytest.raises(ValueError, match="health=True"):
+        SimReport(res).health_summary()
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 cost-model calibration
+# ---------------------------------------------------------------------------
+def _traced_report(noise=0.25, scheduler="navigator"):
+    cluster, profiles, dfgs = _base()
+    jobs = poisson_workload(
+        dfgs, fleet_scaled_rate(cluster, 1.5), 30.0, seed=7
+    )
+    res = Simulation(
+        cluster, profiles, MODELS, scheduler=scheduler, seed=1,
+        runtime_noise_sigma=noise, trace=True,
+    ).run(jobs)
+    return SimReport(res)
+
+
+def test_calibration_joins_all_spans():
+    report = _traced_report()
+    cal = report.calibration()
+    assert cal.joined > 0 and cal.unmatched == 0
+    for name in CALIBRATION_COMPONENTS:
+        assert cal.components[name].count == cal.joined
+    assert cal.worst_component() in CALIBRATION_COMPONENTS
+    table = cal.format_table()
+    assert "queue" in table and "runtime" in table
+
+
+def test_calibration_runtime_exact_when_noise_off():
+    """With runtime noise disabled, measured compute equals the profile
+    prediction — the runtime component's residual must collapse to ~0
+    while the join machinery still sees every span."""
+    cal = _traced_report(noise=0.0).calibration()
+    assert cal.joined > 0
+    rt = cal.components["runtime"].as_dict()
+    assert abs(rt["residual_abs_mean_s"]) < 1e-6, (
+        f"noise-free runtime residual should vanish: {rt}"
+    )
+
+
+def test_calibration_deterministic_and_exported():
+    a, b = _traced_report(), _traced_report()
+    ca, cb = calibrate(a), calibrate(b)
+    assert json.dumps(ca.as_dict(), sort_keys=True) == json.dumps(
+        cb.as_dict(), sort_keys=True
+    )
+    reg = a.result.metrics
+    ca.to_metrics(reg)
+    validate_schema(reg.export(), load_schema("metrics.schema.json"))
+    assert int(reg.value("calibration.joined",
+                         scheduler="navigator")) == ca.joined
+
+
+def test_calibration_requires_trace():
+    res, jobs, schedule = run_churn_sim("navigator", duration=10.0)
+    with pytest.raises(ValueError, match="trace"):
+        SimReport(res)

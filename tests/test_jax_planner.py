@@ -94,7 +94,7 @@ def test_sst_row_roundtrip():
     )
     packed = pack_row(row, queue_len=7)
     assert packed.shape == (ROW_WIDTH,)
-    assert packed.nbytes == 48  # ≤ one 64-byte cache line (Fig. 5)
+    assert packed.nbytes == 64  # exactly one 64-byte cache line (Fig. 5)
     back = unpack_rows(packed[None])[0]
     assert back.ft_estimate_s == pytest.approx(row.ft_estimate_s)
     assert back.cache_bitmap == row.cache_bitmap

@@ -1,0 +1,110 @@
+"""MetricsRegistry.export() under churn and partition schedules
+(chaos family 6 extension): the export stays schema-valid on every
+plane, churn counters grow monotonically with the injected schedule,
+per-ring trace drop counters mirror the recorder, and identical seeded
+runs export byte-identical payloads."""
+
+import json
+import os
+
+from chaos import (
+    SCRIPTED_SCHEDULE,
+    check_invariants,
+    run_churn_sim,
+    scripted_partition_schedule,
+)
+from repro.core import GossipConfig, validate_schema
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_schema(name):
+    with open(os.path.join(REPO, "schemas", name)) as f:
+        return json.load(f)
+
+
+def _export(**kwargs):
+    res, jobs, schedule = run_churn_sim(**kwargs)
+    return res, jobs, schedule, res.metrics.export()
+
+
+def test_export_schema_valid_under_churn_all_planes():
+    schema = load_schema("metrics.schema.json")
+    for plane_kwargs in (
+        {},                                     # gossip plane (default)
+        {"gossip": None},                       # shared-table plane
+        {"gossip": GossipConfig(period_s=0.2, fanout=2), "health": True,
+         "trace": True},                        # full observability stack
+    ):
+        res, jobs, schedule, exp = _export(
+            duration=20.0, **plane_kwargs
+        )
+        validate_schema(exp, schema)
+        check_invariants(res, jobs, schedule)
+        assert int(res.metrics.value("sim.jobs_completed")) == len(
+            res.records
+        ) == len(jobs)
+
+
+def test_export_schema_valid_under_partition():
+    schema = load_schema("metrics.schema.json")
+    res, jobs, schedule, exp = _export(
+        schedule=scripted_partition_schedule(5), duration=20.0,
+        health=True, trace=True,
+    )
+    validate_schema(exp, schema)
+    assert int(res.metrics.value("churn.events", kind="partition")) >= 1
+    assert int(res.metrics.value("churn.events", kind="heal")) >= 1
+
+
+def test_churn_counters_monotone_in_schedule_prefix():
+    """Running progressively longer prefixes of the scripted schedule
+    must never decrease any churn.events counter — each injected event
+    is either applied (counted once) or past the horizon."""
+    prev = {}
+    for cut in range(len(SCRIPTED_SCHEDULE) + 1):
+        res, jobs, schedule, exp = _export(
+            schedule=list(SCRIPTED_SCHEDULE[:cut]), duration=60.0
+        )
+        counts = {
+            kind: int(res.metrics.value("churn.events", kind=kind))
+            for kind in ("crash", "join", "drain")
+        }
+        for kind, c in counts.items():
+            assert c >= prev.get(kind, 0), (
+                f"churn.events[{kind}] shrank from {prev.get(kind)} to "
+                f"{c} with a longer schedule prefix"
+            )
+        scheduled = [e.kind for e in SCRIPTED_SCHEDULE[:cut]]
+        for kind, c in counts.items():
+            assert c <= scheduled.count(kind)
+        prev = counts
+    # The full schedule applies completely on the 60 s horizon.
+    assert prev == {"crash": 2, "join": 3, "drain": 1}
+
+
+def test_export_deterministic_across_reruns():
+    kwargs = dict(duration=20.0, health=True, trace=True)
+    _res_a, _j, _s, a = _export(**kwargs)
+    _res_b, _j, _s, b = _export(**kwargs)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_trace_ring_counters_mirror_recorder_under_churn():
+    res, jobs, schedule, exp = _export(duration=20.0, trace=True)
+    stats = res.trace.ring_stats()
+    for ring, (emitted, dropped) in stats.items():
+        assert int(res.metrics.value("trace.emitted", ring=ring)) == emitted
+        assert int(res.metrics.value("trace.dropped", ring=ring)) == dropped
+    assert sum(d for _, d in stats.values()) == res.trace.dropped
+
+
+def test_health_counters_in_export_under_churn():
+    res, jobs, schedule, exp = _export(duration=30.0, health=True)
+    rows = {
+        (m["name"], m["labels"].get("kind")): m
+        for m in exp["metrics"] if m["name"] == "health.events"
+    }
+    assert len(rows) == 4, "one health.events row per detector kind"
+    for (_name, kind), m in rows.items():
+        assert m["value"] == res.health.counts[kind] >= 0

@@ -329,7 +329,7 @@ def test_sst_wire_row_carries_intent_bitmap():
         intent_bitmap=(1 << 63) | (1 << 5) | 3,
     )
     packed = pack_row(row)
-    assert packed.shape == (ROW_WIDTH,) and packed.nbytes == 48
+    assert packed.shape == (ROW_WIDTH,) and packed.nbytes == 64
     back = unpack_rows(packed[None])[0]
     assert back.intent_bitmap == row.intent_bitmap
     assert back.cache_bitmap == row.cache_bitmap

@@ -287,6 +287,27 @@ def test_exports_validate_against_schemas(traced):
     validate_schema(res.metrics.export(), load_schema("metrics.schema.json"))
 
 
+def test_export_jsonl_gzip_deterministic(traced, tmp_path):
+    """``export_jsonl(path, compress=True)`` writes a gzip archive whose
+    raw bytes are deterministic (mtime pinned to 0) and whose payload
+    round-trips to the exact uncompressed JSONL stream; the plain export
+    path is untouched by the option."""
+    import gzip
+
+    res, _ = traced
+    plain, gz_a, gz_b = (tmp_path / n for n in ("t.jsonl", "a.gz", "b.gz"))
+    res.trace.export_jsonl(str(plain))
+    res.trace.export_jsonl(str(gz_a), compress=True)
+    res.trace.export_jsonl(str(gz_b), compress=True)
+    assert gz_a.read_bytes() == gz_b.read_bytes(), (
+        "gzip archive is not byte-deterministic across reruns"
+    )
+    with gzip.open(gz_a, "rb") as f:
+        inflated = f.read().decode("utf-8")
+    assert inflated == res.trace.to_jsonl() == plain.read_text()
+    assert len(gz_a.read_bytes()) < len(plain.read_bytes())
+
+
 def test_validate_schema_rejects_bad_payloads():
     schema = load_schema("metrics.schema.json")
     with pytest.raises(ValueError):                  # missing required key

@@ -1,0 +1,163 @@
+"""CI bench-regression gate: fresh smoke-suite results vs the committed
+performance trajectory.
+
+Re-runs the named benchmark suites in smoke mode (``REPRO_BENCH_SMOKE=1``,
+in a subprocess — the bench modules read the env var at import time) with
+the trajectory redirected to a scratch file, then diffs every tracked
+P99 metric in the fresh ``<suite>@smoke`` cells against the committed
+``BENCH_trajectory.json``.  The gate fails when
+
+* the committed and fresh trajectory files disagree on
+  ``schema_version`` (the diff would be apples-to-oranges), or
+* any P99 latency metric regresses by more than ``--threshold``
+  (default 15%) relative AND more than ``--floor`` (default 50 ms)
+  absolute — the floor keeps sub-100 ms metrics from tripping the
+  relative gate on noise.
+
+Suites without a committed ``@smoke`` baseline cell are reported and
+skipped (the first run that lands a baseline arms the gate).  Smoke
+runs are fully seeded, so any drift the gate sees is a real behaviour
+change, not sampling noise.
+
+    PYTHONPATH=src python tools/bench_regression.py [--suites trace ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_SUITES = ["trace"]
+DEFAULT_THRESHOLD = 0.15
+DEFAULT_FLOOR_S = 0.05
+
+
+def run_smoke_suites(suites: List[str], traj_path: str) -> None:
+    """Run ``benchmarks.run`` for the suites in smoke mode, writing the
+    trajectory to ``traj_path`` (never the committed file)."""
+    env = dict(os.environ)
+    env["REPRO_BENCH_SMOKE"] = "1"
+    env["REPRO_TRAJECTORY"] = traj_path
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *suites],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-2000:])
+        raise SystemExit(
+            f"bench-regression: smoke run failed (exit {proc.returncode})"
+        )
+
+
+def p99_metrics(cell: Optional[dict]) -> Dict[str, float]:
+    """The P99 latency rows of one trajectory cell."""
+    if not cell:
+        return {}
+    return {
+        name: float(v)
+        for name, v in cell.get("metrics", {}).items()
+        if "p99" in name.lower()
+    }
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    suites: List[str],
+    threshold: float,
+    floor_s: float,
+) -> Tuple[List[str], List[str]]:
+    """Diff fresh ``@smoke`` cells against the committed ones; returns
+    (regressions, notes)."""
+    b_ver = baseline.get("schema_version")
+    f_ver = fresh.get("schema_version")
+    if b_ver != f_ver:
+        return (
+            [f"trajectory schema_version mismatch: committed {b_ver!r} "
+             f"vs fresh {f_ver!r} — regenerate the committed baseline"],
+            [],
+        )
+    regressions: List[str] = []
+    notes: List[str] = []
+    for suite in suites:
+        key = f"{suite}@smoke"
+        base = p99_metrics(baseline.get("suites", {}).get(key))
+        new = p99_metrics(fresh.get("suites", {}).get(key))
+        if not base:
+            notes.append(f"{key}: no committed baseline cell — skipped "
+                         f"(commit one to arm the gate)")
+            continue
+        if not new:
+            regressions.append(f"{key}: smoke run produced no P99 metrics")
+            continue
+        for name in sorted(base):
+            if name not in new:
+                regressions.append(f"{name}: present in baseline, missing "
+                                   f"from fresh run")
+                continue
+            old_v, new_v = base[name], new[name]
+            delta = new_v - old_v
+            rel = delta / old_v if old_v > 0 else float("inf")
+            line = (f"{name}: {old_v:.4f}s -> {new_v:.4f}s "
+                    f"({rel:+.1%}, {delta:+.4f}s)")
+            if delta > floor_s and rel > threshold:
+                regressions.append("REGRESSION " + line)
+            else:
+                notes.append("ok " + line)
+    return regressions, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--suites", nargs="+", default=DEFAULT_SUITES,
+                    help="benchmark suites to gate (default: trace)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative P99 increase that fails the gate")
+    ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR_S,
+                    help="absolute increase (s) below which the relative "
+                         "gate never trips")
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "BENCH_trajectory.json"),
+                    help="committed trajectory file to diff against")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"bench-regression: cannot read baseline "
+              f"{args.baseline}: {exc}")
+        return 1
+
+    with tempfile.TemporaryDirectory() as tmp:
+        traj_path = os.path.join(tmp, "trajectory.json")
+        run_smoke_suites(args.suites, traj_path)
+        with open(traj_path) as f:
+            fresh = json.load(f)
+
+    regressions, notes = compare(
+        baseline, fresh, args.suites, args.threshold, args.floor
+    )
+    for line in notes:
+        print(f"bench-regression: {line}")
+    for line in regressions:
+        print(f"bench-regression: {line}")
+    if regressions:
+        print(f"bench-regression: FAIL ({len(regressions)} problem(s), "
+              f"threshold {args.threshold:.0%}, floor {args.floor}s)")
+        return 1
+    print("bench-regression: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,12 +11,17 @@ Runs a small 5-worker paper-config sim with tracing ON and asserts
    decision's chosen worker is the candidate argmin;
 4. every job's critical-path latency breakdown sums to its measured
    JCT within 1e-6;
+5. the per-ring FIFO drop counters exported by the metrics registry
+   (``trace.emitted`` / ``trace.dropped``) agree with the recorder's own
+   ledger — zero drops at the default ring size, and a deliberately tiny
+   ring shows its drops in the export without touching determinism;
 
 and with tracing OFF that the hot event loop performs **zero**
-allocations attributable to ``core/telemetry.py`` (tracemalloc-filtered
-guard: the zero-overhead-when-off claim, structurally enforced because
-``Simulation._event_loop`` never calls into telemetry when
-``self._rec is None``).
+allocations attributable to ``core/telemetry.py`` or
+``core/healthplane.py`` (tracemalloc-filtered guard: the
+zero-overhead-when-off claim, structurally enforced because
+``Simulation._event_loop`` never calls into telemetry or the health
+monitor when ``self._rec is None`` / ``self._health is None``).
 
     PYTHONPATH=src python tools/trace_smoke.py
 """
@@ -31,7 +36,9 @@ import tracemalloc
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import ClusterSpec, ProfileRepository, SimReport, validate_schema
+from repro.core import healthplane as healthplane_mod
 from repro.core import telemetry as telemetry_mod
+from repro.core.telemetry import TraceConfig
 from repro.sim import Simulation, bursty_trace_workload
 from repro.workflows import MODELS, paper_dfgs
 
@@ -39,7 +46,7 @@ REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 DURATION_S = 30.0
 
 
-def build_sim(trace: bool) -> Simulation:
+def build_sim(trace) -> Simulation:
     cluster = ClusterSpec(n_workers=5)
     profiles = ProfileRepository(cluster, MODELS)
     for d in paper_dfgs():
@@ -105,12 +112,45 @@ def check_traced() -> None:
           f"(worst residual {worst:.2e})")
 
 
+def check_drop_counters() -> None:
+    """Satellite: per-ring FIFO drop counters in the metrics export must
+    mirror the recorder's own ledger — zero at the default capacity, and
+    visible (without breaking the run) when the ring is squeezed."""
+    res = build_sim(trace=True).run(workload())
+    stats = res.trace.ring_stats()
+    assert sum(d for _, d in stats.values()) == res.trace.dropped == 0
+    for ring, (emitted, dropped) in stats.items():
+        assert int(res.metrics.value("trace.emitted", ring=ring)) == emitted
+        assert int(res.metrics.value("trace.dropped", ring=ring)) == dropped
+
+    squeezed = build_sim(trace=TraceConfig(ring_capacity=64)).run(workload())
+    st2 = squeezed.trace.ring_stats()
+    emitted2 = sum(e for e, _ in st2.values())
+    dropped2 = sum(d for _, d in st2.values())
+    assert dropped2 == squeezed.trace.dropped > 0, (
+        f"64-event rings should overflow on this workload "
+        f"(dropped={dropped2}, ledger={squeezed.trace.dropped})"
+    )
+    assert int(squeezed.metrics.sum_values("trace.dropped")) == dropped2
+    assert int(squeezed.metrics.sum_values("trace.emitted")) == emitted2
+    rate = dropped2 / emitted2
+    assert 0.0 < rate < 1.0, f"drop rate {rate} out of range"
+    assert len(squeezed.records) == len(res.records), (
+        "ring overflow must not change the run itself"
+    )
+    print(f"trace-smoke: ring drop counters consistent "
+          f"(default: 0 drops; 64-slot rings: {dropped2}/{emitted2} "
+          f"= {rate:.1%} dropped, surfaced in metrics export)")
+
+
 def check_zero_alloc_off() -> None:
-    """Tracing OFF must add zero telemetry allocations to the event loop."""
+    """Tracing OFF must add zero telemetry/health allocations to the
+    event loop."""
     sim = build_sim(trace=False)
     jobs = workload()
     sim._schedule_initial(jobs)
     tel_file = telemetry_mod.__file__
+    health_file = healthplane_mod.__file__
     tracemalloc.start(25)
     try:
         before = tracemalloc.take_snapshot()
@@ -118,22 +158,24 @@ def check_zero_alloc_off() -> None:
         after = tracemalloc.take_snapshot()
     finally:
         tracemalloc.stop()
-    flt = [tracemalloc.Filter(True, tel_file)]
+    flt = [tracemalloc.Filter(True, tel_file),
+           tracemalloc.Filter(True, health_file)]
     stats = after.filter_traces(flt).compare_to(before.filter_traces(flt),
                                                 "lineno")
     leaked = [s for s in stats if s.size_diff > 0 or s.count_diff > 0]
     assert not leaked, (
-        "tracing-off event loop allocated in telemetry.py:\n"
+        "tracing-off event loop allocated in telemetry.py/healthplane.py:\n"
         + "\n".join(str(s) for s in leaked)
     )
     res = sim._assemble_result()
-    assert res.trace is None and len(res.records) > 0
-    print(f"trace-smoke: tracing-off event loop made 0 telemetry "
+    assert res.trace is None and res.health is None and len(res.records) > 0
+    print(f"trace-smoke: tracing-off event loop made 0 telemetry/health "
           f"allocations ({len(res.records)} jobs completed)")
 
 
 def main() -> None:
     check_traced()
+    check_drop_counters()
     check_zero_alloc_off()
     print("trace-smoke: OK")
 
