@@ -1,51 +1,158 @@
-"""Fig. 10: large-scale simulation — 40 req/s Poisson over up to 250
-workers; Navigator should reach its lower-bound slowdown with roughly
-half the workers Hash needs, leaving the rest idle."""
+"""Fleet-scale replay sweep (Fig. 10 + indexed-engine scaling).
+
+Two questions, one suite:
+
+* **Fig. 10** — 40 req/s Poisson over large fleets; Navigator should
+  reach its lower-bound slowdown with roughly half the workers Hash
+  needs, leaving the rest idle.
+* **Engine scaling** — the indexed event core's per-event cost must stay
+  flat as the fleet grows (the acceptance bar: within 2× from 50 to 500
+  workers).  Every sweep point replays the *same* binary trace file
+  (``repro.sim.tracefile``), so per-event costs are comparable across
+  fleet sizes; the trace is synthesized once per length and cached in
+  the results directory.
+
+Rows: ``scale/<sched>/w<N>_t<tasks>/per_event_us`` (wall-µs per event of
+the hot loop alone — schedule/assemble excluded), ``.../per_task_us``,
+``.../median_slowdown``, ``.../workers_used``, plus one
+``scale/flatness/t<tasks>/per_event_ratio`` cell per trace length
+(cost at the largest fleet ÷ cost at the smallest — the ≤ 2.0 bar).
+
+``--profile`` delegates to ``tools/profile_engine.py`` for a cProfile
+hotspot report of one replay instead of the sweep.
+
+Smoke mode (``REPRO_BENCH_SMOKE=1``) shrinks the grid to 50/100 workers
+× 10k/50k tasks — the CI scalability-smoke job stamps the 100-worker /
+50k-task per-event cell into ``BENCH_trajectory.json`` and
+``tools/bench_regression.py`` gates it.
+"""
 
 from __future__ import annotations
 
-from typing import List, Tuple
+import os
+import time
+from typing import Dict, List, Tuple
 
-from benchmarks.common import save_json
+from benchmarks.common import RESULTS_DIR, save_json
 from repro.core import ClusterSpec, ProfileRepository
-from repro.sim import Simulation, poisson_workload
+from repro.sim import Simulation
+from repro.sim.tracefile import load_jobs, synthesize_poisson_trace
 from repro.workflows import MODELS, paper_dfgs
 
-WORKER_COUNTS = [25, 50, 75, 100, 150, 250]
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+RATE_PER_S = 40.0          # Fig. 10 offered load
+TRACE_SEED = 5
+
+if SMOKE:
+    FLEETS = [50, 100]
+    LENGTHS = [10_000, 50_000]
+    HEADLINE: List[Tuple[int, int]] = []
+else:
+    FLEETS = [50, 100, 250, 500]
+    LENGTHS = [20_000, 100_000]
+    # The acceptance point: a 500-worker fleet over a 1M-task open-loop
+    # trace, in minutes.
+    HEADLINE = [(500, 1_000_000)]
+
+
+def _trace_path(n_tasks: int) -> str:
+    """Synthesize (once) and cache the open-loop trace of ``n_tasks``."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(
+        RESULTS_DIR,
+        f"scal_r{RATE_PER_S:g}_t{n_tasks}_s{TRACE_SEED}.ctrc",
+    )
+    if not os.path.exists(path):
+        synthesize_poisson_trace(
+            path, paper_dfgs(), RATE_PER_S, n_tasks, seed=TRACE_SEED
+        )
+    return path
+
+
+def _replay(n_workers: int, jobs, scheduler: str) -> Dict[str, float]:
+    """One timed replay; stage-split so the hot loop is timed alone."""
+    cluster = ClusterSpec(n_workers=n_workers)
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        profiles.register(d)
+    sim = Simulation(cluster, profiles, MODELS, scheduler=scheduler, seed=1)
+    sim._schedule_initial(jobs)
+    t0 = time.perf_counter()
+    sim._event_loop()
+    loop_s = time.perf_counter() - t0
+    res = sim._assemble_result()
+    n_tasks = sum(len(j.dfg.tasks) for j in jobs)
+    return {
+        "events": float(sim._events),
+        "loop_s": loop_s,
+        "per_event_us": loop_s / sim._events * 1e6,
+        "per_task_us": loop_s / n_tasks * 1e6,
+        "median_slowdown": res.median_slowdown,
+        "workers_used": float(len(res.workers_used)),
+        "hit": res.cache_hit_rate,
+    }
 
 
 def run() -> List[Tuple[str, float, float]]:
-    rows = []
-    out = {}
-    dfgs = paper_dfgs()
-    for n in WORKER_COUNTS:
-        cluster = ClusterSpec(n_workers=n)
-        out[n] = {}
+    rows: List[Tuple[str, float, float]] = []
+    out: Dict[str, Dict] = {}
+    grid = [(n, t) for t in LENGTHS for n in FLEETS] + HEADLINE
+    jobs_cache: Dict[int, list] = {}
+    per_event: Dict[Tuple[str, int, int], float] = {}
+    for n, n_tasks in grid:
+        if n_tasks not in jobs_cache:
+            cat = {d.name: d for d in paper_dfgs()}
+            jobs_cache[n_tasks] = load_jobs(_trace_path(n_tasks), cat)
+        jobs = jobs_cache[n_tasks]
         for sched in ["navigator", "hash"]:
-            profiles = ProfileRepository(cluster, MODELS)
-            for d in dfgs:
-                profiles.register(d)
-            jobs = poisson_workload(dfgs, 40.0, 120.0, seed=5)
-            res = Simulation(
-                cluster, profiles, MODELS, scheduler=sched, seed=1
-            ).run(jobs)
-            out[n][sched] = {
-                "median_slowdown": res.median_slowdown,
-                "workers_used": len(res.workers_used),
-                "hit": res.cache_hit_rate,
-            }
-            rows.append(
-                (f"scale/{sched}/w{n}_median_slowdown", 0.0,
-                 res.median_slowdown)
-            )
-            rows.append(
-                (f"scale/{sched}/w{n}_workers_used", 0.0,
-                 float(len(res.workers_used)))
-            )
+            if sched == "hash" and (n_tasks != LENGTHS[0] or (n, n_tasks) in HEADLINE):
+                continue  # Fig. 10 comparison rides the shortest trace only
+            m = _replay(n, jobs, sched)
+            key = f"{sched}/w{n}_t{n_tasks}"
+            out[key] = m
+            per_event[(sched, n, n_tasks)] = m["per_event_us"]
+            rows.append((f"scale/{key}/per_event_us",
+                         m["per_event_us"], m["per_event_us"]))
+            rows.append((f"scale/{key}/per_task_us",
+                         m["per_task_us"], m["per_task_us"]))
+            rows.append((f"scale/{key}/median_slowdown",
+                         0.0, m["median_slowdown"]))
+            rows.append((f"scale/{key}/workers_used",
+                         0.0, m["workers_used"]))
+    # Flatness bar: per-event cost growth across the fleet sweep.
+    for n_tasks in LENGTHS:
+        lo = per_event[("navigator", FLEETS[0], n_tasks)]
+        hi = per_event[("navigator", FLEETS[-1], n_tasks)]
+        ratio = hi / lo if lo > 0 else float("inf")
+        out[f"flatness/t{n_tasks}"] = {"per_event_ratio": ratio}
+        rows.append((f"scale/flatness/t{n_tasks}/per_event_ratio",
+                     0.0, ratio))
     save_json("scalability", out)
     return rows
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived:.4f}")
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile one replay instead of the sweep "
+                         "(tools/profile_engine.py)")
+    ap.add_argument("--workers", type=int, default=100)
+    ap.add_argument("--tasks", type=int, default=50_000)
+    ap.add_argument("--scheduler", default="navigator")
+    ap.add_argument("--engine", default="indexed",
+                    choices=["indexed", "reference"])
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    if args.profile:
+        from tools.profile_engine import profile_replay
+
+        profile_replay(
+            n_workers=args.workers, n_tasks=args.tasks,
+            scheduler=args.scheduler, engine=args.engine, top=args.top,
+        )
+    else:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived:.4f}")

@@ -29,7 +29,7 @@ SUITES = [
     "prefetch",        # predictive prefetch plane sweep
     "churn",           # worker churn / fault-tolerance sweep
     "topology",        # rack topology / oversubscription sweep
-    "scalability",     # Fig. 10
+    "scalability",     # Fig. 10 + indexed-engine fleet-scale replay
     "kernels",         # Pallas-kernel ref-path micro-benches
     "sst_microbench",  # gossip O(dirty-rows) + planner placement cost
 ]
@@ -48,10 +48,12 @@ def suite_key(suite: str) -> str:
     """Trajectory cell name for a suite under the current run mode."""
     return f"{suite}@smoke" if SMOKE else suite
 
-# Row-name fragments worth tracking across PRs (JCT percentiles + hit
-# rates, whatever the suite's exact naming scheme).
+# Row-name fragments worth tracking across PRs (JCT percentiles, hit
+# rates, and per-event replay costs, whatever the suite's exact naming
+# scheme).
 _TRACK = re.compile(
-    r"(p50|p95|p99|median|mean)_?(jct|latency|slowdown)|hit", re.IGNORECASE
+    r"(p50|p95|p99|median|mean)_?(jct|latency|slowdown)|hit|per_event",
+    re.IGNORECASE,
 )
 
 

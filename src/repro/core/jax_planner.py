@@ -22,10 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packed import PackedViews
 from repro.core.profiles import ProfileRepository
 from repro.core.scheduler import NavigatorConfig
 from repro.core.state import DEAD, SUSPECT
 from repro.core.types import ADFG, DFG, Job
+
+# (64,) shift vector for the vectorized bitmap → (W, 64) bool unpack.
+_BIT_SHIFTS = np.arange(64, dtype=np.uint64)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: cached per DFG
@@ -301,13 +305,36 @@ class JaxNavigatorPlanner:
             inv_bw, delta = topo.pair_matrices()
             self._xfer_inv_bw = jnp.asarray(inv_bw, jnp.float32)
             self._xfer_delta = jnp.asarray(delta, jnp.float32)
+        n = profiles.cluster.n_workers
+        # Static per-worker feasibility input, built once per planner.
+        self._gpu_capacity = jnp.asarray(
+            [profiles.cluster.gpu_capacity(w) for w in range(n)], jnp.float32
+        )
 
-    def plan(self, job: Job, now: float, origin_worker: int, sst) -> ADFG:
-        dfg = job.dfg
-        if dfg.name not in self._static:
-            self._static[dfg.name] = build_static_inputs(self.profiles, dfg)
-        static = self._static[dfg.name]
-        n = self.profiles.cluster.n_workers
+    def _pack_feed(self, sst, now: float, n: int):
+        """SST → kernel feed arrays.  A :class:`PackedViews` read (the
+        indexed engine's columnar path) is a handful of vector ops; a
+        scalar row list falls back to the per-row python unpack."""
+        if isinstance(sst, PackedViews):
+            one = np.uint64(1)
+            bits = ((sst.bitmap[:, None] >> _BIT_SHIFTS) & one) != 0
+            ibits = ((sst.intent[:, None] >> _BIT_SHIFTS) & one) != 0
+            fresh = (
+                np.maximum(0.0, now - sst.pushed_at)
+                <= self.config.intent_fresh_s
+            )
+            live = np.where(
+                sst.dead,
+                np.inf,
+                np.where(sst.suspect, self.config.suspect_penalty_s, 0.0),
+            ).astype(np.float32)
+            return (
+                bits, ibits, fresh, live,
+                sst.ft.astype(np.float32),
+                sst.avc.astype(np.float32),
+                sst.fetch_model.astype(np.int32),
+                sst.fetch_eta.astype(np.float32),
+            )
         bits = np.zeros((n, 64), bool)
         ibits = np.zeros((n, 64), bool)
         fresh = np.zeros((n,), bool)
@@ -323,30 +350,39 @@ class JaxNavigatorPlanner:
                 live[w] = np.inf
             elif row.liveness == SUSPECT:
                 live[w] = self.config.suspect_penalty_s
+        return (
+            bits, ibits, fresh, live,
+            np.asarray([r.ft_estimate_s for r in sst], np.float32),
+            np.asarray([r.free_cache_bytes for r in sst], np.float32),
+            np.asarray([r.fetch_model_id for r in sst], np.int32),
+            np.asarray([r.fetch_eta_s for r in sst], np.float32),
+        )
+
+    def plan(self, job: Job, now: float, origin_worker: int, sst) -> ADFG:
+        dfg = job.dfg
+        if dfg.name not in self._static:
+            self._static[dfg.name] = build_static_inputs(self.profiles, dfg)
+        static = self._static[dfg.name]
+        n = self.profiles.cluster.n_workers
+        (bits, ibits, fresh, live, ft0, avc0,
+         fetch_model, fetch_eta) = self._pack_feed(sst, now, n)
         out = plan_vectorized(
             static,
             self.config,
             n,
-            jnp.asarray([r.ft_estimate_s for r in sst], jnp.float32),
+            jnp.asarray(ft0),
             jnp.asarray(bits),
-            jnp.asarray([r.free_cache_bytes for r in sst], jnp.float32),
+            jnp.asarray(avc0),
             jnp.float32(now),
             jnp.int32(origin_worker),
             intent_bits=jnp.asarray(ibits),
             intent_fresh=jnp.asarray(fresh),
-            gpu_capacity=jnp.asarray(
-                [self.profiles.cluster.gpu_capacity(w) for w in range(n)],
-                jnp.float32,
-            ),
+            gpu_capacity=self._gpu_capacity,
             liveness_cost=jnp.asarray(live),
             xfer_inv_bw=self._xfer_inv_bw,
             xfer_delta=self._xfer_delta,
-            fetch_model=jnp.asarray(
-                [r.fetch_model_id for r in sst], jnp.int32
-            ),
-            fetch_eta=jnp.asarray(
-                [r.fetch_eta_s for r in sst], jnp.float32
-            ),
+            fetch_model=jnp.asarray(fetch_model),
+            fetch_eta=jnp.asarray(fetch_eta),
             return_components=self.recorder is not None,
         )
         assign, task_ft = out[0], out[1]

@@ -123,7 +123,15 @@ class Topology:
     def pair_matrices(self) -> Tuple[List[List[float]], List[List[float]]]:
         """(inverse-bandwidth, latency) matrices over worker pairs for the
         vectorized planner: ``time(src→dst) = nbytes * inv_bw[src][dst]
-        + delta[src][dst]`` (uncontended; diagonal is zero)."""
+        + delta[src][dst]`` (uncontended; diagonal is zero).
+
+        Pure function of the (frozen) topology, so the O(W²) build is
+        memoized on the instance — planners used to rebuild it on every
+        plan call.  Callers must treat the returned matrices as
+        read-only."""
+        cached = getattr(self, "_pair_matrices_cache", None)
+        if cached is not None:
+            return cached
         n = self.n_workers
         inv_bw = [[0.0] * n for _ in range(n)]
         delta = [[0.0] * n for _ in range(n)]
@@ -141,22 +149,30 @@ class Topology:
                     )
                     inv_bw[s][d] = 1.0 / bw
                     delta[s][d] = self.rack_link.delta_s + self.uplink.delta_s
+        # Frozen dataclass: stash the memo via object.__setattr__.
+        object.__setattr__(self, "_pair_matrices_cache", (inv_bw, delta))
         return inv_bw, delta
 
     def mean_path_factors(self) -> Tuple[float, float]:
         """Mean (inverse bandwidth, latency) over distinct worker pairs —
         the topology analogue of the flat table for static ranks (Eq. 1),
-        which price a representative transfer before placement is known."""
+        which price a representative transfer before placement is known.
+        Memoized alongside :meth:`pair_matrices`."""
+        cached = getattr(self, "_mean_factors_cache", None)
+        if cached is not None:
+            return cached
         inv_bw, delta = self.pair_matrices()
         n = self.n_workers
         if n < 2:
             return 1.0 / self.rack_link.bandwidth_bytes_per_s, \
                 self.rack_link.delta_s
         pairs = [(s, d) for s in range(n) for d in range(n) if s != d]
-        return (
+        out = (
             sum(inv_bw[s][d] for s, d in pairs) / len(pairs),
             sum(delta[s][d] for s, d in pairs) / len(pairs),
         )
+        object.__setattr__(self, "_mean_factors_cache", out)
+        return out
 
 
 class NetworkState:

@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.netmodel import ClusterSpec, LinkSpec, Topology
 from repro.core.types import DFG, GB, MLModel, TaskSpec
 
@@ -136,6 +138,13 @@ class ProfileRepository:
         self._dfgs: Dict[str, DFG] = {}
         self._ranks: Dict[str, Dict[str, float]] = {}
         self._mean_factors: Optional[Tuple[float, float]] = None
+        # Per-worker vector caches for the batched planners.  All derive
+        # from the frozen ClusterSpec, so they never invalidate.
+        n = cluster.n_workers
+        self._speed_vec = np.array([cluster.speed(w) for w in range(n)])
+        self._gpu_cap_vec = np.array([cluster.gpu_capacity(w) for w in range(n)])
+        self._fits_vec: Dict[Optional[int], np.ndarray] = {}
+        self._path_src_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
     # -- registration ---------------------------------------------------------
     def register(self, dfg: DFG) -> None:
@@ -225,6 +234,79 @@ class ProfileRepository:
             1.0 + self.cluster.compression_ratio
         )
         return footprint <= self.cluster.gpu_capacity(worker)
+
+    # -- per-worker vectors (batched planners / indexed engine) ---------------
+    # Each vector replays the scalar expression elementwise in float64, so
+    # every element is bit-identical to the corresponding scalar call — the
+    # contract the differential parity suite (chaos family 7) rests on.
+
+    def runtime_vec(self, task: TaskSpec) -> np.ndarray:
+        """R(t, ·) over the fleet — elementwise ``runtime(task, w)``.
+        Returns a fresh array."""
+        return task.runtime_s / self._speed_vec
+
+    def model_fits_vec(self, model_id: Optional[int]) -> np.ndarray:
+        """``model_fits(model_id, ·)`` as a cached bool vector.  Callers
+        must treat the returned array as read-only."""
+        out = self._fits_vec.get(model_id)
+        if out is None:
+            if model_id is None:
+                out = np.ones(self.cluster.n_workers, dtype=bool)
+            else:
+                footprint = self.models[model_id].size_bytes * (
+                    1.0 + self.cluster.compression_ratio
+                )
+                out = footprint <= self._gpu_cap_vec
+            self._fits_vec[model_id] = out
+        return out
+
+    def _path_factors(self, src: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(bottleneck bandwidth, crosses-uplink) vectors for ``src → ·``
+        paths of the configured topology (cached per source)."""
+        cached = self._path_src_cache.get(src)
+        if cached is None:
+            topo = self.cluster.topology
+            racks = np.asarray(topo.rack_of)
+            cross = racks != racks[src]
+            rack_bw = topo.rack_link.bandwidth_bytes_per_s
+            # Uncontended planner price: both crossed uplinks at share 1.0,
+            # so the bottleneck is min(rack link, uplink) — same fold as
+            # Topology.transfer_time with default shares.
+            bw = np.where(
+                cross,
+                min(rack_bw, topo.uplink.bandwidth_bytes_per_s),
+                rack_bw,
+            )
+            cached = (bw, cross)
+            self._path_src_cache[src] = cached
+        return cached
+
+    def path_time_vec(self, nbytes: float, src: int) -> np.ndarray:
+        """``cluster.path_transfer_time(nbytes, src, ·)`` over all
+        destinations as a fresh array.  Mirrors the scalar exactly,
+        including the flat model charging ``src == dst`` (callers zero
+        the diagonal wherever the scalar code path skips self-transfers)
+        and the topology model's zero diagonal."""
+        n = self.cluster.n_workers
+        topo = self.cluster.topology
+        if topo is None:
+            return np.full(n, self.cluster.network.transfer_time(nbytes))
+        if nbytes <= 0:
+            return np.zeros(n)
+        bw, cross = self._path_factors(src)
+        t = nbytes / bw
+        t = t + topo.rack_link.delta_s
+        t = np.where(cross, t + topo.uplink.delta_s, t)
+        t[src] = 0.0
+        return t
+
+    def td_input_vec(self, task: TaskSpec, src: int) -> np.ndarray:
+        """``td_input_to(task, src, ·)`` over all destinations."""
+        return self.path_time_vec(task.input_bytes, src)
+
+    def td_output_vec(self, task: TaskSpec, src: int) -> np.ndarray:
+        """``td_output_to(task, src, ·)`` over all destinations."""
+        return self.path_time_vec(task.output_bytes, src)
 
     # -- ranking (Eq. 1) ---------------------------------------------------------
     def _compute_ranks(self, dfg: DFG) -> Dict[str, float]:

@@ -25,9 +25,12 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.core import bitmaps
+from repro.core.packed import PackedViews
 from repro.core.profiles import ProfileRepository
 from repro.core.state import DEAD, SSTRow, SUSPECT
 from repro.core.telemetry import (
@@ -181,6 +184,16 @@ class Scheduler:
             return suspect_penalty_s
         return 0.0
 
+    def _liveness_cost_vec(
+        self, pv: PackedViews, suspect_penalty_s: float = 0.0
+    ) -> np.ndarray:
+        """Vector twin of :meth:`_liveness_cost` over a packed view."""
+        return np.where(
+            pv.dead,
+            float("inf"),
+            np.where(pv.suspect, suspect_penalty_s, 0.0),
+        )
+
 
 class NavigatorScheduler(Scheduler):
     name = "navigator"
@@ -247,6 +260,85 @@ class NavigatorScheduler(Scheduler):
         # Expected cost of re-fetching whichever resident model we displace.
         return sum(self.profiles.td_model(m) for m in resident) / len(resident)
 
+    # -- Eq. 2, batched -----------------------------------------------------------
+    # The packed twins below evaluate every candidate worker in one numpy
+    # expression instead of a python loop.  They replay the scalar
+    # arithmetic elementwise in float64 (same operations, same order, same
+    # precedence), so each element is bit-identical to the scalar call —
+    # the invariant the differential parity suite (chaos family 7) pins.
+
+    def _eviction_penalty_vec(
+        self, bitmap: np.ndarray, need: np.ndarray
+    ) -> np.ndarray:
+        """Eviction penalty for the workers selected by ``need``: mean
+        refetch cost of each worker's resident set, accumulated in
+        ascending model-id order (the ``bitmaps.unpack`` order), so the
+        float sum folds exactly like the scalar ``sum()``.  Adding 0.0 for
+        absent models is bit-exact (all partial sums are ≥ +0.0)."""
+        n = bitmap.shape[0]
+        if self.config.eviction_penalty_s is not None:
+            return np.full(n, self.config.eviction_penalty_s)
+        sel = bitmap[need]
+        union = int(np.bitwise_or.reduce(sel)) if sel.size else 0
+        acc = np.zeros(n)
+        cnt = np.zeros(n)
+        for m in bitmaps.unpack(union):
+            has = (bitmap & np.uint64(1 << m)) != 0
+            acc = acc + np.where(has, self.profiles.td_model(m), 0.0)
+            cnt = cnt + np.where(has, 1.0, 0.0)
+        out = np.zeros(n)
+        nz = cnt > 0
+        out[nz] = acc[nz] / cnt[nz]
+        return out
+
+    def _td_model_vec(
+        self,
+        task: TaskSpec,
+        bitmap: np.ndarray,
+        avc: np.ndarray,
+        intent: np.ndarray,
+        fresh: np.ndarray,
+        fetch_model: np.ndarray,
+        fetch_eta: np.ndarray,
+        start_hint: np.ndarray,
+    ) -> np.ndarray:
+        """(W,) twin of :meth:`_td_model` — same branch precedence (hit >
+        in-flight intent > queued intent > fits > eviction), expressed as
+        nested ``np.where`` applied innermost-first."""
+        n = bitmap.shape[0]
+        mid = task.model_id
+        if mid is None:
+            return np.zeros(n)
+        fetch = self.profiles.td_model(mid)
+        if not self.config.use_model_locality:
+            return np.full(n, fetch)
+        bit = np.uint64(1 << mid)
+        hit = (bitmap & bit) != 0
+        if self.config.intent_confidence > 0.0:
+            intent_ok = fresh & ((intent & bit) != 0)
+        else:
+            intent_ok = np.zeros(n, dtype=bool)
+        td = np.full(n, fetch)
+        need_evp = ~hit & ~intent_ok & ~(
+            self.profiles.cached_model_size(mid) <= avc
+        )
+        if np.any(need_evp):
+            td = np.where(
+                need_evp,
+                fetch + self._eviction_penalty_vec(bitmap, need_evp),
+                td,
+            )
+        td = np.where(
+            intent_ok, fetch * (1.0 - self.config.intent_confidence), td
+        )
+        inflight = intent_ok & (fetch_model == mid) & (fetch_eta > 0.0)
+        if np.any(inflight):
+            remaining = np.minimum(
+                fetch, np.maximum(0.0, fetch_eta - start_hint)
+            )
+            td = np.where(inflight, remaining, td)
+        return np.where(hit, 0.0, td)
+
     # -- Alg. 1 -------------------------------------------------------------------
     def plan(
         self,
@@ -255,6 +347,11 @@ class NavigatorScheduler(Scheduler):
         origin_worker: int,
         sst: Sequence[SSTRow],
     ) -> ADFG:
+        if isinstance(sst, PackedViews):
+            # Indexed engine hands packed columns; the batched path has no
+            # provenance recording, so the engine only does this with the
+            # flight recorder off.
+            return self._plan_packed(job, now, origin_worker, sst)
         dfg = job.dfg
         workers = list(self.cluster.workers())
         ft_map = self._ft_map(now, sst)                       # line 2
@@ -337,6 +434,114 @@ class NavigatorScheduler(Scheduler):
                         - self.profiles.cached_model_size(task.model_id),
                     )
         return adfg
+
+    def _plan_packed(
+        self, job: Job, now: float, origin_worker: int, pv: PackedViews
+    ) -> ADFG:
+        """Batched Alg. 1: per task, one vector evaluation of FT(t, ·)
+        over every candidate worker — the columnar replay of :meth:`plan`
+        (same arithmetic, same first-minimum tie-breaks, same speculative
+        cache updates), bit-exact with the scalar loop."""
+        dfg = job.dfg
+        cfg = self.config
+        inf = float("inf")
+        ft_map = np.maximum(now, pv.ft)                       # line 2
+        bitmap = pv.bitmap.copy()   # mutated by the speculative cache
+        avc = pv.avc.copy()
+        intent = pv.intent
+        fresh = np.maximum(0.0, now - pv.pushed_at) <= cfg.intent_fresh_s
+        live_cost = self._liveness_cost_vec(pv, cfg.suspect_penalty_s)
+        adfg = ADFG(job)
+        for tid in self.profiles.rank_order(dfg):             # lines 4-5
+            task = dfg.tasks[tid]
+            at = self._at_all_inputs_vec(job, tid, now, origin_worker, adfg)
+            x = np.maximum(ft_map, at)                        # line 8
+            td = self._td_model_vec(
+                task, bitmap, avc, intent, fresh,
+                pv.fetch_model, pv.fetch_eta, x,
+            )
+            fts = x + td + self.profiles.runtime_vec(task)    # line 9
+            # GPU can never host the model ⇒ ∞ (the scalar loop skips the
+            # worker before pricing it; the values it skipped are pure).
+            fts = np.where(
+                self.profiles.model_fits_vec(task.model_id), fts, inf
+            )
+            costs = fts + live_cost
+            argmin_w = int(np.argmin(costs))                  # line 10
+            best_w = self._herd_sticky_packed(
+                task.model_id, argmin_w, costs, bitmap, intent, fresh
+            )
+            best_ft = float(fts[best_w])
+            adfg[tid] = best_w                                # line 11
+            adfg.planned_ft[tid] = best_ft
+            ft_map[best_w] = best_ft                          # line 12
+            if cfg.speculative_cache and task.model_id is not None:
+                bit = np.uint64(1 << task.model_id)
+                if not bitmap[best_w] & bit:
+                    bitmap[best_w] = bitmap[best_w] | bit
+                    avc[best_w] = max(
+                        0.0,
+                        float(avc[best_w])
+                        - self.profiles.cached_model_size(task.model_id),
+                    )
+        return adfg
+
+    def _at_all_inputs_vec(
+        self,
+        job: Job,
+        task_id: str,
+        now: float,
+        origin_worker: int,
+        adfg: ADFG,
+    ) -> np.ndarray:
+        """(W,) twin of :meth:`_at_all_inputs`: Eq. 3-4 arrival times for
+        every candidate at once.  Zeroing the source column reproduces the
+        scalar's self-transfer skip (x + 0.0 is bit-exact for the
+        non-negative times involved)."""
+        dfg = job.dfg
+        preds = dfg.preds[task_id]
+        if not preds:
+            td = self.profiles.td_input_vec(dfg.tasks[task_id], origin_worker)
+            td[origin_worker] = 0.0
+            return now + td
+        at = np.zeros(self.cluster.n_workers)
+        for p in preds:
+            src = adfg[p]
+            td = self.profiles.td_output_vec(dfg.tasks[p], src)
+            td[src] = 0.0
+            at = np.maximum(at, adfg.planned_ft[p] + td)
+        return at
+
+    def _herd_sticky_packed(
+        self,
+        model_id: Optional[int],
+        best_w: int,
+        costs: np.ndarray,
+        bitmap: np.ndarray,
+        intent: np.ndarray,
+        fresh: np.ndarray,
+    ) -> int:
+        """Vector twin of :meth:`_herd_sticky_choice` (same holder set,
+        same first-minimum alternative, same margin comparison)."""
+        margin = self.config.intent_herd_margin
+        if (
+            model_id is None
+            or margin <= 0.0
+            or not self.config.use_model_locality
+        ):
+            return best_w
+        bit = np.uint64(1 << model_id)
+        holds = ((bitmap & bit) != 0) | (fresh & ((intent & bit) != 0))
+        if holds[best_w]:
+            return best_w
+        inf = float("inf")
+        holder_costs = np.where(holds & (costs != inf), costs, inf)
+        if not np.any(holder_costs != inf):
+            return best_w
+        alt = int(np.argmin(holder_costs))
+        if holder_costs[alt] <= costs[best_w] * (1.0 + margin):
+            return alt
+        return best_w
 
     def _herd_sticky_choice(
         self,
@@ -423,6 +628,11 @@ class NavigatorScheduler(Scheduler):
     ) -> int:
         if not self.config.use_dynamic_adjustment:
             return adfg[task_id]
+        if isinstance(sst, PackedViews):
+            # Indexed engine hands packed columns (flight recorder off).
+            return self._adjust_packed(
+                job, adfg, task_id, now, sst, current_worker, input_bytes
+            )
         dfg = job.dfg
         task = dfg.tasks[task_id]
         w_planned = adfg[task_id]                               # line 1
@@ -523,6 +733,67 @@ class NavigatorScheduler(Scheduler):
         if held:
             return w_planned
         return chosen                                           # lines 12-13
+
+    def _adjust_packed(
+        self,
+        job: Job,
+        adfg: ADFG,
+        task_id: str,
+        now: float,
+        pv: PackedViews,
+        current_worker: int,
+        input_bytes: float,
+    ) -> int:
+        """Batched Alg. 2: one vector evaluation of the adjustment
+        estimate over every candidate, bit-exact with :meth:`adjust`
+        (including the w_planned-first tie rule and the staleness-scaled
+        hysteresis margin)."""
+        dfg = job.dfg
+        task = dfg.tasks[task_id]
+        cfg = self.config
+        w_planned = adfg[task_id]                               # line 1
+        wait = max(0.0, float(pv.ft[w_planned]) - now)
+        above = wait > self.profiles.runtime(task, w_planned) * (
+            cfg.adjustment_threshold
+        )                                                       # line 2
+        if dfg.is_join(task_id) or not above:                   # lines 3-5
+            return w_planned
+        inf = float("inf")
+        ft_map = np.maximum(now, pv.ft)                         # line 6
+        live = self._liveness_cost_vec(pv, cfg.suspect_penalty_s)
+        fresh = np.maximum(0.0, now - pv.pushed_at) <= cfg.intent_fresh_s
+        td = self._td_model_vec(
+            task, pv.bitmap, pv.avc, pv.intent, fresh,
+            pv.fetch_model, pv.fetch_eta, ft_map,
+        )
+        est = ft_map + td + self.profiles.runtime_vec(task) + live
+        path = self.profiles.path_time_vec(input_bytes, current_worker)
+        path[current_worker] = 0.0                              # lines 10-11
+        est = est + path
+        # A DEAD row already prices to ∞ via `live`; unfit GPUs likewise.
+        est = np.where(
+            self.profiles.model_fits_vec(task.model_id), est, inf
+        )
+        # Scalar tie rule: the loop seeds best with w_planned, so it only
+        # moves off the plan when some worker is *strictly* cheaper.
+        m = float(est.min())
+        best_w = (
+            w_planned if float(est[w_planned]) == m else int(np.argmin(est))
+        )
+        best_ft = float(est[best_w])
+        planned_ft = float(est[w_planned])
+        margin = cfg.adjustment_margin
+        if (
+            best_w != w_planned
+            and best_w != current_worker
+            and cfg.staleness_margin_per_s > 0.0
+        ):
+            age = max(0.0, now - float(pv.pushed_at[best_w]))
+            margin += cfg.staleness_margin_per_s * age
+        held = best_w != w_planned and best_ft > planned_ft * (1.0 - margin)
+        if held:
+            return w_planned
+        return best_w                                           # lines 12-13
 
     # -- recovery targeting ------------------------------------------------------
     def select_recovery_worker(
@@ -633,6 +904,12 @@ class JITScheduler(Scheduler):
         input_sizes: Mapping[str, float],
         self_worker: Optional[int] = None,
     ) -> int:
+        if isinstance(sst, PackedViews):
+            # Indexed engine hands packed columns (flight recorder off).
+            return self._select_packed(
+                job, task_id, now, sst,
+                input_locations, input_sizes, self_worker,
+            )
         dfg = job.dfg
         task = dfg.tasks[task_id]
         ft_map = self._ft_map(now, sst)
@@ -679,6 +956,51 @@ class JITScheduler(Scheduler):
                 chosen=best_w, candidates=tuple(cands),
             ))
         return best_w
+
+    def _select_packed(
+        self,
+        job: Job,
+        task_id: str,
+        now: float,
+        pv: PackedViews,
+        input_locations: Mapping[str, int],
+        input_sizes: Mapping[str, float],
+        self_worker: Optional[int],
+    ) -> int:
+        """Batched JIT pick: one vector evaluation of the earliest-start
+        estimate, bit-exact with the scalar loop (skipped workers price
+        to ∞; ``np.argmin`` is the scalar's strict-< first minimum, and an
+        all-∞ row degenerates to worker 0 exactly like the scalar seed)."""
+        task = job.dfg.tasks[task_id]
+        n = pv.n_workers
+        ft_map = np.maximum(now, pv.ft)
+        td_in = np.zeros(n)
+        for src, loc in input_locations.items():
+            v = self.profiles.path_time_vec(input_sizes[src], loc)
+            v[loc] = 0.0
+            td_in = np.maximum(td_in, v)
+        if task.model_id is None:
+            td_model = np.zeros(n)
+        else:
+            bit = np.uint64(1 << task.model_id)
+            td_model = np.where(
+                (pv.bitmap & bit) != 0,
+                0.0,
+                self.profiles.td_model(task.model_id),
+            )
+        live = self._liveness_cost_vec(pv, self.suspect_penalty_s)
+        ft = (
+            np.maximum(ft_map, now + td_in)
+            + td_model
+            + self.profiles.runtime_vec(task)
+            + live
+        )
+        skip = ~self.profiles.model_fits_vec(task.model_id)
+        dead_skip = pv.dead.copy()
+        if self_worker is not None:
+            dead_skip[self_worker] = False
+        ft = np.where(skip | dead_skip, float("inf"), ft)
+        return int(np.argmin(ft))
 
 
 class HEFTScheduler(Scheduler):

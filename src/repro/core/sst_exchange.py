@@ -230,6 +230,14 @@ class GossipPlane:
         # Hard cap on retained log entries (strict memory bound even when
         # some peer is never contacted).
         self._max_log = max(64, 16 * n_workers)
+        # Columnar mirror of ``views`` for the packed read path
+        # (``view_arrays``): one (reader, owner)-indexed 2-D column per
+        # planner lane, kept in sync O(1) per merged row by _bump /
+        # deliver / push / join — exactly the rows those operations touch.
+        # Deferred import: packed.py imports this module's row types.
+        from repro.core.packed import ColumnStore
+
+        self._cols = ColumnStore((n_workers, n_workers))
         # Lazily-built full peer lists (broadcast fan-out only).
         self._all_peers: Dict[int, List[int]] = {}
         # Log length at which the next (O(n)) compaction check runs —
@@ -258,6 +266,7 @@ class GossipPlane:
         # Own view mirrors ground truth.
         self.views[worker][worker] = row.copy()
         self.versions[worker][worker] = row.version
+        self._cols.set_row((worker, worker), row)
 
     def update_load(
         self, worker: int, ft_estimate_s: float, now: float = 0.0
@@ -350,6 +359,7 @@ class GossipPlane:
         )
         self.views[worker] = [SSTRow() for _ in range(self.n_workers)]
         self.versions[worker] = [0] * self.n_workers
+        self._cols.reset_reader(worker)
         self._log[worker] = []
         self._log_base[worker] = 0
         self._cursor[worker] = [0] * self.n_workers
@@ -483,6 +493,7 @@ class GossipPlane:
             if (row.epoch, version) > (held.epoch, self.versions[worker][owner]):
                 self.versions[worker][owner] = version
                 self.views[worker][owner] = row.copy()
+                self._cols.set_row((worker, owner), row, version)
                 self._log[worker].append(owner)
 
     def _compact(self, worker: int) -> None:
@@ -530,6 +541,7 @@ class GossipPlane:
             if row.merge_key() > (held.epoch, self.versions[q][worker]):
                 self.versions[q][worker] = row.version
                 self.views[q][worker] = row.copy()
+                self._cols.set_row((q, worker), row)
 
     @property
     def messages_delivered(self) -> int:
@@ -562,6 +574,33 @@ class GossipPlane:
                     row, w == reader_worker, now
                 )
         return rows
+
+    def view_arrays(self, reader_worker: int, now: float):
+        """Columnar twin of :meth:`view` for the indexed engine: the
+        reader's replica set as packed ``(W,)`` arrays with vectorized
+        membership verdicts (incl. the never-heard-from ⇒ SUSPECT rule).
+        The own-row mirror maintained by ``_bump`` makes the reader's
+        slice already ground-truth-fresh, so this is pure column copies
+        — bit-identical values to the row-list path."""
+        from repro.core.packed import PackedViews, classify_columns
+
+        c = self._cols
+        dead, suspect = classify_columns(
+            self.lease, now, reader_worker,
+            c.heartbeat[reader_worker], c.draining[reader_worker],
+            version=c.version[reader_worker],
+        )
+        return PackedViews(
+            reader=reader_worker,
+            ft=c.ft[reader_worker].copy(),
+            bitmap=c.bitmap[reader_worker].copy(),
+            avc=c.avc[reader_worker].copy(),
+            pushed_at=c.pushed_at[reader_worker].copy(),
+            intent=c.intent[reader_worker].copy(),
+            fetch_model=c.fetch_model[reader_worker].copy(),
+            fetch_eta=c.fetch_eta[reader_worker].copy(),
+            dead=dead, suspect=suspect,
+        )
 
     def staleness(self, now: float, reader_worker: Optional[int] = None) -> float:
         """Max age (seconds) of any remote row in the reader's view;

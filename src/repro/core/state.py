@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import numpy as np
+
 # Membership states a *reader* assigns to a peer's row from its own view.
 # There is no oracle: two workers can (and under partitions/drops do)
 # disagree about whether a third is alive.
@@ -169,6 +171,13 @@ class SharedStateTable:
         # Open network partition: (worker -> group id, cut start time), or
         # None when fully connected.  See ``set_partition``.
         self._partition: Optional[tuple] = None
+        self._partition_groups: Optional[np.ndarray] = None
+        # Columnar mirror of ``published`` for the packed read path
+        # (``view_arrays``), kept in sync O(1) per push/join.  Deferred
+        # import: packed.py imports this module for the row types.
+        from repro.core.packed import ColumnStore
+
+        self._cols = ColumnStore(n_workers)
 
     # -- local updates (free, instantaneous) -------------------------------
     # ``now`` stamps the local row's modification time (the same signature
@@ -248,6 +257,7 @@ class SharedStateTable:
         fresh = SSTRow(heartbeat_s=now, pushed_at=now, epoch=old.epoch + 1)
         self.local[worker] = fresh
         self.published[worker] = fresh.copy()
+        self._cols.set_row(worker, fresh)
 
     # -- publication --------------------------------------------------------
     def push_load(self, worker: int, now: float) -> None:
@@ -263,6 +273,11 @@ class SharedStateTable:
         self.published[worker].health_fetch_util = self.local[worker].health_fetch_util
         self.published[worker].health_p99_latency_s = self.local[worker].health_p99_latency_s
         self.published[worker].pushed_at = now
+        pub, cols = self.published[worker], self._cols
+        cols.ft[worker] = pub.ft_estimate_s
+        cols.heartbeat[worker] = pub.heartbeat_s
+        cols.draining[worker] = pub.draining
+        cols.pushed_at[worker] = now
         self._pushes += 1
 
     def push_cache(self, worker: int, now: float) -> None:
@@ -275,6 +290,15 @@ class SharedStateTable:
         self.published[worker].draining = self.local[worker].draining
         self.published[worker].epoch = self.local[worker].epoch
         self.published[worker].pushed_at = now
+        pub, cols = self.published[worker], self._cols
+        cols.bitmap[worker] = pub.cache_bitmap
+        cols.avc[worker] = pub.free_cache_bytes
+        cols.intent[worker] = pub.intent_bitmap
+        cols.fetch_model[worker] = pub.fetch_model_id
+        cols.fetch_eta[worker] = pub.fetch_eta_s
+        cols.heartbeat[worker] = pub.heartbeat_s
+        cols.draining[worker] = pub.draining
+        cols.pushed_at[worker] = now
         self._pushes += 1
 
     def push(self, worker: int, now: float) -> None:
@@ -299,6 +323,9 @@ class SharedStateTable:
         the gossip plane's behaviour without per-reader row copies (the
         planner ignores the payload of SUSPECT/DEAD rows anyway)."""
         self._partition = None if group_of is None else (list(group_of), now)
+        self._partition_groups = (
+            None if group_of is None else np.asarray(group_of, dtype=np.int64)
+        )
 
     # -- reads ---------------------------------------------------------------
     def view(
@@ -332,3 +359,45 @@ class SharedStateTable:
                             hb = min(hb, cut_start)
                     row.liveness = self.lease.classify(max(0.0, now - hb))
         return rows
+
+    def view_arrays(self, reader_worker: int, now: float):
+        """Columnar twin of :meth:`view` for the indexed engine: the same
+        snapshot (own row fresh, peers last-published, per-reader lease
+        verdicts incl. the partition heartbeat clamp) as packed ``(W,)``
+        arrays.  A handful of numpy column copies instead of W python row
+        copies — the values are bit-identical to the row-list path."""
+        from repro.core.packed import PackedViews, classify_columns
+
+        c = self._cols
+        ft = c.ft.copy()
+        bitmap = c.bitmap.copy()
+        avc = c.avc.copy()
+        pushed = c.pushed_at.copy()
+        intent = c.intent.copy()
+        fetch_model = c.fetch_model.copy()
+        fetch_eta = c.fetch_eta.copy()
+        hb = c.heartbeat.copy()
+        draining = c.draining.copy()
+        loc = self.local[reader_worker]
+        ft[reader_worker] = loc.ft_estimate_s
+        bitmap[reader_worker] = loc.cache_bitmap
+        avc[reader_worker] = loc.free_cache_bytes
+        pushed[reader_worker] = loc.pushed_at
+        intent[reader_worker] = loc.intent_bitmap
+        fetch_model[reader_worker] = loc.fetch_model_id
+        fetch_eta[reader_worker] = loc.fetch_eta_s
+        hb[reader_worker] = loc.heartbeat_s
+        draining[reader_worker] = loc.draining
+        if self._partition is not None and self.lease is not None:
+            groups = self._partition_groups
+            cut_start = self._partition[1]
+            cross = groups != groups[reader_worker]
+            hb = np.where(cross, np.minimum(hb, cut_start), hb)
+        dead, suspect = classify_columns(
+            self.lease, now, reader_worker, hb, draining
+        )
+        return PackedViews(
+            reader=reader_worker, ft=ft, bitmap=bitmap, avc=avc,
+            pushed_at=pushed, intent=intent, fetch_model=fetch_model,
+            fetch_eta=fetch_eta, dead=dead, suspect=suspect,
+        )

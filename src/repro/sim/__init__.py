@@ -6,6 +6,13 @@ from repro.sim.churn import (
 )
 from repro.core.telemetry import SimReport, TraceConfig
 from repro.sim.engine import JobRecord, SimResult, Simulation
+from repro.sim.tracefile import (
+    TraceFormatError,
+    load_jobs,
+    synthesize_poisson_trace,
+    trace_task_count,
+    write_trace,
+)
 from repro.sim.workload import (
     arrival_rate_timeline,
     bursty_trace_workload,
@@ -21,12 +28,17 @@ __all__ = [
     "SimResult",
     "Simulation",
     "TraceConfig",
+    "TraceFormatError",
     "arrival_rate_timeline",
     "bursty_trace_workload",
     "churn_schedule",
     "fleet_scaled_rate",
     "fleet_workload",
+    "load_jobs",
     "partition_schedule",
     "poisson_workload",
+    "synthesize_poisson_trace",
+    "trace_task_count",
     "validate_schedule",
+    "write_trace",
 ]

@@ -28,6 +28,8 @@ import math
 import random
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple, Union
 
+import numpy as np
+
 from repro.core.healthplane import HealthConfig, HealthMonitor
 from repro.core.memory import GpuMemoryManager
 from repro.core.netmodel import ClusterSpec, NetworkState
@@ -338,7 +340,11 @@ class Simulation:
         health: Union[bool, HealthConfig] = False,
         runtime_noise_sigma: float = 0.25,
         seed: int = 0,
+        engine: str = "indexed",
     ) -> None:
+        if engine not in ("indexed", "reference"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
         self.cluster = cluster
         self.profiles = profiles
         self.models = dict(models)
@@ -367,6 +373,13 @@ class Simulation:
                 health if isinstance(health, HealthConfig) else None,
                 recorder=self._rec,
             )
+        # Indexed engine: planners read the SST as packed numpy columns
+        # (one O(W) column copy per read instead of W python row copies)
+        # and score all candidates in one vector pass — bit-exact with the
+        # scalar row path (chaos family 7).  The flight recorder needs
+        # per-candidate provenance only the scalar path records, so
+        # tracing forces the reference read path.
+        self._use_packed = engine == "indexed" and self._rec is None
         # Metadata plane: ``gossip`` selects the decentralized per-worker
         # view subsystem (each worker plans from its own, possibly stale,
         # replica); default is the single-published-snapshot table.
@@ -448,6 +461,11 @@ class Simulation:
         self._draining: List[bool] = [False for _ in cluster.workers()]
         self._session: List[int] = [0 for _ in cluster.workers()]
         self._open_jobs: List[_JobState] = []
+        # Amortized roster compaction: prune finished jobs once the list
+        # doubles past the last compacted size, so a churn-free 1M-job
+        # replay does not pin every finished _JobState for the whole run.
+        self._compact_open_at = 64
+        self._events = 0
         self._orphaned_intents: Dict[Tuple[int, str], PrefetchIntent] = {}
         self._completions: Dict[Tuple[int, str], int] = {}
         self._bounces = 0
@@ -513,6 +531,15 @@ class Simulation:
             return runtime
         return runtime * self.rng.lognormvariate(0.0, self.noise_sigma)
 
+    def _sst_view(self, reader: int):
+        """Planner-facing SST read: packed columns on the indexed engine,
+        the scalar row list otherwise.  Both planes keep a columnar mirror
+        maintained O(1) per dirty row, so the packed read is a handful of
+        numpy column copies rather than W python row copies."""
+        if self._use_packed:
+            return self.sst.view_arrays(reader, self._now)
+        return self.sst.view(reader, self._now)
+
     # -- public API ----------------------------------------------------------------
     def run(self, jobs: Sequence[Job]) -> SimResult:
         """Drive the simulation to completion.  Split into schedule /
@@ -558,6 +585,7 @@ class Simulation:
         while self._heap and self._jobs_open > 0:
             t, _, ev = heapq.heappop(self._heap)
             self._now = t
+            self._events += 1
             kind = ev[0]
             if self.event_log is not None:
                 self.event_log.append((round(t, 9), kind))
@@ -665,6 +693,7 @@ class Simulation:
         reg.counter("exec.lost_miss_attempts").inc(self._lost_miss_attempts)
         reg.counter("exec.demand_refetches").inc(self._demand_refetches)
         reg.gauge("sim.horizon_s").set(self._now)
+        reg.counter("sim.events").inc(self._events)
         reg.counter("sim.jobs_completed").inc(len(self._records))
         if self._rec is not None:
             # Per-ring FIFO drop counters (satellite of the health plane):
@@ -800,6 +829,11 @@ class Simulation:
         origin = live
         js = _JobState(job, origin)
         self._open_jobs.append(js)
+        if len(self._open_jobs) >= self._compact_open_at:
+            self._open_jobs = [
+                j for j in self._open_jobs if j.finish_time is None
+            ]
+            self._compact_open_at = max(64, 2 * len(self._open_jobs))
         if self._rec is not None:
             self._rec.emit(
                 self._now, "job.arrive", job=job.job_id,
@@ -807,7 +841,7 @@ class Simulation:
                 n_tasks=len(job.dfg.tasks),
             )
         adfg = self.scheduler.plan(
-            job, self._now, origin, self.sst.view(origin, self._now)
+            job, self._now, origin, self._sst_view(origin)
         )
         js.adfg = adfg
         if adfg is None:
@@ -870,7 +904,7 @@ class Simulation:
             js.job,
             task_id,
             self._now,
-            self.sst.view(reader, self._now),
+            self._sst_view(reader),
             input_locations,
             input_sizes,
             self_worker=reader,
@@ -1039,7 +1073,7 @@ class Simulation:
                         adfg,
                         succ,
                         self._now,
-                        self.sst.view(worker, self._now),
+                        self._sst_view(worker),
                         worker,
                         task.output_bytes,
                     )
@@ -1266,12 +1300,20 @@ class Simulation:
             return
         mem = self.memories[worker]
         peer_bits = 0
-        for w2, row in enumerate(self.sst.view(worker, self._now)):
+        if self._use_packed:
             # A peer this worker's view marks DEAD is no anti-herd
             # evidence: its frozen row may still advertise the model, but
             # nobody can be routed there.
-            if w2 != worker and row.liveness != DEAD:
-                peer_bits |= row.cache_bitmap | row.intent_bitmap
+            pv = self.sst.view_arrays(worker, self._now)
+            mask = ~pv.dead
+            mask[worker] = False
+            bits = pv.bitmap[mask] | pv.intent[mask]
+            if bits.size:
+                peer_bits = int(np.bitwise_or.reduce(bits))
+        else:
+            for w2, row in enumerate(self.sst.view(worker, self._now)):
+                if w2 != worker and row.liveness != DEAD:
+                    peer_bits |= row.cache_bitmap | row.intent_bitmap
         intent, retry_at = plane.next_intent(
             worker, self._now, mem.has, peer_bits
         )
@@ -1437,10 +1479,18 @@ class Simulation:
             self._post(self._now + 0.5, "bounce", js, tid, worker, gen)
             return
         self._bounces += 1
-        sst = self.sst.view(worker, self._now)
-        target = min(
-            feasible, key=lambda w: (max(self._now, sst[w].ft_estimate_s), w)
-        )
+        if self._use_packed:
+            ftcol = self.sst.view_arrays(worker, self._now).ft
+            target = min(
+                feasible,
+                key=lambda w: (max(self._now, float(ftcol[w])), w),
+            )
+        else:
+            sst = self.sst.view(worker, self._now)
+            target = min(
+                feasible,
+                key=lambda w: (max(self._now, sst[w].ft_estimate_s), w),
+            )
         run.bouncing = False
         self._queues[worker] = [
             (j, t) for j, t in self._queues[worker] if (j, t) != (js, tid)

@@ -35,6 +35,16 @@ The flight recorder (core/telemetry.py) adds the strongest oracle
    schedules alike.  Any scheduling, fetch, transfer, or recovery
    divergence shows up as the first differing line.
 
+The indexed event core (PR 7) adds the differential-replay family
+(``check_engine_parity``):
+
+7. **Engines agree bit-exactly** — the indexed engine (packed columnar
+   placement + O(dirty) bookkeeping) and the pre-refactor reference
+   engine produce the identical event stream, job records, and metrics
+   export on the same scenario — gossip and shared-table planes, with
+   and without churn, under partitions, and for the JIT scheduler.  The
+   performance rewrite is only allowed to move time, never behaviour.
+
 Run as a script for the CI chaos-smoke job (30 s seeded scenario across
 all schedulers, exits non-zero on any violation)::
 
@@ -110,6 +120,7 @@ def run_churn_sim(
     return_sim: bool = False,
     trace: bool = False,
     health: bool = False,
+    engine: str = "indexed",
 ):
     """Build and run one churn scenario; returns (result, jobs, schedule),
     plus the finished ``Simulation`` when ``return_sim`` is set (the
@@ -139,6 +150,7 @@ def run_churn_sim(
         seed=sim_seed,
         trace=trace,
         health=health,
+        engine=engine,
     )
     res = sim.run(jobs)
     if return_sim:
@@ -314,6 +326,37 @@ def check_trace_determinism(**kwargs) -> None:
         )
 
 
+def check_engine_parity(**kwargs) -> None:
+    """Family 7: the indexed event core is bit-exact with the reference
+    engine — identical event stream, per-job records, and metrics export
+    on the same scenario (kwargs are forwarded to ``run_churn_sim``)."""
+    import json
+
+    kwargs.pop("engine", None)
+    kwargs.pop("record_events", None)
+    kwargs.pop("return_sim", None)
+    a = run_churn_sim(engine="indexed", record_events=True, **kwargs)[0]
+    b = run_churn_sim(engine="reference", record_events=True, **kwargs)[0]
+    ea, eb = a.event_log, b.event_log
+    assert ea, "event log is empty"
+    if ea != eb:
+        for i, (la, lb) in enumerate(zip(ea, eb)):
+            if la != lb:
+                raise AssertionError(
+                    f"event stream diverged at #{i}: indexed {la!r} "
+                    f"vs reference {lb!r}"
+                )
+        raise AssertionError(
+            f"event counts differ: indexed {len(ea)} vs reference {len(eb)}"
+        )
+    ra = [(r.job_id, r.arrival, r.finish, r.lower_bound) for r in a.records]
+    rb = [(r.job_id, r.arrival, r.finish, r.lower_bound) for r in b.records]
+    assert ra == rb, "job records diverged between engines"
+    ma = json.dumps(a.metrics.export(), sort_keys=True)
+    mb = json.dumps(b.metrics.export(), sort_keys=True)
+    assert ma == mb, "metrics export diverged between engines"
+
+
 def main() -> int:
     """CI chaos-smoke: a 30 s seeded generated schedule plus the scripted
     crash/drain and partition scenarios, across every scheduler, on the
@@ -407,6 +450,37 @@ def main() -> int:
             failures += 1
             verdict = f"FAIL: {exc}"
         print(f"chaos-smoke trace-determinism {label:17s} {verdict}")
+    # Family 7: indexed-vs-reference differential replay — same event
+    # stream, records, and metrics on both metadata planes, with and
+    # without churn, under partitions, and for the JIT scheduler.
+    churn_sched = [e for e in SCRIPTED_SCHEDULE if e.time < duration]
+    parity_cases = [
+        ("gossip+churn", dict(
+            schedule=churn_sched, duration=duration,
+            prefetch=PrefetchConfig(),
+        )),
+        ("sst+churn", dict(
+            schedule=churn_sched, duration=duration, gossip=None,
+            prefetch=PrefetchConfig(),
+        )),
+        ("gossip+nochurn", dict(schedule=[], duration=duration)),
+        ("gossip+partition", dict(
+            schedule=scripted_partition_schedule(5), duration=duration,
+            prefetch=PrefetchConfig(),
+        )),
+        ("jit+churn", dict(
+            scheduler="jit", schedule=churn_sched, duration=duration,
+            prefetch=PrefetchConfig(),
+        )),
+    ]
+    for label, kwargs in parity_cases:
+        try:
+            check_engine_parity(**kwargs)
+            verdict = "ok"
+        except AssertionError as exc:
+            failures += 1
+            verdict = f"FAIL: {exc}"
+        print(f"chaos-smoke engine-parity {label:17s} {verdict}")
     return 1 if failures else 0
 
 

@@ -1,0 +1,305 @@
+"""Indexed event core: packed/scalar parity + binary trace files.
+
+The PR 7 perf rewrite is only allowed to move time, never behaviour, so
+every test here is differential: the packed columnar read path
+(``PackedViews`` via ``SharedStateTable.view_arrays``) must agree
+*bit-exactly* — same argmin winner, same planned finish times, same
+event stream — with the scalar row-list path it replaces, across
+randomized worker states, both metadata planes, flat and rack
+topologies, and the paper's config variants.  ``tests/chaos.py`` family
+7 runs the same differential under churn/partition schedules.
+"""
+
+import os
+import random
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    GB,
+    Job,
+    LeaseConfig,
+    NavigatorConfig,
+    NavigatorScheduler,
+    ProfileRepository,
+    SharedStateTable,
+    bitmaps,
+    fleet,
+)
+from repro.core.packed import PackedViews
+from repro.core.scheduler import JITScheduler
+from repro.sim import Simulation, poisson_workload
+from repro.sim.tracefile import (
+    TraceFormatError,
+    load_jobs,
+    read_header,
+    synthesize_poisson_trace,
+    trace_task_count,
+    write_trace,
+)
+from repro.workflows import MODELS, paper_dfgs
+
+MODEL_IDS = list(MODELS)
+
+#: The config variants the planner parity sweep exercises: default
+#: (computed eviction penalty), every Alg. 2 margin armed, intent plane
+#: neutered, speculation off with an aggressive herd margin.
+CONFIGS = [
+    NavigatorConfig(),
+    NavigatorConfig(
+        eviction_penalty_s=1.5, intent_herd_margin=0.15,
+        adjustment_margin=0.1, staleness_margin_per_s=0.02,
+    ),
+    NavigatorConfig(intent_confidence=0.0, use_model_locality=False),
+    NavigatorConfig(speculative_cache=False, intent_herd_margin=0.3),
+]
+
+
+def make_profiles(cluster):
+    p = ProfileRepository(cluster, MODELS)
+    for d in paper_dfgs():
+        p.register(d)
+    return p
+
+
+def random_sst(n, rng, now, lease=None):
+    """A randomized replicated state: mixed loads, caches, in-flight
+    fetches, intents, staleness, and (with a lease) membership states."""
+    sst = SharedStateTable(n, lease=lease)
+    for w in range(n):
+        pushed = now - rng.uniform(0.0, 8.0)
+        sst.update_load(w, max(0.0, now + rng.uniform(-2.0, 6.0)), pushed)
+        held = rng.sample(MODEL_IDS, rng.randint(0, 4))
+        fetch_model, fetch_eta = -1, 0.0
+        if rng.random() < 0.4:
+            fetch_model = rng.choice(MODEL_IDS)
+            fetch_eta = now + rng.uniform(0.1, 4.0)
+        sst.update_cache(
+            w, bitmaps.pack(held), rng.uniform(0.0, 16.0) * GB,
+            pushed, fetch_model, fetch_eta,
+        )
+        if rng.random() < 0.5:
+            sst.update_intent(
+                w, bitmaps.pack(rng.sample(MODEL_IDS, rng.randint(1, 3))),
+                pushed,
+            )
+        sst.heartbeat(w, now - rng.uniform(0.0, 6.0))
+        if lease is not None and rng.random() < 0.1:
+            sst.set_draining(w, True, now)
+        sst.push(w, pushed)
+    return sst
+
+
+def clusters():
+    return [ClusterSpec(n_workers=5), fleet("rack2")]
+
+
+def test_plan_packed_matches_scalar():
+    """Alg. 1 over packed columns: same per-task winner and planned FT."""
+    rng = random.Random(42)
+    dfgs = paper_dfgs()
+    for cluster in clusters():
+        profiles = make_profiles(cluster)
+        n = cluster.n_workers
+        for trial in range(60):
+            cfg = CONFIGS[trial % len(CONFIGS)]
+            sched = NavigatorScheduler(profiles, cfg)
+            now = rng.uniform(0.0, 50.0)
+            lease = LeaseConfig() if trial % 3 == 0 else None
+            sst = random_sst(n, rng, now, lease)
+            origin = rng.randrange(n)
+            job = Job(trial, rng.choice(dfgs), arrival_time=now)
+            a = sched.plan(job, now, origin, sst.view(origin, now))
+            pv = sst.view_arrays(origin, now)
+            assert isinstance(pv, PackedViews)
+            b = sched.plan(job, now, origin, pv)
+            assert dict(a.items()) == dict(b.items()), (
+                f"trial {trial}: assignment diverged"
+            )
+            assert a.planned_ft == b.planned_ft, (
+                f"trial {trial}: planned FT diverged"
+            )
+
+
+def test_adjust_packed_matches_scalar():
+    """Alg. 2 over packed columns: same keep/steal verdict."""
+    rng = random.Random(7)
+    dfgs = paper_dfgs()
+    for cluster in clusters():
+        profiles = make_profiles(cluster)
+        n = cluster.n_workers
+        for trial in range(60):
+            cfg = CONFIGS[trial % len(CONFIGS)]
+            sched = NavigatorScheduler(profiles, cfg)
+            now = rng.uniform(0.0, 50.0)
+            lease = LeaseConfig() if trial % 3 == 1 else None
+            sst = random_sst(n, rng, now, lease)
+            origin = rng.randrange(n)
+            job = Job(trial, rng.choice(dfgs), arrival_time=now)
+            adfg = sched.plan(job, now, origin, sst.view(origin, now))
+            current = rng.randrange(n)
+            nbytes = rng.uniform(0.0, 0.5) * GB
+            for tid in job.dfg.tasks:
+                a = sched.adjust(
+                    job, adfg, tid, now, sst.view(current, now),
+                    current, nbytes,
+                )
+                b = sched.adjust(
+                    job, adfg, tid, now, sst.view_arrays(current, now),
+                    current, nbytes,
+                )
+                assert a == b, f"trial {trial} task {tid}: {a} != {b}"
+
+
+def test_jit_select_packed_matches_scalar():
+    rng = random.Random(21)
+    dfgs = paper_dfgs()
+    for cluster in clusters():
+        profiles = make_profiles(cluster)
+        n = cluster.n_workers
+        sched = JITScheduler(profiles)
+        for trial in range(60):
+            now = rng.uniform(0.0, 50.0)
+            lease = LeaseConfig() if trial % 2 == 0 else None
+            sst = random_sst(n, rng, now, lease)
+            job = Job(trial, rng.choice(dfgs), arrival_time=now)
+            self_w = rng.randrange(n)
+            for tid, task in job.dfg.tasks.items():
+                locs = {p: rng.randrange(n) for p in job.dfg.preds[tid]}
+                sizes = {p: rng.uniform(0.0, 0.2) * GB for p in locs}
+                a = sched.select_worker_at_ready(
+                    job, tid, now, sst.view(self_w, now),
+                    locs, sizes, self_w,
+                )
+                b = sched.select_worker_at_ready(
+                    job, tid, now, sst.view_arrays(self_w, now),
+                    locs, sizes, self_w,
+                )
+                assert a == b, f"trial {trial} task {tid}: {a} != {b}"
+
+
+def test_view_arrays_matches_view():
+    """The columnar snapshot carries the same values and lease verdicts
+    as the row-list snapshot it twins."""
+    rng = random.Random(3)
+    for lease in (None, LeaseConfig()):
+        sst = random_sst(6, rng, 20.0, lease)
+        rows = sst.view(2, 20.0)
+        pv = sst.view_arrays(2, 20.0)
+        ref = PackedViews.from_rows(rows, reader=2)
+        for col in ("ft", "avc", "pushed_at", "fetch_eta"):
+            assert getattr(pv, col).tolist() == getattr(ref, col).tolist()
+        for col in ("bitmap", "intent", "fetch_model", "dead", "suspect"):
+            assert getattr(pv, col).tolist() == getattr(ref, col).tolist()
+
+
+@pytest.mark.parametrize("scheduler", ["navigator", "jit"])
+@pytest.mark.parametrize("plane", ["sst", "gossip"])
+def test_full_sim_engine_parity(scheduler, plane):
+    """Indexed vs reference engine on a seeded workload: identical event
+    stream, job records, and metrics export."""
+    import json
+
+    from repro.core import GossipConfig
+
+    cluster = ClusterSpec(n_workers=5)
+    dfgs = paper_dfgs()
+    jobs = poisson_workload(dfgs, 1.5, 40.0, seed=9)
+
+    def run(engine):
+        profiles = make_profiles(cluster)
+        sim = Simulation(
+            cluster, profiles, MODELS, scheduler=scheduler, seed=1,
+            gossip=GossipConfig(period_s=0.2, fanout=2)
+            if plane == "gossip" else None,
+            lease=LeaseConfig() if plane == "gossip" else None,
+            record_events=True, engine=engine,
+        )
+        return sim.run(jobs)
+
+    a, b = run("indexed"), run("reference")
+    assert a.event_log == b.event_log
+    assert [
+        (r.job_id, r.arrival, r.finish, r.lower_bound) for r in a.records
+    ] == [
+        (r.job_id, r.arrival, r.finish, r.lower_bound) for r in b.records
+    ]
+    assert json.dumps(a.metrics.export(), sort_keys=True) == json.dumps(
+        b.metrics.export(), sort_keys=True
+    )
+
+
+def test_engine_rejects_unknown_name():
+    cluster = ClusterSpec(n_workers=3)
+    with pytest.raises(ValueError):
+        Simulation(cluster, make_profiles(cluster), MODELS, engine="turbo")
+
+
+# -- binary trace files ------------------------------------------------------
+
+
+def test_tracefile_roundtrip(tmp_path):
+    path = os.fspath(tmp_path / "t.ctrc")
+    dfgs = paper_dfgs()
+    cat = {d.name: d for d in dfgs}
+    recs = [(0.5, 0), (1.25, 2), (3.0, 1), (3.0, 3)]
+    n = write_trace(path, [d.name for d in dfgs], recs)
+    assert n == 4
+    version, names, n_jobs = read_header(path)
+    assert (version, n_jobs) == (1, 4)
+    assert names == [d.name for d in dfgs]
+    jobs = load_jobs(path, cat)
+    assert [(j.arrival_time, j.dfg.name) for j in jobs] == [
+        (t, names[i]) for t, i in recs
+    ]
+    assert [j.job_id for j in jobs] == [0, 1, 2, 3]
+    assert trace_task_count(path, cat) == sum(
+        len(cat[names[i]].tasks) for _, i in recs
+    )
+    # limit= replays a strict prefix (same job ids, same arrivals).
+    head = load_jobs(path, cat, limit=2)
+    assert [(j.job_id, j.arrival_time) for j in head] == [
+        (j.job_id, j.arrival_time) for j in jobs[:2]
+    ]
+
+
+def test_synthesize_poisson_trace_deterministic(tmp_path):
+    dfgs = paper_dfgs()
+    pa, pb = os.fspath(tmp_path / "a.ctrc"), os.fspath(tmp_path / "b.ctrc")
+    na = synthesize_poisson_trace(pa, dfgs, 20.0, 2000, seed=5)
+    nb = synthesize_poisson_trace(pb, dfgs, 20.0, 2000, seed=5)
+    assert na == nb
+    with open(pa, "rb") as fa, open(pb, "rb") as fb:
+        assert fa.read() == fb.read()
+    cat = {d.name: d for d in dfgs}
+    assert trace_task_count(pa, cat) >= 2000
+    jobs = load_jobs(pa, cat)
+    assert len(jobs) == na
+    arrivals = [j.arrival_time for j in jobs]
+    assert arrivals == sorted(arrivals)
+
+
+def test_tracefile_format_errors(tmp_path):
+    path = os.fspath(tmp_path / "t.ctrc")
+    write_trace(path, ["a"], [(1.0, 0)])
+    raw = open(path, "rb").read()
+    bad_magic = os.fspath(tmp_path / "m.ctrc")
+    with open(bad_magic, "wb") as f:
+        f.write(b"XXXX" + raw[4:])
+    with pytest.raises(TraceFormatError):
+        read_header(bad_magic)
+    bad_version = os.fspath(tmp_path / "v.ctrc")
+    with open(bad_version, "wb") as f:
+        f.write(raw[:4] + b"\x63\x00" + raw[6:])
+    with pytest.raises(TraceFormatError):
+        read_header(bad_version)
+    truncated = os.fspath(tmp_path / "s.ctrc")
+    with open(truncated, "wb") as f:
+        f.write(raw[:-4])
+    with pytest.raises(TraceFormatError):
+        load_jobs(truncated, {"a": paper_dfgs()[0]})
+    with pytest.raises(TraceFormatError):
+        load_jobs(path, {"other": paper_dfgs()[0]})
+    with pytest.raises(ValueError):
+        write_trace(os.fspath(tmp_path / "r.ctrc"), ["a"], [(1.0, 3)])

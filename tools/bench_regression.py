@@ -12,7 +12,14 @@ P99 metric in the fresh ``<suite>@smoke`` cells against the committed
 * any P99 latency metric regresses by more than ``--threshold``
   (default 15%) relative AND more than ``--floor`` (default 50 ms)
   absolute — the floor keeps sub-100 ms metrics from tripping the
-  relative gate on noise.
+  relative gate on noise, or
+* any per-event replay-cost metric (``per_event_us`` rows from the
+  scalability suite) regresses by more than ``--event-threshold``
+  (default 50%) relative AND more than ``--event-floor`` (default
+  2 µs) absolute.  Per-event costs are wall-clock (machine-sensitive),
+  so this gate is deliberately looser than the latency gate — it exists
+  to catch the event core sliding back toward O(n) rescans, not 10%
+  jitter.
 
 Suites without a committed ``@smoke`` baseline cell are reported and
 skipped (the first run that lands a baseline arms the gate).  Smoke
@@ -36,6 +43,8 @@ REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DEFAULT_SUITES = ["trace"]
 DEFAULT_THRESHOLD = 0.15
 DEFAULT_FLOOR_S = 0.05
+DEFAULT_EVENT_THRESHOLD = 0.50
+DEFAULT_EVENT_FLOOR_US = 2.0
 
 
 def run_smoke_suites(suites: List[str], traj_path: str) -> None:
@@ -69,12 +78,53 @@ def p99_metrics(cell: Optional[dict]) -> Dict[str, float]:
     }
 
 
+def per_event_metrics(cell: Optional[dict]) -> Dict[str, float]:
+    """The per-event replay-cost rows of one trajectory cell (µs)."""
+    if not cell:
+        return {}
+    return {
+        name: float(v)
+        for name, v in cell.get("metrics", {}).items()
+        if "per_event_us" in name.lower()
+    }
+
+
+def _diff_family(
+    family: str,
+    base: Dict[str, float],
+    new: Dict[str, float],
+    threshold: float,
+    floor: float,
+    unit: str,
+    regressions: List[str],
+    notes: List[str],
+) -> None:
+    """Diff one metric family; a regression needs BOTH the relative
+    threshold and the absolute floor exceeded."""
+    for name in sorted(base):
+        if name not in new:
+            regressions.append(f"{name}: present in baseline, missing "
+                               f"from fresh run")
+            continue
+        old_v, new_v = base[name], new[name]
+        delta = new_v - old_v
+        rel = delta / old_v if old_v > 0 else float("inf")
+        line = (f"{name}: {old_v:.4f}{unit} -> {new_v:.4f}{unit} "
+                f"({rel:+.1%}, {delta:+.4f}{unit})")
+        if delta > floor and rel > threshold:
+            regressions.append(f"REGRESSION [{family}] " + line)
+        else:
+            notes.append("ok " + line)
+
+
 def compare(
     baseline: dict,
     fresh: dict,
     suites: List[str],
     threshold: float,
     floor_s: float,
+    event_threshold: float = DEFAULT_EVENT_THRESHOLD,
+    event_floor_us: float = DEFAULT_EVENT_FLOOR_US,
 ) -> Tuple[List[str], List[str]]:
     """Diff fresh ``@smoke`` cells against the committed ones; returns
     (regressions, notes)."""
@@ -90,29 +140,27 @@ def compare(
     notes: List[str] = []
     for suite in suites:
         key = f"{suite}@smoke"
-        base = p99_metrics(baseline.get("suites", {}).get(key))
-        new = p99_metrics(fresh.get("suites", {}).get(key))
-        if not base:
+        base_cell = baseline.get("suites", {}).get(key)
+        new_cell = fresh.get("suites", {}).get(key)
+        base_p99 = p99_metrics(base_cell)
+        base_ev = per_event_metrics(base_cell)
+        if not base_p99 and not base_ev:
             notes.append(f"{key}: no committed baseline cell — skipped "
                          f"(commit one to arm the gate)")
             continue
-        if not new:
+        new_p99 = p99_metrics(new_cell)
+        new_ev = per_event_metrics(new_cell)
+        if base_p99 and not new_p99:
             regressions.append(f"{key}: smoke run produced no P99 metrics")
-            continue
-        for name in sorted(base):
-            if name not in new:
-                regressions.append(f"{name}: present in baseline, missing "
-                                   f"from fresh run")
-                continue
-            old_v, new_v = base[name], new[name]
-            delta = new_v - old_v
-            rel = delta / old_v if old_v > 0 else float("inf")
-            line = (f"{name}: {old_v:.4f}s -> {new_v:.4f}s "
-                    f"({rel:+.1%}, {delta:+.4f}s)")
-            if delta > floor_s and rel > threshold:
-                regressions.append("REGRESSION " + line)
-            else:
-                notes.append("ok " + line)
+        elif base_p99:
+            _diff_family("p99", base_p99, new_p99, threshold, floor_s,
+                         "s", regressions, notes)
+        if base_ev and not new_ev:
+            regressions.append(f"{key}: smoke run produced no per-event "
+                               f"metrics")
+        elif base_ev:
+            _diff_family("per-event", base_ev, new_ev, event_threshold,
+                         event_floor_us, "us", regressions, notes)
     return regressions, notes
 
 
@@ -125,6 +173,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR_S,
                     help="absolute increase (s) below which the relative "
                          "gate never trips")
+    ap.add_argument("--event-threshold", type=float,
+                    default=DEFAULT_EVENT_THRESHOLD,
+                    help="relative per-event-cost increase that fails "
+                         "the gate")
+    ap.add_argument("--event-floor", type=float,
+                    default=DEFAULT_EVENT_FLOOR_US,
+                    help="absolute per-event increase (µs) below which "
+                         "the relative gate never trips")
     ap.add_argument("--baseline",
                     default=os.path.join(REPO, "BENCH_trajectory.json"),
                     help="committed trajectory file to diff against")
@@ -145,7 +201,9 @@ def main(argv: Optional[List[str]] = None) -> int:
             fresh = json.load(f)
 
     regressions, notes = compare(
-        baseline, fresh, args.suites, args.threshold, args.floor
+        baseline, fresh, args.suites, args.threshold, args.floor,
+        event_threshold=args.event_threshold,
+        event_floor_us=args.event_floor,
     )
     for line in notes:
         print(f"bench-regression: {line}")

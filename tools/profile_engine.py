@@ -1,0 +1,102 @@
+"""cProfile harness for the replay hot loop (satellite of the indexed
+event core).
+
+Profiles one fleet-scale open-loop replay — trace synthesis, job load,
+and initial scheduling are excluded so the report shows the event loop
+alone.  Invoke directly or via ``python -m benchmarks.bench_scalability
+--profile``:
+
+    PYTHONPATH=src python tools/profile_engine.py --workers 100 \
+        --tasks 50000 --engine indexed --top 25
+
+Comparing ``--engine indexed`` against ``--engine reference`` shows
+where the O(dirty) bookkeeping and packed batch placement moved the
+time: the reference profile is dominated by per-row ``view()``
+materialization and scalar per-candidate cost loops; the indexed profile
+by the vectorized ``_td_model_vec`` / ``_eviction_penalty_vec`` kernels.
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import os
+import pstats
+import sys
+import tempfile
+import time
+
+
+def profile_replay(
+    n_workers: int = 100,
+    n_tasks: int = 50_000,
+    rate_per_s: float = 40.0,
+    scheduler: str = "navigator",
+    engine: str = "indexed",
+    seed: int = 5,
+    top: int = 25,
+    sort: str = "cumulative",
+    stream=None,
+) -> pstats.Stats:
+    """Replay a synthesized trace under cProfile; print the top-N report."""
+    from repro.core import ClusterSpec, ProfileRepository
+    from repro.sim import Simulation
+    from repro.sim.tracefile import load_jobs, synthesize_poisson_trace
+    from repro.workflows import MODELS, paper_dfgs
+
+    stream = stream or sys.stdout
+    dfgs = paper_dfgs()
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "profile.ctrc")
+        synthesize_poisson_trace(path, dfgs, rate_per_s, n_tasks, seed=seed)
+        jobs = load_jobs(path, {d.name: d for d in dfgs})
+    cluster = ClusterSpec(n_workers=n_workers)
+    profiles = ProfileRepository(cluster, MODELS)
+    for d in dfgs:
+        profiles.register(d)
+    sim = Simulation(
+        cluster, profiles, MODELS, scheduler=scheduler, seed=1, engine=engine
+    )
+    sim._schedule_initial(jobs)
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    sim._event_loop()
+    prof.disable()
+    wall = time.perf_counter() - t0
+    sim._assemble_result()
+    print(
+        f"engine={engine} scheduler={scheduler} workers={n_workers} "
+        f"tasks={n_tasks}: {sim._events} events in {wall:.2f}s "
+        f"({wall / sim._events * 1e6:.2f} us/event)",
+        file=stream,
+    )
+    stats = pstats.Stats(prof, stream=stream)
+    stats.sort_stats(sort).print_stats(top)
+    return stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--workers", type=int, default=100)
+    ap.add_argument("--tasks", type=int, default=50_000)
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--scheduler", default="navigator")
+    ap.add_argument("--engine", default="indexed",
+                    choices=["indexed", "reference"])
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--sort", default="cumulative",
+                    choices=["cumulative", "tottime", "ncalls"])
+    args = ap.parse_args(argv)
+    profile_replay(
+        n_workers=args.workers, n_tasks=args.tasks, rate_per_s=args.rate,
+        scheduler=args.scheduler, engine=args.engine, seed=args.seed,
+        top=args.top, sort=args.sort,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    raise SystemExit(main())
